@@ -1,0 +1,59 @@
+"""Beyond-paper benchmarks: multi-ball (paper Sec 4.3, sketched-not-built),
+kernelized RBF StreamSVM (Sec 4.2), and distributed stream sharding.
+
+    PYTHONPATH=src python -m benchmarks.beyond
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import fit, fit_kernelized, rbf_kernel
+from repro.core.kernelized import decision_function as kdec
+from repro.core.multiball import decision_function as mb_dec, fit_multiball
+from repro.data import load_dataset, preprocess_for
+
+
+def circles(n=4000, seed=0):
+    rng = np.random.default_rng(seed)
+    r_in = rng.uniform(0.0, 1.0, n // 2)
+    r_out = rng.uniform(1.5, 2.5, n // 2)
+    th = rng.uniform(0, 2 * np.pi, n)
+    r = np.concatenate([r_in, r_out])
+    X = np.stack([r * np.cos(th), r * np.sin(th)], 1).astype(np.float32)
+    y = np.concatenate([np.ones(n // 2), -np.ones(n // 2)]).astype(np.float32)
+    idx = rng.permutation(n)
+    return X[idx][: 3 * n // 4], y[idx][: 3 * n // 4], X[idx][3 * n // 4 :], y[idx][3 * n // 4 :]
+
+
+def run():
+    rows = []
+    # multi-ball vs Algorithm 1 (single pass each)
+    Xtr, ytr, Xte, yte = load_dataset("mnist89")
+    Xtr, Xte = preprocess_for("mnist89", Xtr, Xte)
+    Xj, yj = jnp.asarray(Xtr), jnp.asarray(ytr)
+    acc = lambda s: float(np.mean(np.sign(np.asarray(s)) == yte)) * 100
+    b1 = fit(Xj, yj, 10.0)
+    rows.append(("multiball_L1_algo1", acc(Xte @ np.asarray(b1.w)), "acc% mnist89"))
+    for L in (2, 4, 8):
+        mb = fit_multiball(Xj, yj, 10.0, n_balls=L)
+        rows.append((f"multiball_L{L}", acc(mb_dec(mb, jnp.asarray(Xte))), "acc% mnist89"))
+
+    # kernelized RBF one-pass on a nonlinearly separable stream
+    Xtr, ytr, Xte2, yte2 = circles()
+    acc2 = lambda s: float(np.mean(np.sign(np.asarray(s)) == yte2)) * 100
+    b = fit(jnp.asarray(Xtr), jnp.asarray(ytr), 10.0)
+    rows.append(("circles_linear_algo1", acc2(Xte2 @ np.asarray(b.w)), "acc%"))
+    kb = fit_kernelized(jnp.asarray(Xtr), jnp.asarray(ytr), 10.0, kernel_fn=rbf_kernel(0.5))
+    sc = kdec(kb, jnp.asarray(Xtr), jnp.asarray(Xte2), kernel_fn=rbf_kernel(0.5))
+    rows.append(("circles_rbf_onepass", acc2(sc), f"acc% (m={int(kb.m)})"))
+    return rows
+
+
+def main():
+    for name, val, unit in run():
+        print(f"{name},{val:.2f},{unit}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Fig 3: accuracy mean/std vs lookahead L over random stream orders.
+
+Validates both of the paper's observations: accuracy rises with L, and the
+std across stream orderings shrinks (robustness to bad orders). The paper
+used 100 permutations of MNIST 8vs9; runs are configurable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fit, fit_lookahead
+from repro.data import load_dataset, preprocess_for
+from repro.data.stream import permuted
+
+
+def run(dataset="mnist89", C=10.0, Ls=(1, 2, 5, 10, 20, 50), runs=20, seed=0):
+    Xtr, ytr, Xte, yte = load_dataset(dataset, seed=seed)
+    Xtr, Xte = preprocess_for(dataset, Xtr, Xte)
+    rows = []
+    for L in Ls:
+        accs = []
+        for r in range(runs):
+            Xp, yp = permuted(Xtr, ytr, seed=seed * 7777 + r)
+            Xpj, ypj = jnp.asarray(Xp), jnp.asarray(yp)
+            if L <= 1:
+                ball = fit(Xpj, ypj, C)
+            else:
+                ball = fit_lookahead(Xpj, ypj, C, int(L))
+            accs.append(
+                float(np.mean(np.sign(Xte @ np.asarray(ball.w)) == yte)) * 100
+            )
+        rows.append(
+            {"L": L, "mean": float(np.mean(accs)), "std": float(np.std(accs)),
+             "n_sv": int(ball.m)}
+        )
+    return rows
+
+
+def main():
+    print("L,acc_mean,acc_std,n_sv")
+    for r in run():
+        print(f'{r["L"]},{r["mean"]:.2f},{r["std"]:.3f},{r["n_sv"]}')
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Render EXPERIMENTS.md tables (dry-run matrix + roofline) from artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report [--dir results/dryrun]
+
+Prints markdown; EXPERIMENTS.md embeds the output.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config, list_archs
+from benchmarks.roofline import analyze
+
+
+def dryrun_table(results_dir: str, mesh: str):
+    print(f"\n### Dry-run matrix — mesh `{mesh}` "
+          f"({256 if mesh == 'single' else 512} chips)\n")
+    print("| arch | shape | status | compile (s) | args GB/dev | temp GB/dev"
+          " (f32-inflated) | HLO collective bytes (per-iter lower bound) |")
+    print("|---|---|---|---|---|---|---|")
+    for arch in list_archs():
+        for sname in SHAPES:
+            p = Path(results_dir) / f"{arch}__{sname}__{mesh}.json"
+            if not p.exists():
+                print(f"| {arch} | {sname} | MISSING | | | | |")
+                continue
+            r = json.loads(p.read_text())
+            if r["status"] == "SKIP":
+                print(f"| {arch} | {sname} | SKIP | | | | {r['reason'][:50]} |")
+                continue
+            cb = r.get("collective_bytes", {})
+            cbs = " ".join(
+                f"{k.split('-')[-1][:3].upper()}={v/1e6:.0f}M"
+                for k, v in cb.items() if v
+            ) or "–"
+            print(
+                f"| {arch} | {sname} | {r['status']} | {r.get('compile_s','')} "
+                f"| {r.get('argument_size_in_bytes',0)/1e9:.2f} "
+                f"| {r.get('temp_size_in_bytes',0)/1e9:.2f} | {cbs} |"
+            )
+
+
+def roofline_table(results_dir: str):
+    print("\n### Roofline (single-pod, 256 chips; terms in seconds/step)\n")
+    print("| arch | shape | dominant | t_compute | t_memory | t_collective |"
+          " frac (comp/sum) | 6ND/total-FLOPs |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in analyze(results_dir):
+        if r["status"] == "SKIP":
+            print(f"| {r['arch']} | {r['shape']} | SKIP | | | | | |")
+            continue
+        print(
+            f"| {r['arch']} | {r['shape']} | **{r['dominant']}** "
+            f"| {r['t_compute_s']:.4g} | {r['t_memory_s']:.4g} "
+            f"| {r['t_collective_s']:.4g} | {r['roofline_frac']:.3f} "
+            f"| {r['useful_ratio']:.3f} |"
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    dryrun_table(args.dir, "single")
+    dryrun_table(args.dir, "multi")
+    roofline_table(args.dir)
+
+
+if __name__ == "__main__":
+    main()

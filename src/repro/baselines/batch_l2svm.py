@@ -1,0 +1,58 @@
+"""Full-batch l2-SVM — the paper's "libSVM (batch)" reference column.
+
+Solves exactly the primal the paper states (eq. 1-2, unbiased):
+
+    min_w  ||w||^2 + C sum_i max(0, 1 - y_i w.x_i)^2
+
+The objective is smooth (squared hinge) and strongly convex, so full-batch
+Nesterov gradient descent with a Lipschitz-based step converges to high
+precision; no QP library is required. All data in memory, many passes —
+deliberately NOT a streaming algorithm (it is the accuracy ceiling).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def fit_batch_l2svm(X: jax.Array, y: jax.Array, c: float, iters: int = 2000):
+    """Returns (w, objective). Nesterov accelerated GD, fixed L-based step."""
+    N, D = X.shape
+    c = jnp.asarray(c, X.dtype)
+
+    def obj_grad(w):
+        margin = 1.0 - y * (X @ w)
+        act = jnp.maximum(margin, 0.0)
+        obj = w @ w + c * jnp.sum(act**2)
+        grad = 2.0 * w - 2.0 * c * ((act * y) @ X)
+        return obj, grad
+
+    # Lipschitz constant of the gradient: 2 + 2 C lambda_max(X^T X)
+    # power iteration for lambda_max
+    def power(v, _):
+        v = X.T @ (X @ v)
+        return v / jnp.maximum(jnp.linalg.norm(v), 1e-12), None
+
+    v0 = jnp.ones(D, X.dtype) / jnp.sqrt(D)
+    v, _ = jax.lax.scan(power, v0, None, length=50)
+    lam_max = jnp.linalg.norm(X.T @ (X @ v))
+    L = 2.0 + 2.0 * c * lam_max
+    step = 1.0 / L
+
+    def body(carry, _):
+        w, z, t = carry
+        _, gz = obj_grad(z)
+        w_next = z - step * gz
+        t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        z_next = w_next + ((t - 1.0) / t_next) * (w_next - w)
+        return (w_next, z_next, t_next), None
+
+    w0 = jnp.zeros(D, X.dtype)
+    (w, _, _), _ = jax.lax.scan(
+        body, (w0, w0, jnp.asarray(1.0, X.dtype)), None, length=iters
+    )
+    obj, _ = obj_grad(w)
+    return w, obj

@@ -1,0 +1,90 @@
+"""CVM (Tsang et al. 2005) — batch core-set MEB SVM in the augmented space.
+
+Badoiu-Clarkson core-set outer loop: each iteration scans the WHOLE dataset
+for the farthest augmented point from the current center (= one data pass,
+Fig 2's x-axis), adds it to the core set, and re-solves the core-set MEB.
+Stops at (1+eps) enclosure or max_passes.
+
+The core-set MEB is solved in explicit (D + |core|)-dim coordinates (each
+core point owns one slack dimension) with Frank-Wolfe/BC iterations — the
+same solver family CVM uses. Records the weight vector after every pass so
+benchmarks/fig2 can plot accuracy-vs-passes against one StreamSVM pass.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _solve_core_meb(P: np.ndarray, c_inv: float, iters: int = 2000):
+    """MEB of core rows P (m, D) with per-point slack sqrt(c_inv)e_i.
+
+    Returns (u (D,), sigma (m,), r). Explicit BC in D+m dims.
+    """
+    m, D = P.shape
+    root = np.sqrt(c_inv)
+    u = P.mean(axis=0)
+    sigma = np.full(m, root / m)
+    for t in range(1, iters + 1):
+        d2 = (
+            np.einsum("md,md->m", P - u, P - u)
+            + np.sum(sigma**2)
+            - 2.0 * root * sigma
+            + c_inv
+        )
+        f = int(np.argmax(d2))
+        eta = 1.0 / (t + 1.0)
+        u += eta * (P[f] - u)
+        sigma *= 1.0 - eta
+        sigma[f] += eta * root
+    d2 = (
+        np.einsum("md,md->m", P - u, P - u)
+        + np.sum(sigma**2)
+        - 2.0 * root * sigma
+        + c_inv
+    )
+    return u, sigma, float(np.sqrt(max(d2.max(), 0.0)))
+
+
+def fit_cvm(
+    X: np.ndarray,
+    y: np.ndarray,
+    C: float,
+    eps: float = 1e-3,
+    max_passes: int = 64,
+    solver_iters: int = 2000,
+):
+    """Returns dict(w, r, core_idx, passes, w_per_pass)."""
+    X = np.asarray(X, np.float64)
+    y = np.asarray(y, np.float64)
+    YX = y[:, None] * X
+    N, D = X.shape
+    c_inv = 1.0 / C
+
+    core = [0]
+    u, sigma, r = YX[0].copy(), np.array([np.sqrt(c_inv)]), 0.0
+    w_per_pass = []
+    passes = 0
+    sig_map = np.zeros(N)
+    sig_map[0] = sigma[0]
+
+    for _ in range(max_passes):
+        # one full data pass: farthest augmented point from current center
+        d2_all = (
+            np.einsum("nd,nd->n", YX - u, YX - u)
+            + np.sum(sigma**2)
+            - 2.0 * np.sqrt(c_inv) * sig_map
+            + c_inv
+        )
+        passes += 1
+        w_per_pass.append(u.copy())
+        f = int(np.argmax(d2_all))
+        d_far = np.sqrt(max(d2_all[f], 0.0))
+        if d_far <= (1.0 + eps) * r:
+            break
+        if f not in core:
+            core.append(f)
+        u, sigma, r = _solve_core_meb(YX[np.array(core)], c_inv, iters=solver_iters)
+        sig_map = np.zeros(N)
+        sig_map[np.array(core)] = sigma
+
+    return dict(w=u, r=r, core_idx=np.array(core), passes=passes, w_per_pass=w_per_pass)

@@ -1,0 +1,101 @@
+"""LASVM (Bordes et al. 2005) — online SMO, linear kernel, single pass.
+
+Faithful-in-spirit re-implementation for the unbiased linear C-SVM:
+each new example triggers PROCESS (try to add it with one SMO direction
+step) followed by one REPROCESS (one SMO step on the max tau-violating pair
+among current support vectors), exactly the single-pass regime the paper
+benchmarks. Uses y-signed alphas with box A_i = min(0, C y_i),
+B_i = max(0, C y_i) and dual gradients g_i = y_i - w.x_i (linear kernel keeps
+w = sum_i alpha_i x_i explicit, so every step is O(|S| D)).
+
+numpy, sequential — this is a baseline for accuracy comparison, not a
+production path.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_TAU = 1e-8
+
+
+def fit_lasvm(X: np.ndarray, y: np.ndarray, C: float, return_bias: bool = False):
+    """Single pass. Returns (w, n_support) or (w, b, n_support).
+
+    The bias is recovered KKT-style after the pass: b = median over on-margin
+    support vectors (0 < |alpha| < C) of (y_i - w.x_i). Real LASVM solves the
+    biased SVM; without b, heavily imbalanced non-centered data (w3a) tilts
+    toward the minority class.
+    """
+    X = np.asarray(X, np.float64)
+    y = np.asarray(y, np.float64)
+    N, D = X.shape
+
+    w = np.zeros(D)
+    S: list[int] = []  # indices of support candidates
+    alpha = np.zeros(N)
+    knorm = np.einsum("nd,nd->n", X, X)
+
+    def g(i):
+        return y[i] - X[i] @ w
+
+    def smo_step(i, j):
+        nonlocal w
+        Kii, Kjj, Kij = knorm[i], knorm[j], X[i] @ X[j]
+        denom = max(Kii + Kjj - 2.0 * Kij, 1e-12)
+        lam = (g(i) - g(j)) / denom
+        Bi = max(0.0, C * y[i])
+        Aj = min(0.0, C * y[j])
+        lam = min(lam, Bi - alpha[i], alpha[j] - Aj)
+        if lam <= 0.0:
+            return False
+        alpha[i] += lam
+        alpha[j] -= lam
+        w += lam * (X[i] - X[j])
+        return True
+
+    def violating_extremes():
+        if not S:
+            return None, None
+        Sv = np.array(S)
+        gs = y[Sv] - X[Sv] @ w
+        Bs = np.maximum(0.0, C * y[Sv])
+        As = np.minimum(0.0, C * y[Sv])
+        up = Sv[alpha[Sv] < Bs - 1e-12]
+        dn = Sv[alpha[Sv] > As + 1e-12]
+        if len(up) == 0 or len(dn) == 0:
+            return None, None
+        gu = y[up] - X[up] @ w
+        gd = y[dn] - X[dn] @ w
+        return int(up[np.argmax(gu)]), int(dn[np.argmin(gd)])
+
+    for k in range(N):
+        # PROCESS(k)
+        if k not in S:
+            S.append(k)
+            if y[k] > 0:
+                i, j = k, None
+                _, j = violating_extremes()
+            else:
+                j, i = k, None
+                i, _ = violating_extremes()
+            if i is not None and j is not None and i != j:
+                if g(i) - g(j) > _TAU:
+                    smo_step(i, j)
+        # REPROCESS: one step on the max violating pair
+        i, j = violating_extremes()
+        if i is not None and j is not None and i != j and (g(i) - g(j)) > _TAU:
+            smo_step(i, j)
+        # prune non-support (alpha == 0) to keep |S| small, LASVM-style
+        if len(S) > 64 and k % 32 == 0:
+            S = [s for s in S if abs(alpha[s]) > 1e-12 or s == k]
+
+    n_sv = int(np.sum(np.abs(alpha) > 1e-12))
+    if not return_bias:
+        return w, n_sv
+    on_margin = (np.abs(alpha) > 1e-9) & (np.abs(alpha) < C - 1e-9)
+    if on_margin.any():
+        b = float(np.median(y[on_margin] - X[on_margin] @ w))
+    else:
+        sv = np.abs(alpha) > 1e-12
+        b = float(np.median(y[sv] - X[sv] @ w)) if sv.any() else 0.0
+    return w, b, n_sv

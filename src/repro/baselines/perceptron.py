@@ -1,0 +1,21 @@
+"""Rosenblatt perceptron, single pass, unbiased (matches paper setup)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def fit_perceptron(X: jax.Array, y: jax.Array):
+    """Returns (w, n_updates). X: (N, D), y: (N,) ±1."""
+
+    def body(carry, xy):
+        w, m = carry
+        x, yn = xy
+        mistake = yn * (w @ x) <= 0.0
+        w = jnp.where(mistake, w + yn * x, w)
+        return (w, m + mistake.astype(jnp.int32)), None
+
+    w0 = jnp.zeros(X.shape[1], X.dtype)
+    (w, m), _ = jax.lax.scan(body, (w0, jnp.asarray(0, jnp.int32)), (X, y))
+    return w, m

@@ -1,0 +1,7 @@
+from .base import ArchConfig, MoECfg, SSMCfg, get_config, list_archs
+from .shapes import SHAPES, SMOKE_SHAPES, ShapeSpec, applicable, cells
+
+__all__ = [
+    "ArchConfig", "MoECfg", "SSMCfg", "get_config", "list_archs",
+    "SHAPES", "SMOKE_SHAPES", "ShapeSpec", "applicable", "cells",
+]

@@ -1,0 +1,48 @@
+"""Core StreamSVM library — the paper's contribution as composable JAX modules."""
+from .meb import Ball, make_ball, merge_balls, fold_merge, point_distance, center_distance
+from .streamsvm import (
+    StreamCheckpoint,
+    accuracy,
+    decision_function,
+    fit,
+    fit_ball,
+    fit_chunked,
+    fit_lookahead,
+    fit_lookahead_ball,
+    init_ball,
+    predict,
+)
+from .qp import solve_meb_ball_points
+from .kernelized import KernelBall, fit_kernelized, linear_kernel, rbf_kernel, linear_weights
+from .distributed import fit_sharded
+from .multiball import MultiBall, fit_multiball, to_single_ball
+from .multiclass import fit_ovr, predict_ovr, fit_c_grid
+
+__all__ = [
+    "Ball",
+    "KernelBall",
+    "StreamCheckpoint",
+    "accuracy",
+    "center_distance",
+    "decision_function",
+    "fit",
+    "fit_ball",
+    "fit_c_grid",
+    "fit_chunked",
+    "fit_kernelized",
+    "fit_lookahead",
+    "fit_lookahead_ball",
+    "fit_ovr",
+    "fit_sharded",
+    "fold_merge",
+    "init_ball",
+    "linear_kernel",
+    "linear_weights",
+    "make_ball",
+    "merge_balls",
+    "point_distance",
+    "predict",
+    "predict_ovr",
+    "rbf_kernel",
+    "solve_meb_ball_points",
+]

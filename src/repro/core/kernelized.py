@@ -1,0 +1,98 @@
+"""Kernelized StreamSVM (paper Sec 4.2).
+
+Maintains the N-vector of Lagrange coefficients alpha (the center is
+c = sum_m alpha_m phi(x_m)); per-example work is O(n) kernel evaluations.
+This gives up the constant-memory property (as the paper notes) but keeps the
+single pass. For the linear kernel it is algebraically identical to
+Algorithm 1 — property-tested via w = X^T alpha.
+
+Kernels must satisfy K(x,x) = kappa (constant); linear assumes normalized
+inputs only for the theory — the algorithm itself runs regardless.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class KernelBall(NamedTuple):
+    alpha: jax.Array  # (N,) signed coefficients (include label sign)
+    q: jax.Array  # () running |c|^2 = alpha^T K alpha
+    r: jax.Array  # () radius
+    xi2: jax.Array  # () slack-block squared norm
+    m: jax.Array  # () int32 core-vector count
+
+
+def linear_kernel(A, B):
+    return A @ B.T
+
+
+def rbf_kernel(gamma):
+    def k(A, B):
+        a2 = jnp.sum(A * A, -1)[:, None]
+        b2 = jnp.sum(B * B, -1)[None, :]
+        return jnp.exp(-gamma * (a2 + b2 - 2.0 * A @ B.T))
+
+    return k
+
+
+@partial(jax.jit, static_argnames=("kernel_fn", "variant"))
+def fit_kernelized(
+    X: jax.Array,
+    y: jax.Array,
+    c: float,
+    kernel_fn: Callable = linear_kernel,
+    variant: str = "exact",
+) -> KernelBall:
+    """Single pass; scan over examples; O(N) per step via full kernel rows.
+
+    alpha is zero for unseen examples, so g_n = sum_m alpha_m k(x_m, x_n)
+    computed against the whole row is exact at step n.
+    """
+    N, _ = X.shape
+    c_inv = jnp.asarray(1.0 / c, X.dtype)
+    slack_gain = c_inv if variant == "exact" else jnp.asarray(1.0, X.dtype)
+
+    kdiag = jax.vmap(lambda v: kernel_fn(v[None, :], v[None, :])[0, 0])(X)
+
+    alpha0 = jnp.zeros((N,), X.dtype).at[0].set(y[0])
+    state0 = KernelBall(
+        alpha=alpha0,
+        q=kdiag[0],
+        r=jnp.asarray(0.0, X.dtype),
+        xi2=(c_inv if variant == "exact" else jnp.asarray(1.0, X.dtype)),
+        m=jnp.asarray(1, jnp.int32),
+    )
+
+    def body(st: KernelBall, n):
+        xn = X[n]
+        yn = y[n]
+        kn = kernel_fn(X, xn[None, :])[:, 0]  # (N,)
+        g = jnp.dot(st.alpha, kn)  # <c, phi(x_n)>
+        d2 = st.q - 2.0 * yn * g + kdiag[n] + st.xi2 + c_inv
+        d = jnp.sqrt(jnp.maximum(d2, 1e-12))
+        upd = d >= st.r
+        s = 0.5 * (1.0 - st.r / d)
+        alpha = st.alpha * (1.0 - s)
+        alpha = alpha.at[n].add(s * yn)
+        q = (1.0 - s) ** 2 * st.q + 2.0 * s * (1.0 - s) * yn * g + s**2 * kdiag[n]
+        r = st.r + 0.5 * (d - st.r)
+        xi2 = st.xi2 * (1.0 - s) ** 2 + s**2 * slack_gain
+        new = KernelBall(alpha=alpha, q=q, r=r, xi2=xi2, m=st.m + 1)
+        st = jax.tree.map(lambda a, b: jnp.where(upd, a, b), new, st)
+        return st, upd
+
+    state, _ = jax.lax.scan(body, state0, jnp.arange(1, N))
+    return state
+
+
+def decision_function(kb: KernelBall, X_train, X_test, kernel_fn: Callable = linear_kernel):
+    return kernel_fn(X_test, X_train) @ kb.alpha
+
+
+def linear_weights(kb: KernelBall, X_train) -> jax.Array:
+    """For the linear kernel, c = X^T alpha — must equal Algorithm 1's w."""
+    return X_train.T @ kb.alpha

@@ -1,0 +1,126 @@
+"""Ball algebra for the augmented-space MEB that underlies the l2-SVM.
+
+A ``Ball`` is the streaming state of StreamSVM: the center of the minimum
+enclosing ball in the augmented feature space ``phi~(z_n) = [y_n x_n ;
+C^{-1/2} e_n]`` is ``[w ; sigma]`` where ``sigma`` is the slack block. Because
+every example contributes a fresh orthogonal slack direction and is seen only
+once, ``sigma`` never needs to be stored: its squared norm ``xi2`` suffices
+for every distance computation the algorithm performs (paper, Sec. 4.1).
+
+All functions are branch-free (jnp.where) so they jit/vmap/scan cleanly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+class Ball(NamedTuple):
+    """Streaming MEB state == StreamSVM classifier state.
+
+    w:   (D,) feature block of the ball center == SVM weight vector.
+    r:   () radius.
+    xi2: () squared norm of the slack block of the center.
+    m:   () int32 — number of core vectors absorbed (paper's M).
+    """
+
+    w: jax.Array
+    r: jax.Array
+    xi2: jax.Array
+    m: jax.Array
+
+    @property
+    def dim(self) -> int:
+        return self.w.shape[-1]
+
+
+def make_ball(w, r=0.0, xi2=0.0, m=1) -> Ball:
+    w = jnp.asarray(w)
+    dt = w.dtype
+    return Ball(
+        w=w,
+        r=jnp.asarray(r, dt),
+        xi2=jnp.asarray(xi2, dt),
+        m=jnp.asarray(m, jnp.int32),
+    )
+
+
+def center_distance(b1: Ball, b2: Ball) -> jax.Array:
+    """Distance between two ball centers in the augmented space.
+
+    Valid when the two balls were built from disjoint example sets (always
+    true for stream shards): their slack blocks are orthogonal, so
+    ``|c1-c2|^2 = |w1-w2|^2 + xi1^2 + xi2^2``.
+    """
+    d2 = jnp.sum((b1.w - b2.w) ** 2) + b1.xi2 + b2.xi2
+    return jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+def point_distance(ball: Ball, yx: jax.Array, c_inv) -> jax.Array:
+    """Distance from the ball center to augmented point [y x ; C^{-1/2} e_new].
+
+    ``yx`` is the label-signed feature row y*x; ``c_inv`` is 1/C. The point's
+    slack direction is fresh, hence the ``+ xi2 + 1/C`` closed form
+    (Algorithm 1, line 5).
+    """
+    d2 = jnp.sum((ball.w - yx) ** 2) + ball.xi2 + c_inv
+    return jnp.sqrt(jnp.maximum(d2, _EPS))
+
+
+def enclose_point(ball: Ball, yx: jax.Array, c_inv, *, variant: str = "exact") -> Ball:
+    """Algorithm 1 inner update, unconditionally applied (branchless).
+
+    Returns the smallest ball enclosing ``ball`` and the augmented point.
+    Caller selects with the ``d >= r`` predicate. ``variant``:
+      - "exact": slack recursion xi2 <- xi2 (1-s)^2 + s^2 / C (exact
+        bookkeeping of the augmented center; see DESIGN.md erratum note).
+      - "paper-listing": verbatim line 9, xi2 <- xi2 (1-s)^2 + s^2.
+    """
+    d = point_distance(ball, yx, c_inv)
+    s = 0.5 * (1.0 - ball.r / d)  # step toward the new point
+    w = ball.w + s * (yx - ball.w)
+    r = ball.r + 0.5 * (d - ball.r)
+    slack_gain = c_inv if variant == "exact" else jnp.asarray(1.0, ball.xi2.dtype)
+    xi2 = ball.xi2 * (1.0 - s) ** 2 + (s**2) * slack_gain
+    return Ball(w=w, r=r, xi2=xi2, m=ball.m + 1)
+
+
+def merge_balls(b1: Ball, b2: Ball) -> Ball:
+    """Smallest ball enclosing two balls built from disjoint example sets.
+
+    Exact in the augmented space (slack blocks orthogonal). This is the
+    paper's Sec 4.3 multi-ball merge; we use it as the cross-shard collective
+    combiner. Branch-free: handles mutual containment and coincident centers.
+    """
+    dist = center_distance(b1, b2)
+    safe = jnp.maximum(dist, _EPS)
+
+    one_in_two = dist + b1.r <= b2.r
+    two_in_one = dist + b2.r <= b1.r
+
+    r_join = 0.5 * (b1.r + b2.r + dist)
+    t = jnp.clip((r_join - b1.r) / safe, 0.0, 1.0)
+    w_join = b1.w + t * (b2.w - b1.w)
+    xi2_join = (1.0 - t) ** 2 * b1.xi2 + t**2 * b2.xi2
+
+    w = jnp.where(one_in_two, b2.w, jnp.where(two_in_one, b1.w, w_join))
+    r = jnp.where(one_in_two, b2.r, jnp.where(two_in_one, b1.r, r_join))
+    xi2 = jnp.where(one_in_two, b2.xi2, jnp.where(two_in_one, b1.xi2, xi2_join))
+    return Ball(w=w, r=r, xi2=xi2, m=b1.m + b2.m)
+
+
+def fold_merge(balls: Ball) -> Ball:
+    """Deterministic left fold of a stacked Ball pytree (leading axis)."""
+    n = balls.w.shape[0]
+
+    def take(i):
+        return jax.tree.map(lambda x: x[i], balls)
+
+    def body(i, acc):
+        return merge_balls(acc, take(i))
+
+    return jax.lax.fori_loop(1, n, body, take(0))

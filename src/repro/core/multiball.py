@@ -1,0 +1,152 @@
+"""Multi-ball StreamSVM — the paper's Sec 4.3 general case, implemented.
+
+The paper *describes* maintaining L balls ("the L balls plus the new data
+point should be merged, resulting again into a set of L balls") but only
+implements the degenerate lookahead special case. Here is the general
+algorithm, jit-compatible:
+
+state: L ball slots (stacked Ball pytree) + active mask.
+per point (not enclosed by any active ball):
+  - if a slot is free: open a new zero-radius ball at the point;
+  - else: evaluate all merge options — point into ball j (L options), or
+    balls (i, j) merged with the point opening the freed slot (L(L-1)/2
+    options) — and apply the one minimizing the largest resulting radius.
+final classifier: fold-merge the active balls into one (same readout as
+Algorithm 1), or keep the L balls as a piecewise classifier (max-decision).
+
+Cost: O(L^2 + L D) per update — polylog-compatible for L = O(log N).
+Because merging is deferred and spatially informed, multiball preserves
+cluster structure that a single greedy ball destroys; EXPERIMENTS.md §Beyond
+measures the effect on stream-order robustness.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .meb import Ball, fold_merge, merge_balls
+
+
+class MultiBall(NamedTuple):
+    w: jax.Array  # (L, D)
+    r: jax.Array  # (L,)
+    xi2: jax.Array  # (L,)
+    m: jax.Array  # (L,) int32
+    active: jax.Array  # (L,) bool
+
+
+def _ball_at(mb: MultiBall, i) -> Ball:
+    return Ball(w=mb.w[i], r=mb.r[i], xi2=mb.xi2[i], m=mb.m[i])
+
+
+def _set_ball(mb: MultiBall, i, b: Ball, active=True) -> MultiBall:
+    return MultiBall(
+        w=mb.w.at[i].set(b.w),
+        r=mb.r.at[i].set(b.r),
+        xi2=mb.xi2.at[i].set(b.xi2),
+        m=mb.m.at[i].set(b.m),
+        active=mb.active.at[i].set(active),
+    )
+
+
+@partial(jax.jit, static_argnames=("n_balls", "c", "variant"))
+def fit_multiball(
+    X: jax.Array, y: jax.Array, c: float, n_balls: int = 4, variant: str = "exact"
+) -> MultiBall:
+    """Single pass with L ball slots. X: (N, D), y: (N,) ±1."""
+    L = n_balls
+    N, D = X.shape
+    c_inv = jnp.asarray(1.0 / c, X.dtype)
+    slack0 = c_inv if variant == "exact" else jnp.asarray(1.0, X.dtype)
+
+    mb0 = MultiBall(
+        w=jnp.zeros((L, D), X.dtype).at[0].set(y[0] * X[0]),
+        r=jnp.zeros((L,), X.dtype),
+        xi2=jnp.zeros((L,), X.dtype).at[0].set(slack0),
+        m=jnp.zeros((L,), jnp.int32).at[0].set(1),
+        active=jnp.zeros((L,), bool).at[0].set(True),
+    )
+
+    ii, jj = jnp.triu_indices(L, k=1)
+
+    def point_ball(row) -> Ball:
+        return Ball(
+            w=row, r=jnp.asarray(0.0, X.dtype), xi2=slack0, m=jnp.asarray(1, jnp.int32)
+        )
+
+    def step(mb: MultiBall, row):
+        # distances to every ball (inactive -> +inf)
+        d2 = jnp.sum((mb.w - row[None, :]) ** 2, -1) + mb.xi2 + c_inv
+        d = jnp.sqrt(jnp.maximum(d2, 1e-12))
+        d = jnp.where(mb.active, d, jnp.inf)
+        enclosed = jnp.any(d <= mb.r)
+
+        def absorb(mb):
+            pb = point_ball(row)
+            free = jnp.argmin(mb.active)  # first False slot, or 0 if none
+            has_free = ~jnp.all(mb.active)
+
+            # option A: new point into free slot (radius increase: 0)
+            # option B_j: merge point into ball j -> radius of merged ball
+            into_j = jax.vmap(lambda i: merge_balls(_ball_at(mb, i), pb))(
+                jnp.arange(L)
+            )
+            cost_b = jnp.where(mb.active, into_j.r, jnp.inf)
+            best_b = jnp.argmin(cost_b)
+
+            def do_free(mb):
+                return _set_ball(mb, free, pb)
+
+            def do_b(mb):
+                merged = jax.tree.map(lambda x: x[best_b], into_j)
+                return _set_ball(mb, best_b, merged)
+
+            if L == 1:  # no pair-merge option exists
+                return jax.lax.cond(has_free, do_free, do_b, mb)
+
+            # option C_(i,j): merge balls i,j; point opens the freed slot
+            pair = jax.vmap(lambda a, b: merge_balls(_ball_at(mb, a), _ball_at(mb, b)))(
+                ii, jj
+            )
+            cost_c = jnp.where(mb.active[ii] & mb.active[jj], pair.r, jnp.inf)
+            best_c = jnp.argmin(cost_c)
+            use_c = cost_c[best_c] < cost_b[best_b]
+
+            def do_c(mb):
+                merged = jax.tree.map(lambda x: x[best_c], pair)
+                mb = _set_ball(mb, ii[best_c], merged)
+                return _set_ball(mb, jj[best_c], pb)
+
+            return jax.lax.cond(
+                has_free, do_free, lambda m_: jax.lax.cond(use_c, do_c, do_b, m_), mb
+            )
+
+        mb = jax.lax.cond(enclosed, lambda m_: m_, absorb, mb)
+        return mb, None
+
+    yx = y[:, None] * X
+    mb, _ = jax.lax.scan(step, mb0, yx[1:])
+    return mb
+
+
+def to_single_ball(mb: MultiBall) -> Ball:
+    """Merge all active balls (inactive slots folded as zero-size dupes of 0)."""
+    # replace inactive slots with copies of the first active ball
+    first = jnp.argmax(mb.active)
+    rep = lambda arr: jnp.where(
+        mb.active.reshape((-1,) + (1,) * (arr.ndim - 1)), arr, arr[first]
+    )
+    balls = Ball(w=rep(mb.w), r=rep(mb.r), xi2=rep(mb.xi2),
+                 m=jnp.where(mb.active, mb.m, 0))
+    return fold_merge(balls)
+
+
+def decision_function(mb: MultiBall, X: jax.Array, mode: str = "merged") -> jax.Array:
+    if mode == "merged":
+        return X @ to_single_ball(mb).w
+    # piecewise: each ball votes with its own center, weighted by closeness
+    scores = X @ mb.w.T  # (N, L)
+    return jnp.sum(jnp.where(mb.active[None, :], scores, 0.0), -1)

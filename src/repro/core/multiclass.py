@@ -1,0 +1,73 @@
+"""One-vs-rest multiclass StreamSVM and hyper-parameter-grid fitting.
+
+Classes (and C-grid points) are embarrassingly parallel: we vmap the
+single-pass fit over the class axis. On a mesh, the class/grid axis maps to
+the `model` axis (see launch/train.py --svm-head) while the stream itself
+shards over (pod, data) via distributed.fit_sharded.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .meb import Ball
+from .streamsvm import fit, fit_lookahead
+
+
+@partial(jax.jit, static_argnames=("n_classes", "c", "lookahead", "variant"))
+def fit_ovr(
+    X: jax.Array,
+    labels: jax.Array,
+    n_classes: int,
+    c: float,
+    *,
+    lookahead: int = 1,
+    variant: str = "exact",
+) -> Ball:
+    """labels: (N,) int in [0, n_classes). Returns Ball stacked over classes."""
+    ys = jnp.where(labels[None, :] == jnp.arange(n_classes)[:, None], 1.0, -1.0)
+    ys = ys.astype(X.dtype)
+    if lookahead <= 1:
+        f = lambda yv: fit(X, yv, c, variant=variant)
+    else:
+        f = lambda yv: fit_lookahead(X, yv, c, lookahead, variant=variant)
+    return jax.vmap(f)(ys)
+
+
+def predict_ovr(balls: Ball, X: jax.Array) -> jax.Array:
+    scores = X @ balls.w.T  # (N, K)
+    return jnp.argmax(scores, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("variant",))
+def fit_c_grid(X: jax.Array, y: jax.Array, c_grid: jax.Array, *, variant: str = "exact") -> Ball:
+    """vmap the one-pass fit over a grid of C values (model-selection sweep).
+
+    Note c enters only through 1/C inside the scan, so it can be traced.
+    """
+
+    def f(cv):
+        from .meb import make_ball, point_distance, enclose_point
+
+        c_inv = 1.0 / cv
+        xi2 = c_inv if variant == "exact" else jnp.asarray(1.0, X.dtype)
+        ball = Ball(
+            w=y[0] * X[0],
+            r=jnp.asarray(0.0, X.dtype),
+            xi2=jnp.asarray(xi2, X.dtype),
+            m=jnp.asarray(1, jnp.int32),
+        )
+        yx = y[1:, None] * X[1:]
+
+        def body(b, row):
+            d = point_distance(b, row, c_inv)
+            upd = d >= b.r
+            new = enclose_point(b, row, c_inv, variant=variant)
+            return jax.tree.map(lambda a_, b_: jnp.where(upd, a_, b_), new, b), None
+
+        ball, _ = jax.lax.scan(body, ball, yx)
+        return ball
+
+    return jax.vmap(f)(c_grid)

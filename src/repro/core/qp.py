@@ -1,0 +1,123 @@
+"""MEB of (ball ∪ L augmented points) — the lookahead "QP" of Algorithm 2.
+
+The paper solves a size-L quadratic program whenever the lookahead buffer
+fills. We solve the equivalent geometric problem — smallest enclosing ball of
+the current ball plus L augmented points — with a fixed-iteration
+Badoiu–Clarkson / Frank–Wolfe scheme, which is branch-free and jit-able
+(no QP library exists in this environment, and BC is exactly what CVM uses).
+
+Coordinates. The augmented space is R^{D + old-slack-dims + L}. Relative to
+the current center only three blocks matter, so a candidate center is carried
+as ``(u, a, b)``:
+  u: (D,)  feature block,
+  a: ()    magnitude along the *old* slack block direction sigma/|sigma|,
+  b: (L,)  coordinates along the L fresh slack directions of buffered points.
+The current ball center is (w, sqrt(xi2), 0); buffered point i is
+(P_i, 0, sqrt(1/C) e_i). Distances and BC updates stay closed-form in these
+blocks; the solved center folds back to Ball(u, r_new, a^2 + |b|^2).
+
+Guarantee: after the BC iterations we *set* the radius to the max distance
+over all entities, so the returned ball always encloses ball ∪ points
+(enclosure is exact; only optimality is approximate — consistent with the
+paper's approximation-algorithm framing).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .meb import Ball
+
+_EPS = 1e-12
+
+
+def _distances(u, a, b, w, sxi, r, pts, valid, c_inv):
+    """Distances from candidate center (u,a,b) to each point and to the ball.
+
+    Returns (point_dists (L,), ball_dist ()) where ball_dist is the distance
+    to the *far side* of the old ball (center dist + r).
+    """
+    # |c - p_i|^2 = |u - P_i|^2 + a^2 + |b|^2 - 2 sqrt(cinv) b_i + cinv
+    b2 = jnp.sum(b * b)
+    pd2 = (
+        jnp.sum((u[None, :] - pts) ** 2, axis=-1)
+        + a * a
+        + b2
+        - 2.0 * jnp.sqrt(c_inv) * b
+        + c_inv
+    )
+    pd = jnp.sqrt(jnp.maximum(pd2, 0.0))
+    pd = jnp.where(valid, pd, -jnp.inf)
+    # |c - c_ball|^2 = |u - w|^2 + (a - sqrt(xi2))^2 + |b|^2
+    cd2 = jnp.sum((u - w) ** 2) + (a - sxi) ** 2 + b2
+    cd = jnp.sqrt(jnp.maximum(cd2, 0.0))
+    return pd, cd + r, cd
+
+
+def solve_meb_ball_points(
+    ball: Ball,
+    pts: jax.Array,
+    valid: jax.Array,
+    c_inv,
+    *,
+    iters: int = 128,
+    return_aux: bool = False,
+):
+    """Smallest ball enclosing ``ball`` and the valid rows of ``pts``.
+
+    pts:   (L, D) label-signed feature rows (y_i * x_i).
+    valid: (L,) bool — rows beyond the current buffer fill are masked out.
+    """
+    L, _ = pts.shape
+    w, r, xi2 = ball.w, ball.r, ball.xi2
+    sxi = jnp.sqrt(jnp.maximum(xi2, 0.0))
+    c_inv = jnp.asarray(c_inv, w.dtype)
+    nvalid = jnp.sum(valid.astype(jnp.int32))
+
+    # Init: midpoint between ball center and the valid-point centroid (in the
+    # (u, a, b) blocks). Any interior-ish start works for BC.
+    denom = jnp.maximum(nvalid.astype(w.dtype), 1.0)
+    cen_u = jnp.sum(jnp.where(valid[:, None], pts, 0.0), axis=0) / denom
+    cen_b = jnp.where(valid, jnp.sqrt(c_inv), 0.0) / denom
+    u0 = 0.5 * (w + cen_u)
+    a0 = 0.5 * sxi
+    b0 = 0.5 * cen_b
+
+    def body(t, carry):
+        u, a, b = carry
+        pd, bd, cd = _distances(u, a, b, w, sxi, r, pts, valid, c_inv)
+        far_pt = jnp.argmax(pd)
+        ball_wins = bd >= pd[far_pt]
+        # Support (farthest) point of the chosen entity.
+        #  - point i: (P_i, 0, sqrt(cinv) e_i)
+        #  - ball: the far side, c_ball + r * (c_ball - c)/|c_ball - c|
+        inv_cd = 1.0 / jnp.maximum(cd, _EPS)
+        fu_ball = w - r * (u - w) * inv_cd
+        fa_ball = sxi - r * (a - sxi) * inv_cd
+        fb_ball = -r * b * inv_cd
+        fu_pt = pts[far_pt]
+        fa_pt = jnp.zeros_like(a)
+        fb_pt = jnp.sqrt(c_inv) * jax.nn.one_hot(far_pt, L, dtype=b.dtype)
+        fu = jnp.where(ball_wins, fu_ball, fu_pt)
+        fa = jnp.where(ball_wins, fa_ball, fa_pt)
+        fb = jnp.where(ball_wins, fb_ball, fb_pt)
+        eta = 1.0 / (t + 2.0)
+        return (u + eta * (fu - u), a + eta * (fa - a), b + eta * (fb - b))
+
+    u, a, b = jax.lax.fori_loop(
+        0, iters, body, (u0, a0, b0), unroll=False
+    )
+    pd, bd, _ = _distances(u, a, b, w, sxi, r, pts, valid, c_inv)
+    r_new = jnp.maximum(jnp.max(pd), bd)
+    # Degenerate case: no valid points -> keep the old ball untouched.
+    any_valid = nvalid > 0
+    xi2_new = a * a + jnp.sum(b * b)
+    out = Ball(
+        w=jnp.where(any_valid, u, w),
+        r=jnp.where(any_valid, r_new, r),
+        xi2=jnp.where(any_valid, xi2_new, xi2),
+        m=ball.m + nvalid,
+    )
+    if return_aux:
+        return out, {"u": u, "a": a, "b": b, "point_dists": pd, "ball_dist": bd}
+    return out

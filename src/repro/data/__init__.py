@@ -1,0 +1,15 @@
+from .synthetic import DATASETS, PAPER_TABLE1, load_dataset
+from .stream import chunk_stream, permuted, shard_ranges
+from .preprocess import POLICY, preprocess, preprocess_for
+
+__all__ = [
+    "DATASETS",
+    "PAPER_TABLE1",
+    "POLICY",
+    "chunk_stream",
+    "load_dataset",
+    "permuted",
+    "preprocess",
+    "preprocess_for",
+    "shard_ranges",
+]

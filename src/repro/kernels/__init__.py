@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+streamsvm_scan — blocked one-pass Algorithm 1 (ball state resident in VMEM)
+gram           — tiled kernel-matrix blocks (linear / RBF epilogues)
+
+ops.py carries the jit'd public wrappers; ref.py the pure-jnp oracles.
+Kernels validate in interpret=True mode on CPU and target TPU BlockSpec
+tiling (128-aligned lanes, f32 VMEM accumulators).
+"""
+from .ops import gram, streamsvm_fit
+
+__all__ = ["gram", "streamsvm_fit"]

@@ -1,0 +1,90 @@
+"""jit'd public wrappers around the Pallas kernels (padding, dtype policy).
+
+These are the entry points the rest of the framework uses; they handle
+128-alignment padding, interpret-mode selection (CPU container vs real TPU),
+and state packing. Semantics match ref.py exactly (tests sweep shapes and
+dtypes).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.meb import Ball
+from .gram import gram_pallas
+from .streamsvm_scan import streamsvm_scan_pallas
+
+
+def _pad_to(x, mult, axis):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("c", "block_n", "interpret"))
+def streamsvm_fit(
+    X: jax.Array,
+    y: jax.Array,
+    c: float,
+    ball: Ball | None = None,
+    *,
+    block_n: int = 256,
+    interpret: bool | None = None,
+) -> Ball:
+    """One-pass Algorithm 1 via the Pallas kernel. Returns a core Ball.
+
+    Starts from `ball` if given, else initializes from the first example
+    (exact variant: xi2 = 1/C).
+    """
+    n, d = X.shape
+    c_inv = 1.0 / c
+    if ball is None:
+        w0 = y[0] * X[0]
+        r0, xi20, m0 = 0.0, c_inv, 1
+        X, y = X[1:], y[1:]
+        n -= 1
+    else:
+        w0, r0, xi20, m0 = ball.w, ball.r, ball.xi2, ball.m
+    Xp = _pad_to(_pad_to(X.astype(jnp.float32), 128, 1), block_n, 0)
+    yp = _pad_to(y.astype(jnp.float32), block_n, 0)
+    w0p = _pad_to(w0.astype(jnp.float32), 128, 0)
+    w, r, xi2, m = streamsvm_scan_pallas(
+        Xp, yp, w0p, r0, xi20, c_inv, m0,
+        n_valid=n, block_n=block_n, interpret=interpret,
+    )
+    return Ball(w=w[:d], r=r, xi2=xi2, m=m)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("epilogue", "gamma", "bm", "bn", "bk", "interpret"),
+)
+def gram(
+    A: jax.Array,
+    B: jax.Array,
+    *,
+    epilogue: str = "linear",
+    gamma: float = 1.0,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Kernel matrix K[i, j] = k(a_i, b_j) with MXU tiling."""
+    m, d = A.shape
+    n, _ = B.shape
+    bm_ = min(bm, max(8, m))
+    bn_ = min(bn, max(128, n))
+    Ap = _pad_to(_pad_to(A.astype(jnp.float32), bk, 1), bm_, 0)
+    Bp = _pad_to(_pad_to(B.astype(jnp.float32), bk, 1), bn_, 0)
+    out = gram_pallas(
+        Ap, Bp, epilogue=epilogue, gamma=gamma, bm=bm_, bn=bn_, bk=bk,
+        interpret=interpret,
+    )
+    return out[:m, :n]

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references).
+
+Deliberately written as straight-line jnp (row-at-a-time scan for the
+streaming kernel, one einsum for the Gram kernel) and independent of the
+kernel implementations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def streamsvm_scan_ref(X, y, w0, r0, xi20, c_inv, m0, *, n_valid=None):
+    """Row-at-a-time Algorithm 1 from an arbitrary starting state."""
+    n = X.shape[0]
+    n_valid = n if n_valid is None else n_valid
+    yx = (y[:, None] * X).astype(jnp.float32)
+    valid = jnp.arange(n) < n_valid
+
+    def body(carry, inp):
+        w, r, xi2, m = carry
+        row, ok = inp
+        d2 = jnp.sum((w - row) ** 2) + xi2 + c_inv
+        d = jnp.sqrt(jnp.maximum(d2, 1e-12))
+        upd = jnp.logical_and(d >= r, ok)
+        s = jnp.where(upd, 0.5 * (1.0 - r / d), 0.0)
+        w = (1.0 - s) * w + s * row
+        r = jnp.where(upd, r + 0.5 * (d - r), r)
+        xi2 = xi2 * (1.0 - s) ** 2 + s**2 * c_inv
+        m = m + upd.astype(jnp.int32)
+        return (w, r, xi2, m), None
+
+    w0 = jnp.asarray(w0, jnp.float32)
+    init = (
+        w0,
+        jnp.asarray(r0, jnp.float32),
+        jnp.asarray(xi20, jnp.float32),
+        jnp.asarray(m0, jnp.int32),
+    )
+    (w, r, xi2, m), _ = jax.lax.scan(body, init, (yx, valid))
+    return w, r, xi2, m
+
+
+def gram_ref(A, B, *, epilogue="linear", gamma=1.0, out_dtype=jnp.float32):
+    acc = jnp.einsum("md,nd->mn", A.astype(jnp.float32), B.astype(jnp.float32))
+    if epilogue == "rbf":
+        an = jnp.sum(A.astype(jnp.float32) ** 2, 1)[:, None]
+        bn = jnp.sum(B.astype(jnp.float32) ** 2, 1)[None, :]
+        return jnp.exp(-gamma * jnp.maximum(an + bn - 2 * acc, 0.0)).astype(out_dtype)
+    return acc.astype(out_dtype)

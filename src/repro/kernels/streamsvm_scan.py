@@ -1,0 +1,159 @@
+"""Pallas TPU kernel: one-pass StreamSVM over a VMEM-blocked stream.
+
+TPU adaptation of Algorithm 1 (DESIGN.md §3). The ball state (w, R, xi2, M)
+lives in VMEM/SMEM scratch across a *sequential* grid over row-blocks of the
+stream; each grid step:
+
+  1. loads a (block_n, D) tile of label-signed rows from HBM into VMEM,
+  2. computes the block Gram matrix G = YX YX^T and the state inner products
+     g_j = <w, yx_j> on the MXU (one matmul + one matvec per block instead of
+     the paper's per-row scalar loop),
+  3. runs the inherently-sequential conditional updates with an in-register
+     fori_loop over the block's rows, maintaining <w, yx_k> for k > j with
+     rank-1 corrections from G (O(block_n) per row) and updating w itself
+     with a single AXPY per *accepted* row.
+
+Per-block cost: one (block_n x D x block_n) matmul + block_n * O(block_n + D)
+vector work — MXU-friendly, and exactly equal in result to the reference
+scan (tests sweep shapes/dtypes against ref.py).
+
+Scalar state is carried in an SMEM (4,)-vector: [r, xi2, m, n_valid].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    x_ref,  # (block_n, D) VMEM tile of X
+    y_ref,  # (block_n, 1) VMEM tile of labels
+    w0_ref,  # (1, D) initial weight vector
+    s0_ref,  # (1, 4) initial scalars [r, xi2, c_inv, m]
+    nv_ref,  # (1, 1) number of valid rows (N before padding)
+    w_out_ref,  # (1, D) output weights
+    s_out_ref,  # (1, 4) output scalars
+    w_ref,  # VMEM scratch (1, D) — persistent ball center
+    st_ref,  # SMEM scratch (4,) — persistent [r, xi2, wsq, m]
+    *,
+    block_n: int,
+):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        w_ref[...] = w0_ref[...]
+        st_ref[0] = s0_ref[0, 0]  # r
+        st_ref[1] = s0_ref[0, 1]  # xi2
+        st_ref[2] = jnp.sum(w0_ref[...] * w0_ref[...])  # |w|^2
+        st_ref[3] = s0_ref[0, 3]  # m (as float)
+
+    c_inv = s0_ref[0, 2]
+    n_valid = nv_ref[0, 0]
+
+    yx = x_ref[...] * y_ref[...]  # (block_n, D) label-signed rows
+    # Block Gram and state inner products — MXU work.
+    gram = jax.lax.dot_general(
+        yx, yx, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (block_n, block_n)
+    g0 = jax.lax.dot_general(
+        yx, w_ref[...], (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )[:, 0]  # (block_n,)
+
+    row_base = step * block_n
+    row_ids = row_base + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
+    valid = (row_ids < n_valid).astype(jnp.float32)
+
+    def body(j, carry):
+        g, w, r, xi2, wsq, m = carry
+        # d^2 = |w|^2 - 2 g_j + G_jj + xi2 + 1/C  (current w)
+        gj = g[j]
+        d2 = wsq - 2.0 * gj + gram[j, j] + xi2 + c_inv
+        d = jnp.sqrt(jnp.maximum(d2, 1e-12))
+        upd = jnp.logical_and(d >= r, valid[j] > 0.0)
+        s = jnp.where(upd, 0.5 * (1.0 - r / d), 0.0)
+        # rank-1 maintenance of g_k = <w, yx_k> after w <- (1-s) w + s yx_j
+        g = (1.0 - s) * g + s * gram[j]
+        w = (1.0 - s) * w + s * yx[j][None, :]
+        wsq = (1.0 - s) ** 2 * wsq + 2.0 * s * (1.0 - s) * gj + s**2 * gram[j, j]
+        r = jnp.where(upd, r + 0.5 * (d - r), r)
+        xi2 = xi2 * (1.0 - s) ** 2 + s**2 * c_inv
+        m = m + jnp.where(upd, 1.0, 0.0)
+        return g, w, r, xi2, wsq, m
+
+    g, w, r, xi2, wsq, m = jax.lax.fori_loop(
+        0,
+        block_n,
+        body,
+        (g0, w_ref[...], st_ref[0], st_ref[1], st_ref[2], st_ref[3]),
+    )
+    w_ref[...] = w
+    st_ref[0], st_ref[1], st_ref[2], st_ref[3] = r, xi2, wsq, m
+
+    @pl.when(step == pl.num_programs(0) - 1)
+    def _finish():
+        w_out_ref[...] = w_ref[...]
+        s_out_ref[0, 0] = st_ref[0]
+        s_out_ref[0, 1] = st_ref[1]
+        s_out_ref[0, 2] = c_inv
+        s_out_ref[0, 3] = st_ref[3]
+
+
+def streamsvm_scan_pallas(
+    X: jax.Array,
+    y: jax.Array,
+    w0: jax.Array,
+    r0,
+    xi20,
+    c_inv,
+    m0,
+    *,
+    n_valid: int | None = None,
+    block_n: int = 256,
+    interpret: bool | None = None,
+):
+    """Run Algorithm 1 from (w0, r0, xi20, m0) over the padded stream (X, y).
+
+    X: (N, D) float32 — D should be padded to a multiple of 128 by ops.py,
+    N to a multiple of block_n; rows >= n_valid are ignored.
+    Returns (w, r, xi2, m).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, d = X.shape
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+
+    w0 = w0.reshape(1, d).astype(jnp.float32)
+    s0 = jnp.array([[r0, xi20, c_inv, m0]], jnp.float32)
+    nv = jnp.array([[n if n_valid is None else n_valid]], jnp.int32)
+
+    w_out, s_out = pl.pallas_call(
+        functools.partial(_kernel, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, 4), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, 4), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, d), jnp.float32),
+            jax.ShapeDtypeStruct((1, 4), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.SMEM((4,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(X.astype(jnp.float32), y.reshape(n, 1).astype(jnp.float32), w0, s0, nv)
+    return w_out[0], s_out[0, 0], s_out[0, 1], s_out[0, 3].astype(jnp.int32)

@@ -1,0 +1,269 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds abstract params / optimizer state / batch (ShapeDtypeStructs —
+     no allocation),
+  2. jits the train_step / prefill / decode_step with explicit in/out
+     shardings from repro.sharding.rules,
+  3. .lower().compile() against the 16x16 (single-pod, 256 chips) and
+     2x16x16 (multi-pod, 512 chips) meshes,
+  4. records memory_analysis(), cost_analysis() and the per-collective
+     byte totals parsed from the optimized HLO,
+  5. appends one JSON record per cell to --out (results cache: cells already
+     present are skipped unless --force).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b \
+      --shape train_4k --mesh single,multi --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, applicable, get_config, list_archs
+from repro.configs.base import ArchConfig
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.optim import adamw
+from repro.sharding import rules as R
+from repro.train import TrainCfg, make_train_step
+
+COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+# operand/result types like bf16[2,16,4096]{...} inside an HLO instruction
+SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|f64)\[([0-9,]*)\]")
+
+BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+         "pred": 1, "s64": 8, "f64": 8}
+
+
+def collective_bytes(hlo_text: str):
+    """Sum *operand* bytes per collective kind from optimized HLO text."""
+    out = {k: 0 for k in
+           ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+            "collective-permute")}
+    counts = dict(out)
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        kind = m.group(1)
+        if f" {kind}(" not in line and f"{kind}-start(" not in line:
+            continue
+        # operands appear after the op name's '('
+        try:
+            args = line.split("(", 1)[1]
+        except IndexError:
+            continue
+        total = 0
+        for dm in SHAPE_RE.finditer(args):
+            dt, dims = dm.groups()
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            total += n * BYTES[dt]
+        out[kind] += total
+        counts[kind] += 1
+    return out, counts
+
+
+def microbatches_for(cfg: ArchConfig, shape) -> int:
+    """Accumulation factor keeping live activations ~O(1 GB)/device.
+
+    Global batch 256 over dp=16 -> 16/shard; A=16 leaves 1 sequence per
+    shard per microbatch for the largest models."""
+    if shape.kind != "train":
+        return 1
+    # §Perf H4 (refuted): halving A for MoE-235B to halve FSDP gather
+    # traffic costs +20 GB peak (dispatch buffers scale with per-mb tokens)
+    # and breaks the 16 GB fit; A=16 stands.
+    if cfg.unrolled:
+        # §Perf H7: unrolled families are per-mb-activation bound; A=16
+        # halves their live activations vs A=8.
+        return 16
+    big = cfg.n_params() > 20e9
+    return 16 if big else 8
+
+
+def _train_artifacts(cfg, model, mesh):
+    tcfg = TrainCfg(
+        microbatches=microbatches_for(cfg, SHAPES["train_4k"]),
+        moment_dtype=cfg.moment_dtype,
+    )
+    step = make_train_step(model, tcfg)
+    params_sds = S.params_specs(model)
+    mdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.moment_dtype]
+    opt_sds = jax.eval_shape(lambda p: adamw.init(p, mdt), params_sds)
+    state_sds = {"params": params_sds, "opt": opt_sds}
+
+    p_sh = R.tree_shardings(params_sds, mesh, R.param_spec)
+    state_sh = {
+        "params": p_sh,
+        "opt": adamw.AdamWState(
+            m=p_sh, v=p_sh,
+            step=jax.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        ),
+    }
+    return step, state_sds, state_sh, tcfg
+
+
+def lower_cell(cfg: ArchConfig, shape, mesh, mesh_name: str):
+    model = build_model(cfg, remat="full" if shape.kind == "train" else "none")
+    rec = {}
+    t0 = time.time()
+    if shape.kind == "train":
+        step, state_sds, state_sh, tcfg = _train_artifacts(cfg, model, mesh)
+        batch_sds = S.train_batch_specs(cfg, shape)
+        batch_sh = R.tree_shardings(batch_sds, mesh, R.batch_spec)
+        jitted = jax.jit(
+            step,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        )
+        lowered = jitted.lower(state_sds, batch_sds)
+        rec["microbatches"] = tcfg.microbatches
+    elif shape.kind == "prefill":
+        params_sds = S.params_specs(model)
+        p_sh = R.tree_shardings(params_sds, mesh, R.param_spec)
+        batch_sds = S.prefill_batch_specs(cfg, shape)
+        batch_sh = R.tree_shardings(batch_sds, mesh, R.batch_spec)
+        cache_sds = jax.eval_shape(
+            lambda p, b: model.prefill(p, b), params_sds, batch_sds
+        )
+        out_sh = (
+            None,
+            R.tree_shardings(cache_sds[1], mesh, R.cache_spec),
+        )
+        jitted = jax.jit(
+            lambda p, b: model.prefill(p, b),
+            in_shardings=(p_sh, batch_sh),
+            out_shardings=out_sh,
+        )
+        lowered = jitted.lower(params_sds, batch_sds)
+    else:  # decode
+        serve_v2 = os.environ.get("REPRO_SERVE_SHARDING", "v1") == "v2"
+        params_sds = S.params_specs(model)
+        p_sh = R.tree_shardings(params_sds, mesh, R.param_spec)
+        cache_sds, tokens_sds = S.decode_specs(model, cfg, shape)
+        cspec = R.serve_cache_spec if serve_v2 else R.cache_spec
+        bspec = R.serve_batch_spec if serve_v2 else R.batch_spec
+        cache_sh = R.tree_shardings(cache_sds, mesh, cspec)
+        tok_sh = R.tree_shardings(tokens_sds, mesh, bspec)
+        rec["serve_sharding"] = "v2-weight-stationary" if serve_v2 else "v1"
+        jitted = jax.jit(
+            lambda p, c, t: model.decode_step(p, c, t),
+            in_shardings=(p_sh, cache_sh, tok_sh),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(params_sds, cache_sds, tokens_sds)
+
+    rec["lower_s"] = round(time.time() - t0, 1)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "generated_code_size_in_bytes",
+        ):
+            v = getattr(mem, k, None)
+            if v is not None:
+                rec[k] = int(v)
+    cost = compiled.cost_analysis() or {}
+    rec["flops"] = float(cost.get("flops", -1))
+    rec["bytes_accessed"] = float(cost.get("bytes accessed", -1))
+    cbytes, ccounts = collective_bytes(compiled.as_text())
+    rec["collective_bytes"] = cbytes
+    rec["collective_counts"] = ccounts
+    rec["mesh"] = mesh_name
+    rec["devices"] = int(mesh.size)
+    return rec
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: Path, force=False):
+    cell_id = f"{arch}__{shape_name}__{mesh_name}"
+    out_path = out_dir / f"{cell_id}.json"
+    if out_path.exists() and not force:
+        print(f"[skip cached] {cell_id}")
+        return json.loads(out_path.read_text())
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "kind": shape.kind}
+    if not ok:
+        rec.update({"status": "SKIP", "reason": why})
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+        try:
+            with mesh:
+                rec.update(lower_cell(cfg, shape, mesh, mesh_name))
+            rec["status"] = "OK"
+            rec["model_flops_6nd"] = 6.0 * cfg.active_params() * (
+                shape.global_batch * shape.seq_len if shape.kind == "train"
+                else shape.global_batch * (shape.seq_len if shape.kind == "prefill" else 1)
+            )
+            rec["n_params"] = cfg.n_params()
+            rec["active_params"] = cfg.active_params()
+        except Exception as e:  # a failure here is a bug in the system
+            rec["status"] = "FAIL"
+            rec["error"] = f"{type(e).__name__}: {e}"
+            rec["traceback"] = traceback.format_exc()[-4000:]
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1))
+    status = rec["status"]
+    extra = "" if status != "OK" else (
+        f" compile={rec.get('compile_s')}s flops={rec.get('flops'):.3g}"
+    )
+    print(f"[{status}] {cell_id}{extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    archs = list_archs() if (args.all or args.arch is None) else args.arch.split(",")
+    shapes = list(SHAPES) if (args.all or args.shape is None) else args.shape.split(",")
+    meshes = args.mesh.split(",")
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                rec = run_cell(arch, shape, mesh_name, out_dir, force=args.force)
+                n_fail += rec["status"] == "FAIL"
+    print(f"done; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Production mesh builders (functions, not module constants — importing this
+module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = 256 chips, axes (data, model).
+    Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — the pod
+    axis crosses DCN; data/model stay on ICI."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_devices: int | None = None, model_axis: int = 1):
+    """Small mesh over actually-available devices (tests/examples)."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))

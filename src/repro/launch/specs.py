@@ -1,0 +1,50 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+input_specs(cfg, shape) returns the abstract batch for a cell; together with
+jax.eval_shape over model.init / decode_state this lets the dry-run lower and
+compile every (arch x shape x mesh) cell without materializing a single
+weight. The VLM/audio modality frontends are stubs per the assignment: their
+`image_embeds` / `frames` are precomputed-embedding inputs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSpec
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": SDS((B, S), jnp.int32),
+        "targets": SDS((B, S), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["image_embeds"] = SDS((B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = SDS((B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    batch = train_batch_specs(cfg, shape)
+    batch.pop("targets")
+    return batch
+
+
+def decode_specs(model, cfg: ArchConfig, shape: ShapeSpec):
+    """(cache_sds, tokens_sds) — one new token against a seq_len cache."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: model.decode_state(B, S))
+    tokens = SDS((B, 1), jnp.int32)
+    return cache, tokens
+
+
+def params_specs(model):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))

@@ -1,0 +1,88 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+        --smoke --steps 50 [--batch 8] [--seq 128] [--ckpt-dir DIR] [--resume]
+
+Builds the selected architecture (full or --smoke reduced config), runs the
+jit'd train step over the synthetic token pipeline with checkpointing every
+--ckpt-every steps, and resumes from the newest checkpoint when --resume is
+set. On a real TPU deployment the same entry point runs under
+`jax.distributed.initialize()` with the production mesh from launch/mesh.py;
+in this CPU container it drives the single-device path (the multi-device
+config is exercised by launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config, list_archs
+from repro.data.tokens import token_batches
+from repro.models import build_model
+from repro.train import TrainCfg, init_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if not args.smoke:
+        print("WARNING: full config on this host is for dry-run only; "
+              "use --smoke for an actual CPU run.")
+    model = build_model(cfg)
+    tcfg = TrainCfg(peak_lr=args.lr, warmup_steps=max(2, args.steps // 10),
+                    total_steps=args.steps, microbatches=args.microbatches,
+                    moment_dtype=cfg.moment_dtype)
+    state = init_state(model, jax.random.PRNGKey(0), tcfg)
+    start = 0
+    if args.resume and ckpt.exists(args.ckpt_dir):
+        meta = ckpt.load_meta(args.ckpt_dir)
+        state = ckpt.restore(args.ckpt_dir, state)
+        start = int(meta["step"])
+        print(f"resumed from step {start}")
+
+    n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
+    print(f"{cfg.name}: {n_params/1e6:.1f}M params; steps {start}->{args.steps}")
+    step_fn = jax.jit(make_train_step(model, tcfg), donate_argnums=(0,))
+
+    extras = {}
+    if cfg.family == "vlm":
+        extras["image_embeds"] = jnp.zeros(
+            (args.batch, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        extras["frames"] = jnp.zeros(
+            (args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+
+    t0 = time.time()
+    batches = token_batches(cfg.vocab, args.batch, args.seq, args.steps, seed=1)
+    for i, b in enumerate(batches):
+        if i < start:
+            continue
+        b = {k: jnp.asarray(v) for k, v in b.items()} | extras
+        state, m = step_fn(state, b)
+        if (i + 1) % args.ckpt_every == 0 or (i + 1) == args.steps:
+            ckpt.save(args.ckpt_dir, state, meta={"step": i + 1})
+            tokens = args.batch * args.seq * (i + 1 - start)
+            print(f"step {i+1:5d} loss={float(m['loss']):.4f} "
+                  f"tok/s={tokens/(time.time()-t0):.0f} [ckpt]", flush=True)
+    print(f"done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

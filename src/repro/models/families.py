@@ -1,0 +1,436 @@
+"""Model classes for the hybrid (zamba2), ssm (xlstm) and encdec (whisper)
+families — same API as DecoderLM (loss / prefill / decode_step / init_cache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.sharding.hints import shard_hint
+from .layers import (
+    attn_apply,
+    attn_init,
+    cross_entropy,
+    init_dense,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+)
+from .mamba2 import mamba_apply, mamba_init
+from .xlstm import mlstm_block, mlstm_init, slstm_block, slstm_init
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 — mamba2 backbone + one shared attention block every k layers
+# ---------------------------------------------------------------------------
+
+
+class Zamba2Model:
+    """Shared transformer block (attn+mlp, single set of weights) applied
+    before every `shared_attn_every`-th mamba2 layer. Each *application* has
+    its own KV cache. Simplification vs the published model: the shared block
+    consumes the hidden state directly (no concat-with-embedding projector);
+    recorded in DESIGN.md."""
+
+    def __init__(self, cfg: ArchConfig, remat: str = "none"):
+        self.cfg = cfg
+        self.remat = remat
+        self.dtype = _dtype(cfg.param_dtype)
+        self.n_shared = len(self._shared_sites())
+
+    def _shared_sites(self):
+        every = self.cfg.shared_attn_every
+        return [i for i in range(self.cfg.n_layers) if every and i % every == 0]
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, cfg.n_layers + 4)
+        params = {
+            "embed": init_dense(ks[0], (cfg.vocab, cfg.d_model), self.dtype),
+            "mamba": [
+                {"ln": jnp.zeros((cfg.d_model,), self.dtype),
+                 "mix": mamba_init(ks[1 + i], cfg.d_model, cfg.ssm, self.dtype)}
+                for i in range(cfg.n_layers)
+            ],
+            "shared": {
+                "ln1": jnp.zeros((cfg.d_model,), self.dtype),
+                "attn": attn_init(ks[-3], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, self.dtype),
+                "ln2": jnp.zeros((cfg.d_model,), self.dtype),
+                "mlp": mlp_init(ks[-2], cfg.d_model, cfg.d_ff, cfg.mlp, self.dtype),
+            },
+            "final_norm": jnp.zeros((cfg.d_model,), self.dtype),
+            "unembed": init_dense(ks[-1], (cfg.d_model, cfg.vocab), self.dtype),
+        }
+        return params
+
+    def _shared_block(self, p, h, cache=None, cache_pos=None):
+        a, nc = attn_apply(
+            p["attn"], rmsnorm(h, p["ln1"], self.cfg.norm_eps),
+            rope_base=self.cfg.rope_base, causal=True,
+            cache=cache, cache_pos=cache_pos,
+        )
+        h = h + a
+        h = h + mlp_apply(p["mlp"], rmsnorm(h, p["ln2"], self.cfg.norm_eps), self.cfg.mlp)
+        return h, nc
+
+    def _forward(self, params, h, caches=None, cache_pos=None):
+        """caches: dict(kv=[per-site], ssm=[per-layer], conv=[per-layer])."""
+        cfg = self.cfg
+        sites = set(self._shared_sites())
+        new_kv, new_ssm, new_conv = [], [], []
+        si = 0
+        for i in range(cfg.n_layers):
+            if i in sites:
+                c = None if caches is None else jax.tree.map(lambda a: a[si], caches["kv"])
+                h, nc = self._shared_block(params["shared"], h, cache=c, cache_pos=cache_pos)
+                if nc is not None:
+                    new_kv.append(nc)
+                si += 1
+            st = None if caches is None else caches["ssm"][i]
+            cv = None if caches is None else caches["conv"][i]
+
+            def mamba_layer(lp, hh, st=st, cv=cv):
+                return mamba_apply(
+                    lp["mix"], rmsnorm(hh, lp["ln"], cfg.norm_eps),
+                    cfg.ssm, state=st, conv_state=cv,
+                )
+
+            if self.remat != "none" and caches is None:
+                mamba_layer = jax.checkpoint(mamba_layer, prevent_cse=False)
+            out, (nst, ncv) = mamba_layer(params["mamba"][i], h)
+            h = h + out
+            new_ssm.append(nst)
+            new_conv.append(ncv)
+        new_caches = None
+        if caches is not None or new_kv:
+            new_caches = {
+                "kv": jax.tree.map(lambda *xs: jnp.stack(xs), *new_kv) if new_kv else None,
+                "ssm": new_ssm,
+                "conv": new_conv,
+            }
+        return h, new_caches
+
+    def _logits(self, params, h):
+        logits = jnp.einsum(
+            "bsd,dv->bsv", rmsnorm(h, params["final_norm"], self.cfg.norm_eps),
+            params["unembed"],
+        )
+        # vocab-sharded logits (same fix as DecoderLM; EXPERIMENTS §Perf H2b)
+        return shard_hint(logits, ("dp", None, "tp"))
+
+    def loss(self, params, batch):
+        h = params["embed"][batch["tokens"]]
+        h, _ = self._forward(params, h)
+        ce = cross_entropy(self._logits(params, h), batch["targets"])
+        return ce, {"ce": ce, "aux": 0.0}
+
+    def init_cache(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        d_in = cfg.ssm.expand * cfg.d_model
+        nh = d_in // cfg.ssm.head_dim
+        return {
+            "kv": {
+                "k": jnp.zeros((self.n_shared, batch_size, max_len, cfg.n_kv_heads, cfg.hd), self.dtype),
+                "v": jnp.zeros((self.n_shared, batch_size, max_len, cfg.n_kv_heads, cfg.hd), self.dtype),
+            },
+            "ssm": [
+                jnp.zeros((batch_size, nh, cfg.ssm.head_dim, cfg.ssm.d_state), jnp.float32)
+                for _ in range(cfg.n_layers)
+            ],
+            "conv": [
+                jnp.zeros((batch_size, cfg.ssm.d_conv - 1, d_in + 2 * cfg.ssm.d_state), self.dtype)
+                for _ in range(cfg.n_layers)
+            ],
+        }
+
+    def prefill(self, params, batch):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        h = params["embed"][tokens]
+        caches = self.init_cache(B, batch.get("max_len", S))
+        h, caches = self._forward(params, h, caches=caches, cache_pos=0)
+        logits = self._logits(params, h[:, -1:])
+        return logits[:, 0], {"c": caches, "pos": jnp.asarray(S, jnp.int32)}
+
+    def decode_step(self, params, cache, tokens):
+        h = params["embed"][tokens]
+        h, caches = self._forward(params, h, caches=cache["c"], cache_pos=cache["pos"])
+        logits = self._logits(params, h)
+        return logits[:, 0], {"c": caches, "pos": cache["pos"] + tokens.shape[1]}
+
+    def decode_state(self, batch_size: int, max_len: int):
+        return {
+            "c": self.init_cache(batch_size, max_len),
+            "pos": jnp.asarray(max_len - 1, jnp.int32),
+        }
+
+
+# ---------------------------------------------------------------------------
+# xLSTM
+# ---------------------------------------------------------------------------
+
+
+class XLSTMModel:
+    def __init__(self, cfg: ArchConfig, remat: str = "none"):
+        self.cfg = cfg
+        self.remat = remat
+        self.dtype = _dtype(cfg.param_dtype)
+
+    def _is_slstm(self, i: int) -> bool:
+        e = self.cfg.slstm_every
+        return bool(e) and (i % e == e - 1)
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, cfg.n_layers + 3)
+        blocks = []
+        for i in range(cfg.n_layers):
+            if self._is_slstm(i):
+                blocks.append(slstm_init(ks[i], cfg.d_model, cfg.n_heads, self.dtype))
+            else:
+                blocks.append(mlstm_init(ks[i], cfg.d_model, cfg.n_heads, self.dtype))
+        return {
+            "embed": init_dense(ks[-2], (cfg.vocab, cfg.d_model), self.dtype),
+            "blocks": blocks,
+            "final_norm": jnp.zeros((cfg.d_model,), self.dtype),
+            "unembed": init_dense(ks[-1], (cfg.d_model, cfg.vocab), self.dtype),
+        }
+
+    def _forward(self, params, h, states=None):
+        cfg = self.cfg
+        new_states = []
+        use_remat = self.remat != "none" and states is None
+        for i in range(cfg.n_layers):
+            st = None if states is None else states[i]
+            if self._is_slstm(i):
+                blk = slstm_block
+                if use_remat:
+                    blk = jax.checkpoint(blk, static_argnums=(2,), prevent_cse=False)
+                h, ns = blk(params["blocks"][i], h, cfg.n_heads, state=st)
+            else:
+                mst = None if st is None else st[0]
+                cst = None if st is None else st[1]
+                blk = mlstm_block
+                if use_remat:
+                    blk = jax.checkpoint(blk, static_argnums=(2,), prevent_cse=False)
+                h, (ns_m, ns_c) = blk(
+                    params["blocks"][i], h, cfg.n_heads, state=mst, conv_state=cst
+                )
+                ns = (ns_m, ns_c)
+            new_states.append(ns)
+        return h, new_states
+
+    def _logits(self, params, h):
+        logits = jnp.einsum(
+            "bsd,dv->bsv", rmsnorm(h, params["final_norm"], self.cfg.norm_eps),
+            params["unembed"],
+        )
+        return shard_hint(logits, ("dp", None, "tp"))
+
+    def loss(self, params, batch):
+        h = params["embed"][batch["tokens"]]
+        h, _ = self._forward(params, h)
+        ce = cross_entropy(self._logits(params, h), batch["targets"])
+        return ce, {"ce": ce, "aux": 0.0}
+
+    def init_cache(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        B = batch_size
+        d_in = 2 * cfg.d_model
+        hd = d_in // cfg.n_heads
+        states = []
+        for i in range(cfg.n_layers):
+            if self._is_slstm(i):
+                states.append(
+                    (
+                        jnp.zeros((B, cfg.d_model), jnp.float32),
+                        jnp.ones((B, cfg.d_model), jnp.float32),
+                        jnp.zeros((B, cfg.n_heads), jnp.float32),
+                        jnp.zeros((B, cfg.d_model), jnp.float32),
+                    )
+                )
+            else:
+                states.append(
+                    (
+                        (
+                            jnp.zeros((B, cfg.n_heads, hd, hd), jnp.float32),
+                            jnp.zeros((B, cfg.n_heads, hd), jnp.float32),
+                            jnp.zeros((B, cfg.n_heads), jnp.float32),
+                        ),
+                        jnp.zeros((B, 3, d_in), self.dtype),
+                    )
+                )
+        return states
+
+    def prefill(self, params, batch):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        h = params["embed"][tokens]
+        states = self.init_cache(B, 0)
+        h, states = self._forward(params, h, states=states)
+        logits = self._logits(params, h[:, -1:])
+        return logits[:, 0], {"c": states, "pos": jnp.asarray(S, jnp.int32)}
+
+    def decode_step(self, params, cache, tokens):
+        h = params["embed"][tokens]
+        h, states = self._forward(params, h, states=cache["c"])
+        logits = self._logits(params, h)
+        return logits[:, 0], {"c": states, "pos": cache["pos"] + tokens.shape[1]}
+
+    def decode_state(self, batch_size: int, max_len: int):
+        # constant-size recurrent state: max_len only sets the position
+        return {
+            "c": self.init_cache(batch_size, 0),
+            "pos": jnp.asarray(max_len - 1, jnp.int32),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Whisper (enc-dec); conv audio frontend is a stub — `frames` arrive as
+# precomputed (B, encoder_seq, d_model) embeddings per the assignment.
+# ---------------------------------------------------------------------------
+
+
+def _sinusoid(S, D):
+    pos = jnp.arange(S)[:, None].astype(jnp.float32)
+    i = jnp.arange(D // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * i / D)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class EncDecModel:
+    def __init__(self, cfg: ArchConfig, remat: str = "none"):
+        self.cfg = cfg
+        self.remat = remat
+        self.dtype = _dtype(cfg.param_dtype)
+
+    def _enc_layer_init(self, key):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": jnp.zeros((cfg.d_model,), self.dtype),
+            "attn": attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, self.dtype),
+            "ln2": jnp.zeros((cfg.d_model,), self.dtype),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp, self.dtype),
+        }
+
+    def _dec_layer_init(self, key):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = self._enc_layer_init(jax.random.fold_in(key, 7))
+        p["ln_x"] = jnp.zeros((cfg.d_model,), self.dtype)
+        p["xattn"] = attn_init(k3, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, self.dtype)
+        return p
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, cfg.n_encoder_layers + cfg.n_layers + 3)
+        return {
+            "enc_layers": [self._enc_layer_init(ks[i]) for i in range(cfg.n_encoder_layers)],
+            "enc_norm": jnp.zeros((cfg.d_model,), self.dtype),
+            "embed": init_dense(ks[-2], (cfg.vocab, cfg.d_model), self.dtype),
+            "dec_layers": [
+                self._dec_layer_init(ks[cfg.n_encoder_layers + i]) for i in range(cfg.n_layers)
+            ],
+            "final_norm": jnp.zeros((cfg.d_model,), self.dtype),
+            "unembed": init_dense(ks[-1], (cfg.d_model, cfg.vocab), self.dtype),
+        }
+
+    def encode(self, params, frames):
+        cfg = self.cfg
+        h = frames.astype(self.dtype) + _sinusoid(frames.shape[1], cfg.d_model).astype(self.dtype)
+
+        def enc_layer(p, hh):
+            a, _ = attn_apply(p["attn"], rmsnorm(hh, p["ln1"], cfg.norm_eps), causal=False)
+            hh = hh + a
+            return hh + mlp_apply(p["mlp"], rmsnorm(hh, p["ln2"], cfg.norm_eps), cfg.mlp)
+
+        if self.remat != "none":
+            enc_layer = jax.checkpoint(enc_layer, prevent_cse=False)
+        for p in params["enc_layers"]:
+            h = enc_layer(p, h)
+        return rmsnorm(h, params["enc_norm"], cfg.norm_eps)
+
+    def _decoder(self, params, h, enc_out, caches=None, cache_pos=None, pos0=0):
+        cfg = self.cfg
+        S = h.shape[1]
+        pos = _sinusoid(65536, cfg.d_model)
+        start = pos0 if cache_pos is None else cache_pos
+        h = h + jax.lax.dynamic_slice_in_dim(pos, start, S, 0).astype(h.dtype)
+        new_kv = []
+
+        def dec_layer(p, hh, c):
+            a, nc = attn_apply(
+                p["attn"], rmsnorm(hh, p["ln1"], cfg.norm_eps),
+                causal=True, cache=c, cache_pos=cache_pos,
+            )
+            hh = hh + a
+            x, _ = attn_apply(
+                p["xattn"], rmsnorm(hh, p["ln_x"], cfg.norm_eps),
+                causal=False, kv_x=enc_out,
+            )
+            hh = hh + x
+            return hh + mlp_apply(p["mlp"], rmsnorm(hh, p["ln2"], cfg.norm_eps), cfg.mlp), nc
+
+        layer_fn = dec_layer
+        if self.remat != "none" and caches is None:
+            layer_fn = jax.checkpoint(dec_layer, prevent_cse=False)
+        for i, p in enumerate(params["dec_layers"]):
+            c = None if caches is None else jax.tree.map(lambda a: a[i], caches)
+            h, nc = layer_fn(p, h, c)
+            if nc is not None:
+                new_kv.append(nc)
+        nc_st = jax.tree.map(lambda *xs: jnp.stack(xs), *new_kv) if new_kv else None
+        return h, nc_st
+
+    def _logits(self, params, h):
+        # NOTE: the vocab-shard hint (H2) measurably HURT here (61->73 GB):
+        # the enc-dec step's temp is dominated by cross-attention residuals,
+        # and the hint only adds reshard traffic. Left unhinted (H2b).
+        return jnp.einsum(
+            "bsd,dv->bsv", rmsnorm(h, params["final_norm"], self.cfg.norm_eps),
+            params["unembed"],
+        )
+
+    def loss(self, params, batch):
+        enc_out = self.encode(params, batch["frames"])
+        h = params["embed"][batch["tokens"]]
+        h, _ = self._decoder(params, h, enc_out)
+        ce = cross_entropy(self._logits(params, h), batch["targets"])
+        return ce, {"ce": ce, "aux": 0.0}
+
+    def init_cache(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        shape = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(shape, self.dtype), "v": jnp.zeros(shape, self.dtype)}
+
+    def prefill(self, params, batch):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        enc_out = self.encode(params, batch["frames"])
+        h = params["embed"][tokens]
+        kv = self.init_cache(B, batch.get("max_len", S))
+        h, kv = self._decoder(params, h, enc_out, caches=kv, cache_pos=0)
+        logits = self._logits(params, h[:, -1:])
+        return logits[:, 0], {"kv": kv, "enc": enc_out, "pos": jnp.asarray(S, jnp.int32)}
+
+    def decode_step(self, params, cache, tokens):
+        h = params["embed"][tokens]
+        h, kv = self._decoder(
+            params, h, cache["enc"], caches=cache["kv"], cache_pos=cache["pos"]
+        )
+        logits = self._logits(params, h)
+        return logits[:, 0], {"kv": kv, "enc": cache["enc"], "pos": cache["pos"] + tokens.shape[1]}
+
+    def decode_state(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        return {
+            "kv": self.init_cache(batch_size, max_len),
+            "enc": jnp.zeros((batch_size, cfg.encoder_seq, cfg.d_model), self.dtype),
+            "pos": jnp.asarray(max_len - 1, jnp.int32),
+        }

@@ -1,0 +1,171 @@
+"""Mamba2 mixer (SSD — state-space duality form), for zamba2.
+
+Training uses the chunked SSD algorithm: intra-chunk quadratic term +
+inter-chunk state recurrence (lax.scan over chunks); decode is the O(1)
+recurrent update. Single B/C group (n_groups=1), per-head scalar A, D skip,
+causal depthwise conv on the xBC path — the standard minimal-Mamba2 layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_dense, rmsnorm
+
+
+def mamba_init(key, d_model: int, ssm, dtype):
+    d_in = ssm.expand * d_model
+    n_heads = d_in // ssm.head_dim
+    n = ssm.d_state
+    ks = jax.random.split(key, 5)
+    d_proj = 2 * d_in + 2 * n + n_heads  # z, xBC, dt
+    return {
+        "in_proj": init_dense(ks[0], (d_model, d_proj), dtype),
+        "conv_w": init_dense(ks[1], (ssm.d_conv, d_in + 2 * n), dtype, scale=3.0),
+        "conv_b": jnp.zeros((d_in + 2 * n,), dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": jnp.zeros((d_in,), dtype),
+        "out_proj": init_dense(ks[2], (d_in, d_model), dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: (B, S, C); w: (K, C) depthwise; left-padded causal."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _segsum(a):
+    """a: (..., L) -> (..., L, L) lower-tri sums: out[t, s] = sum_{s<j<=t} a[j]."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(tri, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A_log, B, C, chunk: int, init_state=None):
+    """x: (b,s,h,p) pre-discretization; dt: (b,s,h) post-softplus;
+    B, C: (b,s,n). Returns (y (b,s,h,p), final_state (b,h,p,n))."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    c = s // chunk
+    A = -jnp.exp(A_log)  # (h,)
+    dA = dt * A  # (b,s,h)
+    xdt = x * dt[..., None]  # discretized input
+
+    # chunked views
+    dA_c = dA.reshape(b, c, chunk, h).transpose(0, 1, 3, 2)  # (b,c,h,l)
+    x_c = xdt.reshape(b, c, chunk, h, p)
+    B_c = B.reshape(b, c, chunk, n)
+    C_c = C.reshape(b, c, chunk, n)
+
+    A_cs = jnp.cumsum(dA_c, axis=-1)  # (b,c,h,l)
+
+    # intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(dA_c))  # (b,c,h,l,l)
+    Y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp", C_c, B_c, L, x_c)
+
+    # per-chunk states
+    decay_states = jnp.exp(A_cs[..., -1:] - A_cs)  # (b,c,h,l)
+    states = jnp.einsum("bcln,bchl,bclhp->bchpn", B_c, decay_states, x_c)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(A_cs[..., -1])  # (b,c,h)
+    s0 = (
+        jnp.zeros((b, h, p, n), x.dtype)
+        if init_state is None
+        else init_state.astype(x.dtype)
+    )
+
+    def scan_body(carry, inp):
+        st = carry
+        dec, snew = inp  # (b,h), (b,h,p,n)
+        st_next = st * dec[..., None, None] + snew
+        return st_next, st  # emit the state *entering* this chunk
+
+    cd_t = jnp.moveaxis(chunk_decay, 1, 0)  # (c,b,h)
+    st_t = jnp.moveaxis(states, 1, 0)  # (c,b,h,p,n)
+    final_state, prev_states = jax.lax.scan(scan_body, s0, (cd_t, st_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b,c,h,p,n)
+
+    state_decay_out = jnp.exp(A_cs)  # (b,c,h,l)
+    Y_off = jnp.einsum("bcln,bchpn,bchl->bclhp", C_c, prev_states, state_decay_out)
+
+    y = (Y_diag + Y_off).reshape(b, s, h, p)
+    return y, final_state
+
+
+def mamba_apply(p, x, ssm, *, state=None, conv_state=None):
+    """Full-sequence mixer. x: (B, S, D). Returns (out, (state, conv_state)).
+
+    When `state`/`conv_state` are given, continues from them (decode uses
+    S=1 via the same path; chunk handling degrades to a single chunk).
+    """
+    Bsz, S, D = x.shape
+    d_in = ssm.expand * D
+    h = d_in // ssm.head_dim
+    n = ssm.d_state
+
+    proj = x @ p["in_proj"]  # (B,S,2*d_in+2n+h)
+    z, xBC, dt = jnp.split(proj, [d_in, 2 * d_in + 2 * n], axis=-1)
+
+    K1 = p["conv_w"].shape[0] - 1  # conv history length
+    hist = xBC if conv_state is None else jnp.concatenate([conv_state, xBC], axis=1)
+    if conv_state is None:
+        conv_out = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    else:
+        conv_out = _causal_conv(hist, p["conv_w"], p["conv_b"])[:, -S:, :]
+    # new conv state = last K1 raw inputs (zero-padded when the seq is short)
+    pad = max(0, K1 - hist.shape[1])
+    hist_p = jnp.pad(hist, ((0, 0), (pad, 0), (0, 0)))
+    new_conv_state = hist_p[:, hist_p.shape[1] - K1 :, :]
+    xBC_a = jax.nn.silu(conv_out)
+    x_in, B_, C_ = jnp.split(xBC_a, [d_in, d_in + n], axis=-1)
+    x_h = x_in.reshape(Bsz, S, h, ssm.head_dim)
+    dt_s = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,h)
+
+    if S % ssm.chunk == 0 and S > 1:
+        y, new_state = ssd_chunked(
+            x_h.astype(jnp.float32), dt_s, p["A_log"],
+            B_.astype(jnp.float32), C_.astype(jnp.float32),
+            ssm.chunk, init_state=state,
+        )
+    else:
+        # sequential fallback (decode / odd lengths): scan over time
+        A = -jnp.exp(p["A_log"])  # (h,)
+
+        def step(st, inp):
+            xt, dtt, Bt, Ct = inp  # (B,h,p), (B,h), (B,n), (B,n)
+            dA = jnp.exp(dtt * A)  # (B,h)
+            st = st * dA[..., None, None] + jnp.einsum(
+                "bhp,bn->bhpn", xt * dtt[..., None], Bt
+            )
+            yt = jnp.einsum("bhpn,bn->bhp", st, Ct)
+            return st, yt
+
+        s0 = (
+            jnp.zeros((Bsz, h, ssm.head_dim, n), jnp.float32)
+            if state is None
+            else state.astype(jnp.float32)
+        )
+        xs = (
+            jnp.moveaxis(x_h.astype(jnp.float32), 1, 0),
+            jnp.moveaxis(dt_s, 1, 0),
+            jnp.moveaxis(B_.astype(jnp.float32), 1, 0),
+            jnp.moveaxis(C_.astype(jnp.float32), 1, 0),
+        )
+        new_state, y_t = jax.lax.scan(step, s0, xs)
+        y = jnp.moveaxis(y_t, 0, 1)  # (B,S,h,p)
+
+    y = y + x_h.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(Bsz, S, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm"])
+    out = y @ p["out_proj"]
+    return out, (new_state, new_conv_state)

@@ -1,0 +1,74 @@
+"""Top-k MoE FFN with sort-based capacity dispatch (dropless up to capacity).
+
+Dispatch path (DESIGN.md §7): tokens are routed top-k, sorted by expert id,
+placed into an (E, C, D) buffer at their within-expert position (computed
+from a stable sort + exclusive cumsum of expert counts), processed with two
+batched einsums over the expert dim, and combined back with a scatter-add
+weighted by the renormalized gates. Under the production mesh the expert dim
+shards over `model` and tokens over `(pod, data)`; XLA inserts the
+all-to-all pair at the dispatch/combine boundaries.
+
+Capacity C = ceil(capacity_factor * T * k / E); overflow tokens drop (their
+residual path passes through unchanged) — standard capacity semantics.
+Returns the load-balancing aux loss (Switch-style) alongside the output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_dense
+
+
+def moe_init(key, d_model: int, moe_cfg, dtype):
+    ks = jax.random.split(key, 4)
+    E, F = moe_cfg.n_experts, moe_cfg.d_ff
+    return {
+        "router": init_dense(ks[0], (d_model, E), jnp.float32),
+        "w1": init_dense(ks[1], (E, d_model, F), dtype),
+        "w3": init_dense(ks[2], (E, d_model, F), dtype),
+        "w2": init_dense(ks[3], (E, F, d_model), dtype),
+    }
+
+
+def moe_apply(p, x, moe_cfg):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    B, S, D = x.shape
+    T = B * S
+    E, K = moe_cfg.n_experts, moe_cfg.top_k
+    C = max(1, int(moe_cfg.capacity_factor * T * K / E))
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(jnp.float32)) @ p["router"]  # (T, E) fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)  # (T, K)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    flat_e = eidx.reshape(-1)  # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    flat_g = gate.reshape(-1)
+
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    counts = jnp.bincount(flat_e, length=E)
+    seg_start = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * K) - seg_start[se]  # within-expert slot
+
+    # dispatch: out-of-capacity slots fall off via mode="drop"
+    buf = jnp.zeros((E, C, D), x.dtype)
+    buf = buf.at[se, pos].set(xt[st], mode="drop")
+
+    h1 = jnp.einsum("ecd,edf->ecf", buf, p["w1"])
+    h3 = jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+    h = jax.nn.silu(h1) * h3
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w2"])  # (E, C, D)
+
+    keep = (pos < C)[:, None]
+    vals = jnp.where(keep, out_e.at[se, pos].get(mode="fill", fill_value=0.0), 0.0)
+    out = jnp.zeros((T, D), x.dtype).at[st].add((vals * sg[:, None]).astype(x.dtype))
+
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    frac = counts.astype(jnp.float32) / (T * K)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac * mean_prob)
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,247 @@
+"""Decoder-only transformer LM covering the dense / moe / vlm families.
+
+Uniform layer stacks use lax.scan over stacked per-layer params (compact HLO
+for 96-layer models) with optional jax.checkpoint around the body; per-layer
+heterogeneity (gemma3's 5:1 local:global pattern, dual RoPE bases) rides
+along as scanned (L,)-shaped metadata so the body stays uniform. Small /
+heterogeneous archs use a python loop (cfg.unrolled).
+
+API (shared by every model class in this package):
+  init(key) -> params
+  loss(params, batch) -> (scalar, metrics)
+  prefill(params, batch) -> (last_logits, cache)
+  decode_step(params, cache, tokens) -> (logits, cache)
+  init_cache(batch_size, max_len) -> cache (abstract-friendly)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.sharding.hints import shard_hint
+from .layers import (
+    attn_apply,
+    attn_init,
+    cross_entropy,
+    init_dense,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+)
+from .moe import moe_apply, moe_init
+
+_NO_WINDOW = 1 << 30
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+class DecoderLM:
+    def __init__(self, cfg: ArchConfig, remat: str = "none"):
+        self.cfg = cfg
+        self.remat = remat
+        self.dtype = _dtype(cfg.param_dtype)
+
+    # -- params ------------------------------------------------------------
+    def _layer_init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        p = {
+            "ln1": jnp.zeros((cfg.d_model,), self.dtype),
+            "attn": attn_init(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, self.dtype),
+            "ln2": jnp.zeros((cfg.d_model,), self.dtype),
+        }
+        if cfg.moe is not None:
+            p["moe"] = moe_init(ks[1], cfg.d_model, cfg.moe, self.dtype)
+        else:
+            p["mlp"] = mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp, self.dtype)
+        return p
+
+    def init(self, key):
+        cfg = self.cfg
+        kemb, klayers, kout = jax.random.split(key, 3)
+        if cfg.unrolled:
+            layer_keys = jax.random.split(klayers, cfg.n_layers)
+            layers = [self._layer_init(k) for k in layer_keys]
+        else:
+            layer_keys = jax.random.split(klayers, cfg.n_layers)
+            layers = jax.vmap(self._layer_init)(layer_keys)
+        params = {
+            "embed": init_dense(kemb, (cfg.vocab, cfg.d_model), self.dtype),
+            "layers": layers,
+            "final_norm": jnp.zeros((cfg.d_model,), self.dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = init_dense(kout, (cfg.d_model, cfg.vocab), self.dtype)
+        return params
+
+    # -- per-layer meta (gemma3 local/global pattern) ------------------------
+    def _layer_meta(self):
+        cfg = self.cfg
+        L = cfg.n_layers
+        idx = jnp.arange(L)
+        if cfg.global_every:
+            is_global = (idx + 1) % cfg.global_every == 0
+        else:
+            is_global = jnp.ones((L,), bool) if cfg.window is None else jnp.zeros((L,), bool)
+        window = jnp.where(
+            is_global, _NO_WINDOW, cfg.window if cfg.window is not None else _NO_WINDOW
+        )
+        base_g = cfg.rope_base_global if cfg.rope_base_global else cfg.rope_base
+        ropeb = jnp.where(is_global, base_g, cfg.rope_base)
+        return window.astype(jnp.int32), ropeb.astype(jnp.float32)
+
+    # -- blocks --------------------------------------------------------------
+    def _block(self, p, x, window, rope_base, cache=None, cache_pos=None):
+        cfg = self.cfg
+        h, new_cache = attn_apply(
+            p["attn"],
+            rmsnorm(x, p["ln1"], cfg.norm_eps),
+            rope_base=rope_base,
+            causal=True,
+            window=window,
+            cache=cache,
+            cache_pos=cache_pos,
+        )
+        x = x + h
+        hin = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            h2, aux = moe_apply(p["moe"], hin, cfg.moe)
+        else:
+            h2, aux = mlp_apply(p["mlp"], hin, cfg.mlp), 0.0
+        return x + h2, new_cache, aux
+
+    # -- forward -------------------------------------------------------------
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        h = params["embed"][batch["tokens"]]  # (B, S, D)
+        if cfg.tie_embeddings:
+            h = h * jnp.asarray(cfg.d_model**0.5, h.dtype)
+        if cfg.family == "vlm" and "image_embeds" in batch:
+            P = batch["image_embeds"].shape[1]
+            h = jax.lax.dynamic_update_slice(
+                h, batch["image_embeds"].astype(h.dtype), (0, 0, 0)
+            )
+        return h
+
+    def _unembed(self, params, h):
+        cfg = self.cfg
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        logits = jnp.einsum("bsd,dv->bsv", h, w)
+        # Keep logits vocab-sharded: for tied embeddings the contraction runs
+        # over the model-sharded d_model, and without this hint GSPMD emits
+        # REPLICATED (B, S, V) logits — 68 GB/device f32 at gemma3's 262k
+        # vocab (EXPERIMENTS.md §Perf H2: 224 GB -> fits).
+        return shard_hint(logits, ("dp", None, "tp"))
+
+    def _stack(self, params, h, cache=None, cache_pos=None):
+        """Run all layers. Returns (h, new_cache, aux_sum)."""
+        cfg = self.cfg
+        window, ropeb = self._layer_meta()
+        if cfg.unrolled:
+            new_caches = []
+            aux = 0.0
+            for i in range(cfg.n_layers):
+                c = None if cache is None else jax.tree.map(lambda a: a[i], cache)
+                h, nc, a = self._block(
+                    params["layers"][i], h, int(window[i]), float(ropeb[i]),
+                    cache=c, cache_pos=cache_pos,
+                )
+                aux = aux + a
+                if nc is not None:
+                    new_caches.append(nc)
+            nc_st = (
+                jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+                if new_caches
+                else None
+            )
+            return h, nc_st, aux
+
+        def body(carry, xs):
+            h = carry
+            if cache is None:
+                lp, win, rb = xs
+                c = None
+            else:
+                lp, win, rb, c = xs
+            # Sequence parallelism: layer-boundary activations shard over
+            # (dp, tp) — at 340B/4k this moves the saved-for-backward
+            # boundaries from 151 MB to 9.4 MB per layer per device
+            # (EXPERIMENTS.md §Perf H1). GSPMD inserts the all-gather /
+            # reduce-scatter pair around attention/MLP automatically.
+            # NOT for MoE: the dispatch sort wants tokens dp-sharded only;
+            # a seq-sharded boundary forces ~10x collective volume
+            # (refuted sub-hypothesis H1b, EXPERIMENTS.md §Perf).
+            seq_par = cache is None and self.cfg.moe is None
+            if seq_par:
+                h = shard_hint(h, ("dp", "tp", None))
+            h, nc, a = self._block(lp, h, win, rb, cache=c, cache_pos=cache_pos)
+            if seq_par:
+                h = shard_hint(h, ("dp", "tp", None))
+            return h, (nc, a)
+
+        if self.remat != "none":
+            policy = (
+                None
+                if self.remat == "full"
+                else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            )
+            body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+
+        xs = (params["layers"], window, ropeb)
+        if cache is not None:
+            xs = xs + (cache,)
+        h, (new_cache, aux) = jax.lax.scan(body, h, xs)
+        return h, new_cache, jnp.sum(aux) if cfg.moe is not None else 0.0
+
+    # -- public API ------------------------------------------------------------
+    def loss(self, params, batch):
+        h = self._embed(params, batch)
+        h, _, aux = self._stack(params, h)
+        logits = self._unembed(params, h)
+        targets = batch["targets"]
+        if self.cfg.family == "vlm" and "image_embeds" in batch:
+            P = batch["image_embeds"].shape[1]
+            pos = jnp.arange(targets.shape[1])[None, :]
+            targets = jnp.where(pos < P, -1, targets)
+        ce = cross_entropy(logits, targets)
+        total = ce + 0.01 * aux
+        return total, {"ce": ce, "aux": aux}
+
+    def init_cache(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        shape = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.hd)
+        return {
+            "k": jnp.zeros(shape, self.dtype),
+            "v": jnp.zeros(shape, self.dtype),
+        }
+
+    def prefill(self, params, batch):
+        """Full forward building the cache; returns (last_logits, cache)."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        h = self._embed(params, batch)
+        cache0 = self.init_cache(B, batch.get("max_len", S))
+        h, cache, _ = self._stack(params, h, cache=cache0, cache_pos=0)
+        logits = self._unembed(params, h[:, -1:, :])
+        return logits[:, 0, :], {"kv": cache, "pos": jnp.asarray(S, jnp.int32)}
+
+    def decode_step(self, params, cache, tokens):
+        """tokens: (B, 1). Returns (logits (B, V), cache)."""
+        h = self._embed(params, {"tokens": tokens})
+        h, kv, _ = self._stack(params, h, cache=cache["kv"], cache_pos=cache["pos"])
+        logits = self._unembed(params, h)
+        return logits[:, 0, :], {"kv": kv, "pos": cache["pos"] + tokens.shape[1]}
+
+    def decode_state(self, batch_size: int, max_len: int):
+        """Full decode-time state (cache + position) for input_specs."""
+        return {
+            "kv": self.init_cache(batch_size, max_len),
+            "pos": jnp.asarray(max_len - 1, jnp.int32),
+        }

@@ -1,0 +1,193 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel/stabilized form) and sLSTM
+(scalar memory, strictly sequential), wired per the xLSTM-125M layout
+(1 sLSTM per `slstm_every` blocks, the rest mLSTM; no separate FFN).
+
+mLSTM trains with the quadratic stabilized parallel form and decodes with the
+O(1) recurrent form (equivalence is property-tested); sLSTM always scans over
+time. Both are constant-state in decode, which is what qualifies xlstm-125m
+for the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_dense, rmsnorm
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, d_model: int, n_heads: int, dtype):
+    d_in = 2 * d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": jnp.zeros((d_model,), dtype),
+        "w_up": init_dense(ks[0], (d_model, 2 * d_in), dtype),  # u, g
+        "conv_w": init_dense(ks[1], (4, d_in), dtype, scale=2.0),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "wq": init_dense(ks[2], (d_in, d_in), dtype),
+        "wk": init_dense(ks[3], (d_in, d_in), dtype),
+        "wv": init_dense(ks[4], (d_in, d_in), dtype),
+        "w_if": init_dense(ks[5], (d_in, 2 * n_heads), dtype),
+        "if_bias": jnp.concatenate(
+            [jnp.zeros((n_heads,), jnp.float32), 3.0 * jnp.ones((n_heads,), jnp.float32)]
+        ),
+        "w_down": init_dense(ks[6], (d_in, d_model), dtype),
+    }
+
+
+def _conv4(x, w, b):
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(K)) + b
+
+
+def mlstm_parallel(q, k, v, i_pre, f_pre):
+    """q,k,v: (B,S,H,hd); i_pre,f_pre: (B,S,H). Returns (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))  # (B,S,H)
+    F = jnp.cumsum(logf, axis=1)
+    # D[t,s] = F[t] - F[s] + i[s]  (s <= t)
+    D = F[:, :, None, :] - F[:, None, :, :] + i_pre.astype(jnp.float32)[:, None, :, :]
+    tri = jnp.tril(jnp.ones((S, S), bool))[None, :, :, None]
+    D = jnp.where(tri, D, _NEG)  # (B,T,S,H)
+    m = jnp.max(D, axis=2)  # (B,T,H)
+    Smat = jnp.exp(D - m[:, :, None, :])
+    qk = jnp.einsum("bthd,bshd->btsh", q.astype(jnp.float32), k.astype(jnp.float32))
+    w = qk / (hd**0.5) * Smat
+    denom = jnp.maximum(jnp.abs(jnp.sum(w, axis=2)), jnp.exp(-m))  # (B,T,H)
+    y = jnp.einsum("btsh,bshd->bthd", w, v.astype(jnp.float32))
+    return (y / denom[..., None]).astype(q.dtype)
+
+
+def mlstm_step(state, q, k, v, i_pre, f_pre):
+    """O(1) recurrence. state: (C (B,H,hd,hd), n (B,H,hd), m (B,H)).
+    q,k,v: (B,H,hd); gates: (B,H). Returns (y (B,H,hd), new_state)."""
+    C, n, m = state
+    hd = q.shape[-1]
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    i = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(logf + m, i)
+    fprime = jnp.exp(logf + m - m_new)
+    iprime = jnp.exp(i - m_new)
+    k32, v32, q32 = (a.astype(jnp.float32) for a in (k, v, q))
+    C = fprime[..., None, None] * C + iprime[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", v32, k32
+    )
+    n = fprime[..., None] * n + iprime[..., None] * k32
+    num = jnp.einsum("bhde,bhe->bhd", C, q32) / (hd**0.5)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", n, q32)) / (hd**0.5), jnp.exp(-m_new)
+    )
+    y = num / den[..., None]
+    return y.astype(q.dtype), (C, n, m_new)
+
+
+def mlstm_block(p, x, n_heads: int, *, state=None, conv_state=None):
+    """x: (B,S,D). state=(C,n,m) for decode. Returns (out, new_states)."""
+    B, S, D = x.shape
+    d_in = 2 * D
+    hd = d_in // n_heads
+    hin = rmsnorm(x, p["ln"])
+    ug = hin @ p["w_up"]
+    u, g = jnp.split(ug, 2, axis=-1)
+    hist = u if conv_state is None else jnp.concatenate([conv_state, u], axis=1)
+    cv = _conv4(hist, p["conv_w"], p["conv_b"])
+    if conv_state is not None:
+        cv = cv[:, -S:, :]
+    pad = max(0, 3 - hist.shape[1])
+    new_conv = jnp.pad(hist, ((0, 0), (pad, 0), (0, 0)))[:, -3:, :]
+    c_act = jax.nn.silu(cv)
+    q = (c_act @ p["wq"]).reshape(B, S, n_heads, hd)
+    k = (c_act @ p["wk"]).reshape(B, S, n_heads, hd)
+    v = (u @ p["wv"]).reshape(B, S, n_heads, hd)
+    if_pre = c_act @ p["w_if"] + p["if_bias"]
+    i_pre, f_pre = jnp.split(if_pre, 2, axis=-1)  # (B,S,H)
+
+    if state is None and S > 1:
+        y = mlstm_parallel(q, k, v, i_pre, f_pre)
+        new_state = None  # training path does not thread state
+    else:
+        st = state
+        if st is None:
+            st = (
+                jnp.zeros((B, n_heads, hd, hd), jnp.float32),
+                jnp.zeros((B, n_heads, hd), jnp.float32),
+                jnp.full((B, n_heads), 0.0, jnp.float32),
+            )
+
+        def step(carry, inp):
+            qt, kt, vt, it, ft = inp
+            yt, carry = mlstm_step(carry, qt, kt, vt, it, ft)
+            return carry, yt
+
+        xs = tuple(
+            jnp.moveaxis(a, 1, 0) for a in (q, k, v, i_pre, f_pre)
+        )
+        new_state, ys = jax.lax.scan(step, st, xs)
+        y = jnp.moveaxis(ys, 0, 1)
+    y = y.reshape(B, S, d_in) * jax.nn.silu(g)
+    return x + y @ p["w_down"], (new_state, new_conv)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, d_model: int, n_heads: int, dtype):
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": jnp.zeros((d_model,), dtype),
+        "W": init_dense(ks[0], (d_model, 4 * d_model), dtype),  # z i f o
+        "R": init_dense(ks[1], (n_heads, dh, 4 * dh), dtype),  # block-diag recurrent
+        "bias": jnp.zeros((4 * d_model,), jnp.float32),
+        "w_out": init_dense(ks[2], (d_model, d_model), dtype),
+    }
+
+
+def slstm_block(p, x, n_heads: int, *, state=None):
+    """x: (B,S,D). state=(c,n,m,h) each (B,D)-shaped (m,(B,H))."""
+    B, S, D = x.shape
+    dh = D // n_heads
+    hin = rmsnorm(x, p["ln"])
+    wx = (hin @ p["W"] + p["bias"].astype(hin.dtype)).astype(jnp.float32)  # (B,S,4D)
+
+    if state is None:
+        c0 = jnp.zeros((B, D), jnp.float32)
+        n0 = jnp.ones((B, D), jnp.float32)
+        m0 = jnp.zeros((B, n_heads), jnp.float32)
+        h0 = jnp.zeros((B, D), jnp.float32)
+    else:
+        c0, n0, m0, h0 = state
+
+    R = p["R"].astype(jnp.float32)
+
+    def step(carry, wx_t):
+        c, n, m, h = carry
+        hh = h.reshape(B, n_heads, dh)
+        rec = jnp.einsum("bhd,hde->bhe", hh, R).reshape(B, 4 * D)
+        z_, i_, f_, o_ = jnp.split(wx_t + rec, 4, axis=-1)  # (B,D) each
+        ih = i_.reshape(B, n_heads, dh)
+        fh = f_.reshape(B, n_heads, dh)
+        # stabilizer per head (max over units for a shared head-level m)
+        logf = jax.nn.log_sigmoid(fh)
+        m_new = jnp.maximum(jnp.max(logf, -1) + m, jnp.max(ih, -1))  # (B,H)
+        iprime = jnp.exp(ih - m_new[..., None]).reshape(B, D)
+        fprime = jnp.exp(logf + (m - m_new)[..., None]).reshape(B, D)
+        z = jnp.tanh(z_)
+        o = jax.nn.sigmoid(o_)
+        c = fprime * c + iprime * z
+        n = fprime * n + iprime
+        h = o * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, h), h
+
+    (c, n, m, h), hs = jax.lax.scan(step, (c0, n0, m0, h0), jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)  # (B,S,D)
+    return x + y @ p["w_out"], (c, n, m, h)

@@ -1,0 +1,80 @@
+"""Hand-rolled AdamW (no optax in this environment).
+
+Moments dtype is configurable per ArchConfig (`moment_dtype`): fp32 default;
+bf16 for the 340B config so params+moments fit 16 GB/chip at 256 chips
+(2+2+2 bytes/param, DESIGN.md §7). Moments inherit the param sharding, so the
+optimizer is ZeRO-3-style fully sharded under the production mesh.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: dict
+    v: dict
+    step: jax.Array
+
+
+def init(params, moment_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda x: jnp.zeros(x.shape, moment_dtype)
+    return AdamWState(
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def update(
+    grads,
+    state: AdamWState,
+    params,
+    *,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    bc1 = 1.0 - b1**step.astype(jnp.float32)
+    bc2 = 1.0 - b2**step.astype(jnp.float32)
+
+    def upd_block(g, m, v, p):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * b1 + (1.0 - b1) * g32
+        v32 = v.astype(jnp.float32) * b2 + (1.0 - b2) * g32 * g32
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, m32.astype(m.dtype), v32.astype(v.dtype)
+
+    # NOTE (§Perf H5, refuted): chunking stacked-leaf updates with lax.map
+    # to shrink f32 temporaries INCREASED peak memory 34 -> 47 GB at 340B —
+    # the loop boundary breaks donation aliasing and forces whole-leaf
+    # copies. Whole-leaf fused elementwise updates win; keep upd_block.
+    out = jax.tree.map(upd_block, grads, state.m, state.v, params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return (
+        new_params,
+        AdamWState(m=new_m, v=new_v, step=step),
+        {"grad_norm": gnorm},
+    )

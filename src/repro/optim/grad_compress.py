@@ -1,0 +1,98 @@
+"""Gradient compression for the cross-pod axis: top-k + error feedback, and
+int8 quantization with per-tensor scales.
+
+Used when the inter-pod link is the bottleneck (the `pod` axis of the
+production mesh crosses DCN, not ICI). The compressor runs inside a
+shard_map over the pod axis: each pod compresses its local gradient shard,
+exchanges the compressed representation, and accumulates the residual into
+an error-feedback buffer so the compression is unbiased over time
+(Stich et al.; 1-bit Adam lineage).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: dict  # same structure/dtype as grads
+
+
+def ef_init(grads_like):
+    return EFState(residual=jax.tree.map(lambda x: jnp.zeros_like(x), grads_like))
+
+
+def topk_compress(x: jax.Array, frac: float) -> Tuple[jax.Array, jax.Array]:
+    """Keep the largest-|.| `frac` of entries. Returns (values, flat_idx)."""
+    flat = x.reshape(-1)
+    k = max(1, int(frac * flat.shape[0]))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx
+
+
+def topk_decompress(vals, idx, shape, dtype):
+    flat = jnp.zeros((int(jnp.prod(jnp.asarray(shape))),), dtype)
+    return flat.at[idx].set(vals.astype(dtype)).reshape(shape)
+
+
+def int8_quant(x: jax.Array):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequant(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads_topk(grads, ef: EFState, frac: float):
+    """Error-feedback top-k: returns (sparse_grads_dense, new_ef).
+
+    The returned tree is dense (decompressed) so it can flow into any
+    optimizer; the information bottleneck (what would cross the wire) is
+    exactly the (vals, idx) pairs — bytes accounting in benchmarks/.
+    """
+
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r.astype(jnp.float32)
+        vals, idx = topk_compress(acc, frac)
+        dense = topk_decompress(vals, idx, g.shape, jnp.float32)
+        return dense.astype(g.dtype), (acc - dense).astype(r.dtype)
+
+    out = jax.tree.map(one, grads, ef.residual)
+    dense = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    resid = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return dense, EFState(residual=resid)
+
+
+def compressed_psum_pods(grads, mesh, frac: float, ef: EFState):
+    """all-reduce gradients across the pod axis with top-k compression.
+
+    Dense psum over ICI axes happens implicitly in the train step (GSPMD);
+    this wraps ONLY the pod axis: g_pod = psum_pod(topk(g)) / n_pods.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def local(g_tree, r_tree):
+        def one(g, r):
+            acc = g.astype(jnp.float32) + r.astype(jnp.float32)
+            vals, idx = topk_compress(acc, frac)
+            dense = topk_decompress(vals, idx, g.shape, jnp.float32)
+            reduced = jax.lax.psum(dense, "pod") / mesh.shape["pod"]
+            return reduced.astype(g.dtype), (acc - dense).astype(r.dtype)
+
+        out = jax.tree.map(one, g_tree, r_tree)
+        dense = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        resid = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        return dense, EFState(residual=resid)
+
+    fn = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    return fn(grads, ef)

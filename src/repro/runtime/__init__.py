@@ -1,0 +1,17 @@
+from .fault_tolerance import (
+    InjectedFailure,
+    RunReport,
+    StragglerPolicy,
+    rebalance_ranges,
+    remesh_state,
+    run_with_restarts,
+)
+
+__all__ = [
+    "InjectedFailure",
+    "RunReport",
+    "StragglerPolicy",
+    "rebalance_ranges",
+    "remesh_state",
+    "run_with_restarts",
+]

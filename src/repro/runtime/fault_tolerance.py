@@ -1,0 +1,133 @@
+"""Fault-tolerance runtime: checkpointed training driver with restart, range
+re-assignment for stragglers/failures, and elastic re-meshing.
+
+Design for 1000+ nodes (DESIGN.md §8):
+- the training driver checkpoints every `ckpt_every` steps (atomic manifest
+  commit) and restarts from the last durable state after any failure;
+- stream work is assigned as contiguous [start, end) ranges; a failed or
+  straggling shard's range is re-issued to survivors (`rebalance_ranges`).
+  The StreamSVM ball merge is order-insensitive (commutative fold, property-
+  tested), so re-assignment does not change the model class;
+- `remesh_state` restores a checkpoint onto a different mesh (elastic scale
+  up/down) by re-slicing — sharding lives in the restore target, not the
+  checkpoint (see checkpoint/ckpt.py).
+
+The injected-failure test (tests/test_fault_tolerance.py) proves
+bit-equivalent recovery: train K steps with a crash at step j == train K
+steps without a crash.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.checkpoint import ckpt
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class RunReport:
+    steps_done: int
+    restarts: int
+    metrics: list
+
+
+def run_with_restarts(
+    step_fn: Callable,
+    state,
+    batches: Sequence,
+    *,
+    ckpt_dir: str,
+    ckpt_every: int = 10,
+    fail_at: Optional[Sequence[int]] = None,
+    max_restarts: int = 8,
+    shardings=None,
+) -> Tuple[object, RunReport]:
+    """Run `step_fn` over `batches` with checkpoint/restart semantics.
+
+    `fail_at`: steps at which an InjectedFailure fires *after* the step
+    executes but *before* its checkpoint would commit — the worst case
+    (work lost back to the last checkpoint).
+    """
+    fail_at = set(fail_at or ())
+    restarts = 0
+    metrics_log: list = []
+
+    while True:
+        # resume point
+        if ckpt.exists(ckpt_dir):
+            meta = ckpt.load_meta(ckpt_dir)
+            start = int(meta["step"])
+            state = ckpt.restore(ckpt_dir, state, shardings=shardings)
+        else:
+            start = 0
+            ckpt.save(ckpt_dir, state, meta={"step": 0})
+        try:
+            for i in range(start, len(batches)):
+                state, m = step_fn(state, batches[i])
+                if (i + 1) in fail_at:
+                    fail_at.discard(i + 1)
+                    raise InjectedFailure(f"injected at step {i + 1}")
+                if (i + 1) % ckpt_every == 0 or (i + 1) == len(batches):
+                    ckpt.save(ckpt_dir, state, meta={"step": i + 1})
+                metrics_log.append(m)
+            return state, RunReport(len(batches), restarts, metrics_log)
+        except InjectedFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+
+
+def rebalance_ranges(
+    ranges: List[Tuple[int, int]], dead: Iterable[int]
+) -> List[Tuple[int, int]]:
+    """Re-issue dead shards' [start, end) ranges to survivors (round-robin
+    splits). Survivor count = len(ranges) - len(dead); each dead range is
+    split evenly among survivors, appended to their work queues."""
+    dead = set(dead)
+    survivors = [i for i in range(len(ranges)) if i not in dead]
+    assert survivors, "no survivors"
+    out = {i: [ranges[i]] for i in survivors}
+    for d in dead:
+        lo, hi = ranges[d]
+        n = len(survivors)
+        width = (hi - lo + n - 1) // n
+        for j, s in enumerate(survivors):
+            a = lo + j * width
+            b = min(lo + (j + 1) * width, hi)
+            if a < b:
+                out[s].append((a, b))
+    return [r for s in survivors for r in out[s]]
+
+
+def remesh_state(ckpt_dir: str, target_state, new_mesh, sharding_fn):
+    """Elastic rescale: restore onto `new_mesh` with shardings from
+    `sharding_fn(target_state, new_mesh)`."""
+    shardings = sharding_fn(target_state, new_mesh)
+    return ckpt.restore(ckpt_dir, target_state, shardings=shardings)
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Deadline-based straggler mitigation for the streaming fit.
+
+    In a real deployment the controller observes per-shard heartbeats; here
+    the policy object carries the decision logic (pure, testable): after
+    `deadline_factor` x median shard time, a shard is declared straggling and
+    its remaining range re-issued via rebalance_ranges. Because ball merging
+    is commutative and idempotent-per-example-set, duplicated suffixes are
+    avoided by splitting at the straggler's last-acked position.
+    """
+
+    deadline_factor: float = 3.0
+
+    def stragglers(self, elapsed: Sequence[float]) -> List[int]:
+        if not elapsed:
+            return []
+        med = sorted(elapsed)[len(elapsed) // 2]
+        return [i for i, t in enumerate(elapsed) if t > self.deadline_factor * max(med, 1e-9)]

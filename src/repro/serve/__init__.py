@@ -1,0 +1,3 @@
+from .scheduler import ContinuousBatcher, Request, SchedulerStats
+
+__all__ = ["ContinuousBatcher", "Request", "SchedulerStats"]

@@ -1,0 +1,13 @@
+from .rules import (
+    batch_spec,
+    cache_spec,
+    mesh_mapping,
+    param_spec,
+    params_shardings,
+    tree_shardings,
+)
+
+__all__ = [
+    "batch_spec", "cache_spec", "mesh_mapping", "param_spec",
+    "params_shardings", "tree_shardings",
+]

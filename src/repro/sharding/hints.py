@@ -1,0 +1,65 @@
+"""Mesh-aware sharding hints usable from model code.
+
+`shard_hint(x, dims)` applies lax.with_sharding_constraint when an abstract
+mesh with the referenced axes is ambient, and is a no-op otherwise (smoke
+tests / single-device runs). Logical dims:
+
+  "dp"  -> the data-parallel axes ("pod","data") or ("data",)
+  "tp"  -> the tensor-parallel axis ("model",)
+  None  -> unsharded
+
+Divisibility-guarded like rules.py: a dim that does not divide is left
+unsharded rather than failing.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _ambient_mesh():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and m.axis_names:
+            return m
+    except Exception:  # pragma: no cover - API drift guard
+        pass
+    try:  # `with mesh:` context (legacy resource env)
+        from jax._src.mesh import thread_resources
+
+        pm = thread_resources.env.physical_mesh
+        if pm is not None and pm.axis_names:
+            return pm
+    except Exception:  # pragma: no cover
+        pass
+    return None
+
+
+def shard_hint(x, dims):
+    """dims: tuple of "dp" | "tp" | None, one per array dim."""
+    m = _ambient_mesh()
+    if m is None:
+        return x
+    names = set(m.axis_names)
+    if "model" not in names or "data" not in names:
+        return x
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    sizes = {a: m.shape[a] for a in m.axis_names}
+
+    def size_of(tag):
+        if tag == "tp":
+            return sizes.get("model", 1)
+        n = 1
+        for a in dp:
+            n *= sizes[a]
+        return n
+
+    spec = []
+    for tag, dim in zip(dims, x.shape):
+        if tag is None or dim % size_of(tag) != 0:
+            spec.append(None)
+        elif tag == "tp":
+            spec.append("model")
+        else:
+            spec.append(dp if len(dp) > 1 else dp[0])
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,231 @@
+"""Logical-axis sharding rules: param/batch/cache pytrees -> PartitionSpecs.
+
+Two-level scheme (MaxText-style): leaf paths map to tuples of *logical* axes
+by name-based rules; a mesh mapping resolves logical axes to mesh axes.
+Default mapping:
+
+  tensor-parallel axes (heads / ff / experts / vocab / d_inner) -> "model"
+  fully-sharded-data-parallel axis (the remaining large dim)     -> dp axes
+                                       ("pod","data") or ("data",)
+  batch dims of activations/caches                               -> dp axes
+  KV-cache sequence dim                                          -> "model"
+    (decode attention then reduces over the sharded seq with tiny
+     all-reduces — flash-decoding; see layers.direct_attention)
+
+Any axis whose size does not divide the mesh-axis product is silently
+replicated (kv=1 MQA, kv=4 GQA with model=16, 4-head xlstm states, ...).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+
+# leaf-name -> logical axes (without the optional leading layer-stack dim)
+PARAM_RULES: Dict[str, Tuple] = {
+    # embed: vocab UNsharded so the token gather stays local (a vocab-sharded
+    # table forces SPMD full-rematerialization of the gather); d_model -> tp.
+    "embed": (None, "tp"),
+    "unembed": ("fsdp", "vocab"),
+    "wq": ("fsdp", "tp", None),
+    "wk": ("fsdp", "tp", None),
+    "wv": ("fsdp", "tp", None),
+    "wo": ("tp", None, "fsdp"),
+    "w1": ("fsdp", "tp"),
+    "w3": ("fsdp", "tp"),
+    "w2": ("tp", "fsdp"),
+    "router": ("fsdp", None),
+    # moe expert weights carry a leading experts dim (handled via ndim)
+    "in_proj": ("fsdp", "tp"),
+    "out_proj": ("tp", "fsdp"),
+    "conv_w": (None, "tp"),
+    "conv_b": ("tp",),
+    "w_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),
+    "w_out": ("tp", "fsdp"),
+    "W": ("fsdp", "tp"),
+    "R": (None, None, None),
+    "w_if": ("fsdp", None),
+}
+
+MOE_RULES: Dict[str, Tuple] = {
+    "w1": ("expert", "fsdp", None),
+    "w3": ("expert", "fsdp", None),
+    "w2": ("expert", None, "fsdp"),
+}
+
+DEFAULT_MAPPING: Dict[str, Any] = {
+    "vocab": "model",
+    "tp": "model",
+    "expert": "model",
+    "fsdp": ("data",),  # extended with "pod" on multi-pod meshes
+    "dp": ("data",),
+    "kvseq": "model",
+}
+
+
+def mesh_mapping(mesh: Mesh) -> Dict[str, Any]:
+    m = dict(DEFAULT_MAPPING)
+    if "pod" in mesh.axis_names:
+        m["fsdp"] = ("pod", "data")
+        m["dp"] = ("pod", "data")
+    return m
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _resolve(logical: Tuple, shape, mesh: Mesh, mapping) -> P:
+    spec = []
+    for ax_name, dim in zip(logical, shape):
+        axes = mapping.get(ax_name) if ax_name else None
+        if axes is not None and dim % _axis_size(mesh, axes) == 0:
+            spec.append(axes)
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def _path_names(path) -> list:
+    out = []
+    for k in path:
+        if isinstance(k, DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            out.append(int(k.idx))
+    return out
+
+
+def param_spec(path, leaf, mesh: Mesh, mapping=None) -> P:
+    mapping = mapping or mesh_mapping(mesh)
+    names = _path_names(path)
+    key = next((n for n in reversed(names) if isinstance(n, str)), "")
+    in_moe = "moe" in names
+    rules = MOE_RULES if (in_moe and key in MOE_RULES) else PARAM_RULES
+    rule = rules.get(key)
+    shape = leaf.shape
+    if rule is None:
+        return P()  # norms, biases, scalars -> replicate
+    if len(shape) == len(rule) + 1:  # stacked layer dim
+        rule = (None,) + rule
+    if len(shape) != len(rule):
+        return P()
+    return _resolve(rule, shape, mesh, mapping)
+
+
+def params_shardings(params, mesh: Mesh):
+    mapping = mesh_mapping(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: NamedSharding(mesh, param_spec(p, x, mesh, mapping)), params
+    )
+
+
+# ---------------------------------------------------------------------------
+# batch / cache / state specs
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(path, leaf, mesh: Mesh, mapping=None) -> P:
+    """Input batches: shard dim 0 (global batch) over dp axes."""
+    mapping = mapping or mesh_mapping(mesh)
+    dp = mapping["dp"]
+    if leaf.shape and leaf.shape[0] % _axis_size(mesh, dp) == 0:
+        return P(dp, *([None] * (len(leaf.shape) - 1)))
+    return P()
+
+
+def cache_spec(path, leaf, mesh: Mesh, mapping=None) -> P:
+    """KV caches and recurrent states.
+
+    5-D (L, B, S, KV, hd): batch->dp, seq->model (flash-decoding layout).
+    4-D (B, S, KV, hd) or (B, H, p, n) ssm state: batch->dp, dim1 (seq or
+    heads)->model when divisible.
+    Other ranks: batch->dp only.
+    """
+    mapping = mapping or mesh_mapping(mesh)
+    dp, tp = mapping["dp"], mapping["tp"]
+    names = _path_names(path)
+    shape = leaf.shape
+    dp_ok = lambda d: d % _axis_size(mesh, dp) == 0
+    tp_ok = lambda d: d % _axis_size(mesh, tp) == 0
+
+    if len(shape) == 5 and ("k" in names or "v" in names):
+        return P(
+            None,
+            dp if dp_ok(shape[1]) else None,
+            tp if tp_ok(shape[2]) else None,
+            None,
+            None,
+        )
+    if len(shape) == 4:
+        return P(
+            dp if dp_ok(shape[0]) else None,
+            tp if tp_ok(shape[1]) else None,
+            None,
+            None,
+        )
+    if len(shape) >= 1 and shape and dp_ok(shape[0]):
+        return P(dp, *([None] * (len(shape) - 1)))
+    return P()
+
+
+def tree_shardings(tree, mesh: Mesh, spec_fn):
+    mapping = mesh_mapping(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: NamedSharding(mesh, spec_fn(p, x, mesh, mapping)), tree
+    )
+
+
+# ---------------------------------------------------------------------------
+# serve-v2: weight-stationary decode layout (EXPERIMENTS.md §Perf H3)
+#
+# Baseline decode shards the global batch over dp and leaves weights
+# FSDP(data)-sharded — every step re-gathers ~P bytes of weights. v2 keeps
+# the identical 2-D weight sharding but maps the *data flow* so weights never
+# move: batch -> model axis, KV-cache sequence -> data axis. Matmuls contract
+# over the data-sharded d_model/ff dims (partial products + small activation
+# all-reduces); decode attention reduces over the data-sharded sequence with
+# flash-decoding partial-softmax combines. Collective bytes drop from
+# O(P) to O(L * B * d) per token.
+# ---------------------------------------------------------------------------
+
+
+def serve_batch_spec(path, leaf, mesh: Mesh, mapping=None) -> P:
+    mapping = mapping or mesh_mapping(mesh)
+    tp = mapping["tp"]
+    if leaf.shape and leaf.shape[0] % _axis_size(mesh, tp) == 0:
+        return P(tp, *([None] * (len(leaf.shape) - 1)))
+    return P()
+
+
+def serve_cache_spec(path, leaf, mesh: Mesh, mapping=None) -> P:
+    mapping = mapping or mesh_mapping(mesh)
+    dp, tp = mapping["dp"], mapping["tp"]
+    names = _path_names(path)
+    shape = leaf.shape
+    tp_ok = lambda d: d % _axis_size(mesh, tp) == 0
+    dp_ok = lambda d: d % _axis_size(mesh, dp) == 0
+    if len(shape) == 5 and ("k" in names or "v" in names):
+        return P(
+            None,
+            tp if tp_ok(shape[1]) else None,   # batch -> model
+            dp if dp_ok(shape[2]) else None,   # seq   -> data
+            None,
+            None,
+        )
+    if len(shape) == 4:  # recurrent states: batch -> model
+        return P(tp if tp_ok(shape[0]) else None, None, None, None)
+    if len(shape) >= 1 and shape and tp_ok(shape[0]):
+        return P(tp, *([None] * (len(shape) - 1)))
+    return P()

@@ -1,0 +1,3 @@
+from .train_loop import TrainCfg, init_state, make_train_step
+
+__all__ = ["TrainCfg", "init_state", "make_train_step"]

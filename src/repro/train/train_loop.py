@@ -1,0 +1,89 @@
+"""Training step factory: microbatch gradient accumulation, remat, AdamW.
+
+make_train_step(model, tcfg) returns a pure (state, batch) -> (state, metrics)
+suitable for jax.jit with donated state. Microbatching reshapes the global
+batch (B, ...) to (A, B/A, ...) and lax.scans the accumulation — this is what
+bounds activation memory for the big dry-run configs (B_shard / A tokens live
+at once); remat is configured on the model (scan-over-layers body).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw, schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainCfg:
+    microbatches: int = 1
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+
+
+def init_state(model, key, tcfg: TrainCfg):
+    params = model.init(key)
+    mdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[tcfg.moment_dtype]
+    return {"params": params, "opt": adamw.init(params, mdt)}
+
+
+def make_train_step(model, tcfg: TrainCfg):
+    A = tcfg.microbatches
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        if A == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(A, b // A, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), mbs
+            )
+            grads = jax.tree.map(lambda g: g / A, grads)
+            loss = loss_sum / A
+            metrics = {}
+
+        lr = schedule.warmup_cosine(
+            state["opt"].step,
+            peak_lr=tcfg.peak_lr,
+            warmup_steps=tcfg.warmup_steps,
+            total_steps=tcfg.total_steps,
+        )
+        new_params, new_opt, opt_metrics = adamw.update(
+            grads,
+            state["opt"],
+            params,
+            lr=lr,
+            weight_decay=tcfg.weight_decay,
+            grad_clip=tcfg.grad_clip,
+        )
+        out_metrics = {"loss": loss, "lr": lr, **opt_metrics}
+        return {"params": new_params, "opt": new_opt}, out_metrics
+
+    return train_step

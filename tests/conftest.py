@@ -1,0 +1,8 @@
+# NOTE: no XLA_FLAGS here by design — smoke tests and benches must see the
+# real single CPU device; multi-device tests spawn subprocesses, and the
+# dry-run sets --xla_force_host_platform_device_count=512 itself.
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running (subprocess/multi-device)")

@@ -1,0 +1,98 @@
+"""Baselines sanity + dataset generators (shapes, balance, determinism)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.baselines import (
+    fit_batch_l2svm,
+    fit_cvm,
+    fit_lasvm,
+    fit_pegasos,
+    fit_perceptron,
+)
+from repro.data import DATASETS, load_dataset, preprocess_for
+from repro.data.preprocess import l2_normalize
+
+
+def _sep_data(n=2000, d=10, margin=1.5, seed=0):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=d)
+    w /= np.linalg.norm(w)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    y = np.sign(X @ w).astype(np.float32)
+    X += margin * y[:, None] * w[None, :] * 0.5
+    return l2_normalize(X), y
+
+
+def test_perceptron_separable():
+    X, y = _sep_data()
+    w, m = fit_perceptron(jnp.asarray(X), jnp.asarray(y))
+    assert float(np.mean(np.sign(X @ np.asarray(w)) == y)) > 0.97
+
+
+def test_pegasos_reasonable():
+    X, y = _sep_data()
+    w = fit_pegasos(jnp.asarray(X), jnp.asarray(y), lam=1e-4, k=20)
+    assert float(np.mean(np.sign(X @ np.asarray(w)) == y)) > 0.95
+
+
+def test_batch_l2svm_is_strongest():
+    X, y = _sep_data(margin=0.8, seed=1)
+    wb, obj = fit_batch_l2svm(jnp.asarray(X), jnp.asarray(y), 10.0, iters=800)
+    accb = float(np.mean(np.sign(X @ np.asarray(wb)) == y))
+    wp, _ = fit_perceptron(jnp.asarray(X), jnp.asarray(y))
+    accp = float(np.mean(np.sign(X @ np.asarray(wp)) == y))
+    assert accb >= accp - 0.01
+    assert np.isfinite(float(obj))
+
+
+def test_cvm_multipass_converges():
+    X, y = _sep_data(n=1500, seed=2)
+    res = fit_cvm(X, y, C=10.0, eps=1e-3, max_passes=12, solver_iters=500)
+    acc = float(np.mean(np.sign(X @ res["w"]) == y))
+    assert acc > 0.95
+    assert res["passes"] >= 2  # CVM cannot return in a single pass
+
+
+def test_lasvm_small():
+    X, y = _sep_data(n=800, seed=3)
+    w, nsv = fit_lasvm(X, y, C=10.0)
+    assert float(np.mean(np.sign(X @ w) == y)) > 0.95
+    assert 0 < nsv < 800
+
+
+def test_lasvm_bias_on_imbalanced():
+    rng = np.random.default_rng(9)
+    n, d = 2000, 20
+    X = np.abs(rng.normal(size=(n, d))).astype(np.float32)  # all-positive
+    wtrue = rng.normal(size=d)
+    s = X @ wtrue
+    y = np.where(s > np.quantile(s, 0.95), 1.0, -1.0).astype(np.float32)  # 5% pos
+    X = l2_normalize(X)
+    w, b, _ = fit_lasvm(X, y, C=1.0, return_bias=True)
+    acc = float(np.mean(np.sign(X @ w + b) == y))
+    assert acc > 0.9
+
+
+@pytest.mark.parametrize("name", sorted(DATASETS))
+def test_dataset_spec(name):
+    Xtr, ytr, Xte, yte = load_dataset(name, seed=0)
+    spec = {
+        "synthetic_a": (20000, 200, 2), "synthetic_b": (20000, 200, 3),
+        "synthetic_c": (20000, 200, 5), "waveform": (4000, 1000, 21),
+        "mnist01": (12665, 2115, 784), "mnist89": (11800, 1983, 784),
+        "ijcnn": (35000, 91701, 22), "w3a": (44837, 4912, 300),
+    }[name]
+    assert Xtr.shape == (spec[0], spec[2])
+    assert Xte.shape == (spec[1], spec[2])
+    assert set(np.unique(ytr)) <= {-1.0, 1.0}
+    # determinism
+    Xtr2, *_ = load_dataset(name, seed=0)
+    np.testing.assert_array_equal(Xtr, Xtr2)
+
+
+def test_preprocess_unit_norm():
+    Xtr, ytr, Xte, yte = load_dataset("waveform")
+    a, b = preprocess_for("waveform", Xtr, Xte)
+    np.testing.assert_allclose(np.linalg.norm(a, axis=1), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(np.linalg.norm(b, axis=1), 1.0, rtol=1e-5)

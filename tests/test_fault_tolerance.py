@@ -1,0 +1,93 @@
+"""Checkpoint/restart, straggler range re-assignment, elastic remesh."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.runtime import (
+    StragglerPolicy,
+    rebalance_ranges,
+    run_with_restarts,
+)
+
+
+def _toy_step():
+    def step(state, batch):
+        w = state["w"] + jnp.sum(batch)
+        return {"w": w, "n": state["n"] + 1}, {"w_sum": float(jnp.sum(w))}
+
+    return step
+
+
+def test_restart_bit_equivalent(tmp_path):
+    """Crash at steps 3 and 7 -> same final state as the uninterrupted run."""
+    batches = [jnp.full((4,), i, jnp.float32) for i in range(10)]
+    init = {"w": jnp.zeros((4,)), "n": jnp.zeros((), jnp.int32)}
+
+    clean, _ = run_with_restarts(
+        _toy_step(), init, batches, ckpt_dir=str(tmp_path / "a"), ckpt_every=2
+    )
+    crashy, report = run_with_restarts(
+        _toy_step(), init, batches, ckpt_dir=str(tmp_path / "b"), ckpt_every=2,
+        fail_at=[3, 7],
+    )
+    assert report.restarts == 2
+    np.testing.assert_array_equal(np.asarray(clean["w"]), np.asarray(crashy["w"]))
+    assert int(clean["n"]) == int(crashy["n"]) == 10
+
+
+def test_ckpt_roundtrip_dtypes(tmp_path):
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4),
+        "b": [jnp.ones((2,), jnp.int32), {"c": jnp.zeros((5,), jnp.float32)}],
+    }
+    ckpt.save(str(tmp_path / "c"), tree, meta={"step": 5})
+    out = ckpt.restore(str(tmp_path / "c"), tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x, np.float32), np.asarray(y, np.float32))
+    assert ckpt.load_meta(str(tmp_path / "c"))["step"] == 5
+
+
+def test_rebalance_ranges_exact_cover():
+    ranges = [(0, 100), (100, 200), (200, 300), (300, 400)]
+    out = rebalance_ranges(ranges, dead=[1, 3])
+    covered = sorted(out)
+    # every index in [0,400) covered exactly once
+    seen = np.zeros(400, np.int32)
+    for lo, hi in covered:
+        seen[lo:hi] += 1
+    assert (seen == 1).all()
+
+
+def test_straggler_policy():
+    pol = StragglerPolicy(deadline_factor=3.0)
+    assert pol.stragglers([1.0, 1.1, 0.9, 10.0]) == [3]
+    assert pol.stragglers([1.0, 1.1, 0.9]) == []
+
+
+def test_streamsvm_restart_preserves_one_pass(tmp_path):
+    """A preempted one-pass SVM run resumes mid-stream bit-identically."""
+    from repro.core import fit, fit_chunked, StreamCheckpoint
+    from repro.core.meb import Ball
+    from repro.data.stream import chunk_stream
+
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(2000, 16)).astype(np.float32)
+    y = np.sign(rng.normal(size=2000) + X[:, 0]).astype(np.float32)
+    full = fit(jnp.asarray(X), jnp.asarray(y), 10.0)
+
+    # consume half, checkpoint to disk, "crash", restore, finish
+    half = fit_chunked(chunk_stream(X[:1000], y[:1000], 250), 10.0)
+    ckpt.save(str(tmp_path / "svm"), half.ball, meta={"position": half.position})
+    restored_ball = ckpt.restore(str(tmp_path / "svm"), half.ball)
+    pos = ckpt.load_meta(str(tmp_path / "svm"))["position"]
+    done = fit_chunked(
+        chunk_stream(X, y, 250, start=pos), 10.0,
+        resume=StreamCheckpoint(ball=restored_ball, position=pos),
+    )
+    np.testing.assert_allclose(
+        np.asarray(done.ball.w), np.asarray(full.w), rtol=1e-5, atol=1e-6
+    )
+    assert int(done.ball.m) == int(full.m)

@@ -1,0 +1,74 @@
+"""Continuous-batching scheduler: exactness + slot utilization."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import ContinuousBatcher, Request
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _reference_generate(model, params, prompt, n_new, max_len=128):
+    """Single-request greedy decode — the ground truth per request."""
+    logits, state = jax.jit(
+        lambda p, b: model.prefill(p, {**b, "max_len": max_len})
+    )(params, {"tokens": jnp.asarray(prompt[None, :], jnp.int32)})
+    toks = [int(jnp.argmax(logits[0]))]
+    dec = jax.jit(model.decode_step)
+    for _ in range(n_new - 1):
+        logits, state = dec(params, state, jnp.asarray([[toks[-1]]], jnp.int32))
+        toks.append(int(jnp.argmax(logits[0])))
+    return toks
+
+
+@pytest.fixture(scope="module")
+def xlstm_model():
+    cfg = get_config("xlstm-125m", smoke=True)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    return cfg, model, params
+
+
+def test_scheduler_exactness(xlstm_model):
+    """Tokens from slot-batched continuous decoding == single-request decode."""
+    cfg, model, params = xlstm_model
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab, 8 + 4 * i).astype(np.int32),
+                max_new=6)
+        for i in range(3)
+    ]
+    refs = [
+        _reference_generate(model, params, r.prompt, r.max_new) for r in reqs
+    ]
+    batcher = ContinuousBatcher(model, params, n_slots=2)
+    stats = batcher.run(reqs)
+    assert stats.finished == 3
+    for r, ref in zip(reqs, refs):
+        assert r.done
+        assert r.generated == ref, (r.rid, r.generated, ref)
+
+
+def test_scheduler_utilization_beats_static(xlstm_model):
+    """Mixed-length workload: continuous batching wastes fewer slot-tokens
+    than static batching (which holds every slot until the longest
+    request finishes)."""
+    cfg, model, params = xlstm_model
+    rng = np.random.default_rng(1)
+    lengths = [2, 4, 16, 16, 4, 2]
+    reqs = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
+                max_new=n)
+        for i, n in enumerate(lengths)
+    ]
+    batcher = ContinuousBatcher(model, params, n_slots=2)
+    stats = batcher.run(reqs)
+    assert stats.finished == len(reqs)
+    # static batching of (2,4) (16,16) (4,2) pairs: busy = sum(lengths),
+    # held = sum(max of each pair * 2)
+    static_util = sum(lengths) / (2 * (4 + 16 + 4))
+    assert stats.utilization > static_util - 0.05
+    assert stats.utilization > 0.7
