@@ -7,6 +7,7 @@ from .streamsvm import (
     fit,
     fit_ball,
     fit_chunked,
+    fit_chunked_many,
     fit_lookahead,
     fit_lookahead_ball,
     init_ball,
@@ -15,20 +16,31 @@ from .streamsvm import (
 from .qp import solve_meb_ball_points
 from .kernelized import KernelBall, fit_kernelized, linear_kernel, rbf_kernel, linear_weights
 from .distributed import fit_sharded
-from .multiball import MultiBall, fit_multiball, to_single_ball
-from .multiclass import fit_ovr, predict_ovr, fit_c_grid
+from .multiball import (
+    MultiBall,
+    bank_stack,
+    bank_take,
+    fit_bank,
+    fit_multiball,
+    to_single_ball,
+)
+from .multiclass import fit_ovr, ovr_signs, predict_ovr, fit_c_grid
 
 __all__ = [
     "Ball",
     "KernelBall",
     "StreamCheckpoint",
     "accuracy",
+    "bank_stack",
+    "bank_take",
     "center_distance",
     "decision_function",
     "fit",
     "fit_ball",
+    "fit_bank",
     "fit_c_grid",
     "fit_chunked",
+    "fit_chunked_many",
     "fit_kernelized",
     "fit_lookahead",
     "fit_lookahead_ball",
@@ -40,6 +52,7 @@ __all__ = [
     "linear_weights",
     "make_ball",
     "merge_balls",
+    "ovr_signs",
     "point_distance",
     "predict",
     "predict_ovr",

@@ -21,6 +21,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.5 public API (replication check kwarg renamed to check_vma)
+    from jax import shard_map as _shard_map
+    _CHECK_REP_KW = "check_vma"
+except ImportError:  # older jax: experimental location, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_REP_KW = "check_rep"
+
 from .meb import Ball, fold_merge
 from .streamsvm import fit, fit_lookahead
 
@@ -62,12 +69,13 @@ def fit_sharded(
         return fold_merge(stacked)
 
     spec = P(axes)
-    fn = jax.shard_map(
+    fn = _shard_map(
         local_fit,
         mesh=mesh,
         in_specs=(spec, spec),
         out_specs=jax.tree.map(lambda _: P(), Ball(0, 0, 0, 0)),
-        check_vma=False,  # scalar ball carries are constant-initialized per shard
+        # scalar ball carries are constant-initialized per shard
+        **{_CHECK_REP_KW: False},
     )
     X = jax.device_put(X, NamedSharding(mesh, P(axes)))
     y = jax.device_put(y, NamedSharding(mesh, P(axes)))

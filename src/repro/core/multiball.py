@@ -132,6 +132,50 @@ def fit_multiball(
     return mb
 
 
+# ---------------------------------------------------------------------------
+# Ball banks — B *independent* models sharing one pass over the stream
+# ---------------------------------------------------------------------------
+#
+# Distinct from the L-slot algorithm above (one model, L interacting balls):
+# a *bank* is a stacked Ball pytree with leading axis B where every model
+# (classes x C-grid x variants) runs its own Algorithm 1, and the Pallas
+# engine (kernels.ops.streamsvm_fit_many) amortizes ONE HBM read of each
+# (block_n, D) tile across all B conditional updates. B passes of math,
+# one pass of data movement.
+
+
+def fit_bank(
+    X: jax.Array,
+    Y: jax.Array,
+    cs,
+    balls: Ball | None = None,
+    *,
+    variant: str = "exact",
+    block_n: int = 256,
+    interpret: bool | None = None,
+) -> Ball:
+    """One-pass fit of a bank of B models via the multi-ball Pallas engine.
+
+    X: (N, D) shared stream; Y: (B, N) per-model label signs; cs: scalar or
+    (B,) per-model C. Continues from ``balls`` (stacked Ball) when given.
+    """
+    from repro.kernels.ops import streamsvm_fit_many  # lazy: avoids core<->kernels cycle
+
+    return streamsvm_fit_many(
+        X, Y, cs, balls, variant=variant, block_n=block_n, interpret=interpret
+    )
+
+
+def bank_take(bank: Ball, i) -> Ball:
+    """Model i of a stacked bank as a plain single Ball."""
+    return jax.tree.map(lambda x: x[i], bank)
+
+
+def bank_stack(balls) -> Ball:
+    """Stack an iterable of single Balls into a bank (leading axis B)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *list(balls))
+
+
 def to_single_ball(mb: MultiBall) -> Ball:
     """Merge all active balls (inactive slots folded as zero-size dupes of 0)."""
     # replace inactive slots with copies of the first active ball

@@ -1,9 +1,13 @@
 """One-vs-rest multiclass StreamSVM and hyper-parameter-grid fitting.
 
-Classes (and C-grid points) are embarrassingly parallel: we vmap the
-single-pass fit over the class axis. On a mesh, the class/grid axis maps to
-the `model` axis (see launch/train.py --svm-head) while the stream itself
-shards over (pod, data) via distributed.fit_sharded.
+Classes and C-grid points are embarrassingly parallel *in math* but share the
+same stream, so the default path flattens them onto the model axis of the
+multi-ball Pallas engine (kernels.ops.streamsvm_fit_many): every (block_n, D)
+tile is read from HBM once and updates all B models. The pre-engine vmap'd
+lax.scan path is kept as ``engine="scan"`` (and for lookahead > 1, which the
+one-pass engine does not buffer). On a mesh, the class/grid axis maps to the
+`model` axis (see launch/train.py --svm-head) while the stream itself shards
+over (pod, data) via distributed.fit_sharded.
 """
 from __future__ import annotations
 
@@ -13,10 +17,26 @@ import jax
 import jax.numpy as jnp
 
 from .meb import Ball
+from .multiball import fit_bank
 from .streamsvm import fit, fit_lookahead
 
 
-@partial(jax.jit, static_argnames=("n_classes", "c", "lookahead", "variant"))
+def _cast_ball(ball: Ball, dtype) -> Ball:
+    """Match the scan path's output dtype (the kernel accumulates in f32)."""
+    return Ball(
+        w=ball.w.astype(dtype), r=ball.r.astype(dtype),
+        xi2=ball.xi2.astype(dtype), m=ball.m,
+    )
+
+
+def ovr_signs(labels: jax.Array, n_classes: int, dtype=jnp.float32) -> jax.Array:
+    """(N,) int labels -> (n_classes, N) one-vs-rest sign rows in {-1, +1}."""
+    return jnp.where(
+        labels[None, :] == jnp.arange(n_classes)[:, None], 1.0, -1.0
+    ).astype(dtype)
+
+
+@partial(jax.jit, static_argnames=("n_classes", "c", "lookahead", "variant", "engine"))
 def fit_ovr(
     X: jax.Array,
     labels: jax.Array,
@@ -25,10 +45,14 @@ def fit_ovr(
     *,
     lookahead: int = 1,
     variant: str = "exact",
+    engine: str = "pallas",
 ) -> Ball:
     """labels: (N,) int in [0, n_classes). Returns Ball stacked over classes."""
-    ys = jnp.where(labels[None, :] == jnp.arange(n_classes)[:, None], 1.0, -1.0)
-    ys = ys.astype(X.dtype)
+    if engine not in ("pallas", "scan"):
+        raise ValueError(f"unknown engine {engine!r}; expected 'pallas' or 'scan'")
+    ys = ovr_signs(labels, n_classes, X.dtype)
+    if lookahead <= 1 and engine == "pallas":
+        return _cast_ball(fit_bank(X, ys, c, variant=variant), X.dtype)
     if lookahead <= 1:
         f = lambda yv: fit(X, yv, c, variant=variant)
     else:
@@ -41,15 +65,30 @@ def predict_ovr(balls: Ball, X: jax.Array) -> jax.Array:
     return jnp.argmax(scores, axis=-1)
 
 
-@partial(jax.jit, static_argnames=("variant",))
-def fit_c_grid(X: jax.Array, y: jax.Array, c_grid: jax.Array, *, variant: str = "exact") -> Ball:
-    """vmap the one-pass fit over a grid of C values (model-selection sweep).
+@partial(jax.jit, static_argnames=("variant", "engine"))
+def fit_c_grid(
+    X: jax.Array,
+    y: jax.Array,
+    c_grid: jax.Array,
+    *,
+    variant: str = "exact",
+    engine: str = "pallas",
+) -> Ball:
+    """Model-selection sweep over a grid of C values in ONE stream pass.
 
-    Note c enters only through 1/C inside the scan, so it can be traced.
+    Every grid point is a model in the engine's bank (c enters only through
+    1/C, so the grid can be traced). Returns Ball stacked over the grid.
     """
+    if engine not in ("pallas", "scan"):
+        raise ValueError(f"unknown engine {engine!r}; expected 'pallas' or 'scan'")
+    c_grid = jnp.asarray(c_grid)
+    b = c_grid.shape[0]
+    if engine == "pallas":
+        Y = jnp.broadcast_to(y[None, :], (b, y.shape[0])).astype(X.dtype)
+        return _cast_ball(fit_bank(X, Y, c_grid, variant=variant), X.dtype)
 
     def f(cv):
-        from .meb import make_ball, point_distance, enclose_point
+        from .meb import enclose_point, point_distance
 
         c_inv = 1.0 / cv
         xi2 = c_inv if variant == "exact" else jnp.asarray(1.0, X.dtype)
@@ -61,11 +100,11 @@ def fit_c_grid(X: jax.Array, y: jax.Array, c_grid: jax.Array, *, variant: str = 
         )
         yx = y[1:, None] * X[1:]
 
-        def body(b, row):
-            d = point_distance(b, row, c_inv)
-            upd = d >= b.r
-            new = enclose_point(b, row, c_inv, variant=variant)
-            return jax.tree.map(lambda a_, b_: jnp.where(upd, a_, b_), new, b), None
+        def body(b_, row):
+            d = point_distance(b_, row, c_inv)
+            upd = d >= b_.r
+            new = enclose_point(b_, row, c_inv, variant=variant)
+            return jax.tree.map(lambda a_, o_: jnp.where(upd, a_, o_), new, b_), None
 
         ball, _ = jax.lax.scan(body, ball, yx)
         return ball

@@ -7,6 +7,9 @@ fit_lookahead(X, y, c, L)       Algorithm 2 (buffer L violators, BC solve).
 fit_chunked(...)                python-level streaming driver over an
                                 iterator of chunks, with checkpoint hooks —
                                 the "real" one-pass entry point.
+fit_chunked_many(...)           same driver for a BANK of B models (classes x
+                                C-grid x variants) via the multi-ball Pallas
+                                engine: one data pass total, O(B*D) state.
 decision_function / predict     linear classifier readout.
 
 All core math lives in meb.py / qp.py; this module provides the streaming
@@ -181,6 +184,51 @@ def fit_chunked(
             since_ckpt = 0
     assert ball is not None, "empty stream"
     return StreamCheckpoint(ball=ball, position=pos)
+
+
+def fit_chunked_many(
+    chunks: Iterable[Tuple[jax.Array, jax.Array]],
+    cs,
+    *,
+    variant: str = "exact",
+    block_n: int = 256,
+    resume: Optional[StreamCheckpoint] = None,
+    checkpoint_every: int = 0,
+    checkpoint_cb: Optional[Callable[[StreamCheckpoint], None]] = None,
+) -> StreamCheckpoint:
+    """One pass of the multi-ball engine over an iterator of chunks.
+
+    Bank analogue of ``fit_chunked``: ``cs`` is a (B,) array of per-model C
+    values and each chunk is ``(X_chunk, y_chunk)`` with ``y_chunk`` either
+    (n,) shared +-1 labels (broadcast to every model — the C-grid case) or
+    (B, n) per-model sign rows (the one-vs-rest case). The checkpoint carries
+    the whole bank — state stays O(B * D) — so preemption/resume keeps the
+    stream single-pass for all B models at once.
+    """
+    from repro.core.multiball import fit_bank
+
+    cs = jnp.atleast_1d(jnp.asarray(cs, jnp.float32))
+    n_models = int(cs.shape[0])
+    bank = resume.ball if resume is not None else None
+    pos = resume.position if resume is not None else 0
+    since_ckpt = 0
+
+    for Xc, yc in iter(chunks):
+        Xc = jnp.asarray(Xc)
+        yc = jnp.asarray(yc)
+        if yc.ndim == 1:
+            yc = jnp.broadcast_to(yc[None, :], (n_models, yc.shape[0]))
+        n_chunk = int(Xc.shape[0])
+        bank = fit_bank(Xc, yc, cs, bank, variant=variant, block_n=block_n)
+        pos += n_chunk
+        since_ckpt += n_chunk
+        if checkpoint_every and checkpoint_cb and since_ckpt >= checkpoint_every:
+            checkpoint_cb(
+                StreamCheckpoint(ball=jax.tree.map(jnp.asarray, bank), position=pos)
+            )
+            since_ckpt = 0
+    assert bank is not None, "empty stream"
+    return StreamCheckpoint(ball=bank, position=pos)
 
 
 # ---------------------------------------------------------------------------

@@ -1,12 +1,13 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
-streamsvm_scan — blocked one-pass Algorithm 1 (ball state resident in VMEM)
+streamsvm_scan — blocked one-pass Algorithm 1 (ball state resident in VMEM),
+                 single-ball and multi-ball (B-model bank, one data pass)
 gram           — tiled kernel-matrix blocks (linear / RBF epilogues)
 
 ops.py carries the jit'd public wrappers; ref.py the pure-jnp oracles.
 Kernels validate in interpret=True mode on CPU and target TPU BlockSpec
 tiling (128-aligned lanes, f32 VMEM accumulators).
 """
-from .ops import gram, streamsvm_fit
+from .ops import gram, streamsvm_fit, streamsvm_fit_many
 
-__all__ = ["gram", "streamsvm_fit"]
+__all__ = ["gram", "streamsvm_fit", "streamsvm_fit_many"]

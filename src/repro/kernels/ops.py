@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.core.meb import Ball
 from .gram import gram_pallas
-from .streamsvm_scan import streamsvm_scan_pallas
+from .streamsvm_scan import streamsvm_scan_many_pallas, streamsvm_scan_pallas
 
 
 def _pad_to(x, mult, axis):
@@ -59,6 +59,73 @@ def streamsvm_fit(
         n_valid=n, block_n=block_n, interpret=interpret,
     )
     return Ball(w=w[:d], r=r, xi2=xi2, m=m)
+
+
+@partial(jax.jit, static_argnames=("variant", "block_n", "interpret"))
+def streamsvm_fit_many(
+    X: jax.Array,
+    Y: jax.Array,
+    cs: jax.Array,
+    balls: Ball | None = None,
+    *,
+    variant: str = "exact",
+    block_n: int = 256,
+    interpret: bool | None = None,
+) -> Ball:
+    """One-pass Algorithm 1 for a bank of B models — ONE read of the stream.
+
+    X: (N, D) shared stream; Y: (B, N) per-model label signs in {-1, +1}
+    (classes x C-grid x variants all flatten onto the B axis); cs: scalar or
+    (B,) per-model C. Starts from ``balls`` (a Ball stacked on a leading B
+    axis) if given, else initializes every model from the first example.
+    Returns a stacked Ball; state stays O(B * D) while each (block_n, D) tile
+    is loaded from HBM exactly once and updates all B models.
+    """
+    b, n_y = Y.shape
+    n, d = X.shape
+    assert n_y == n, (Y.shape, X.shape)
+    cs = jnp.broadcast_to(jnp.asarray(cs, jnp.float32), (b,))
+    c_inv = 1.0 / cs
+    gain = c_inv if variant == "exact" else jnp.ones_like(c_inv)
+    if balls is None:
+        w0 = Y[:, 0:1] * X[0][None, :]
+        r0 = jnp.zeros((b,), jnp.float32)
+        xi20, m0 = gain, jnp.ones((b,), jnp.float32)
+        X, Y = X[1:], Y[:, 1:]
+        n -= 1
+    else:
+        w0, r0, xi20, m0 = balls.w, balls.r, balls.xi2, balls.m
+    if n == 0:  # nothing (left) to stream — the initial state IS the answer
+        return Ball(
+            w=w0.astype(jnp.float32),
+            r=jnp.broadcast_to(jnp.asarray(r0, jnp.float32), (b,)),
+            xi2=jnp.broadcast_to(jnp.asarray(xi20, jnp.float32), (b,)),
+            m=jnp.broadcast_to(jnp.asarray(m0, jnp.int32), (b,)),
+        )
+    # Pad models to the f32 sublane multiple; padded rows carry zero signs and
+    # C=1 so they stay finite, and are sliced off below.
+    bp = -(-b // 8) * 8
+    live = jnp.arange(bp) < b
+    Xp = _pad_to(_pad_to(X.astype(jnp.float32), 128, 1), block_n, 0)
+    Yp = _pad_to(_pad_to(Y.astype(jnp.float32), block_n, 1), 8, 0)
+    W0p = _pad_to(_pad_to(w0.astype(jnp.float32), 128, 1), 8, 0)
+    pad1 = lambda v: _pad_to(
+        jnp.broadcast_to(jnp.asarray(v, jnp.float32), (b,)), 8, 0
+    )
+    W, r, xi2, m = streamsvm_scan_many_pallas(
+        Xp,
+        Yp,
+        W0p,
+        pad1(r0),
+        pad1(xi20),
+        jnp.where(live, pad1(c_inv), 1.0),
+        _pad_to(jnp.broadcast_to(jnp.asarray(m0, jnp.int32), (b,)), 8, 0),
+        jnp.where(live, pad1(gain), 1.0),
+        n_valid=n,
+        block_n=block_n,
+        interpret=interpret,
+    )
+    return Ball(w=W[:b, :d], r=r[:b], xi2=xi2[:b], m=m[:b])
 
 
 @partial(

@@ -10,10 +10,15 @@ import jax
 import jax.numpy as jnp
 
 
-def streamsvm_scan_ref(X, y, w0, r0, xi20, c_inv, m0, *, n_valid=None):
-    """Row-at-a-time Algorithm 1 from an arbitrary starting state."""
+def streamsvm_scan_ref(X, y, w0, r0, xi20, c_inv, m0, *, gain=None, n_valid=None):
+    """Row-at-a-time Algorithm 1 from an arbitrary starting state.
+
+    ``gain`` is the slack-recursion gain (defaults to ``c_inv`` — the "exact"
+    variant; pass 1.0 for the paper-listing variant).
+    """
     n = X.shape[0]
     n_valid = n if n_valid is None else n_valid
+    gain = c_inv if gain is None else gain
     yx = (y[:, None] * X).astype(jnp.float32)
     valid = jnp.arange(n) < n_valid
 
@@ -26,7 +31,7 @@ def streamsvm_scan_ref(X, y, w0, r0, xi20, c_inv, m0, *, n_valid=None):
         s = jnp.where(upd, 0.5 * (1.0 - r / d), 0.0)
         w = (1.0 - s) * w + s * row
         r = jnp.where(upd, r + 0.5 * (d - r), r)
-        xi2 = xi2 * (1.0 - s) ** 2 + s**2 * c_inv
+        xi2 = xi2 * (1.0 - s) ** 2 + s**2 * gain
         m = m + upd.astype(jnp.int32)
         return (w, r, xi2, m), None
 
@@ -39,6 +44,28 @@ def streamsvm_scan_ref(X, y, w0, r0, xi20, c_inv, m0, *, n_valid=None):
     )
     (w, r, xi2, m), _ = jax.lax.scan(body, init, (yx, valid))
     return w, r, xi2, m
+
+
+def streamsvm_scan_many_ref(X, Y, W0, r0, xi20, c_inv, m0, *, gain=None, n_valid=None):
+    """Bank-of-balls oracle: per-model Algorithm 1 over the shared stream.
+
+    X: (N, D); Y: (B, N) per-model signs; W0: (B, D); the remaining state
+    arrays are (B,). A plain vmap of the single-ball reference — B logical
+    passes — used as the allclose target for the one-pass engine.
+    """
+    b = Y.shape[0]
+    bcast = lambda v: jnp.broadcast_to(jnp.asarray(v, jnp.float32), (b,))
+    gain = bcast(c_inv if gain is None else gain)
+
+    def one(y, w0, r0_, xi20_, ci, m0_, g_):
+        return streamsvm_scan_ref(
+            X, y, w0, r0_, xi20_, ci, m0_, gain=g_, n_valid=n_valid
+        )
+
+    return jax.vmap(one)(
+        Y, jnp.asarray(W0, jnp.float32), bcast(r0), bcast(xi20), bcast(c_inv),
+        bcast(m0).astype(jnp.int32), gain,
+    )
 
 
 def gram_ref(A, B, *, epilogue="linear", gamma=1.0, out_dtype=jnp.float32):

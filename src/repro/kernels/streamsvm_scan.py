@@ -18,6 +18,16 @@ vector work — MXU-friendly, and exactly equal in result to the reference
 scan (tests sweep shapes/dtypes against ref.py).
 
 Scalar state is carried in an SMEM (4,)-vector: [r, xi2, m, n_valid].
+
+The multi-ball variant (`_kernel_many` / `streamsvm_scan_many_pallas`) is the
+same pass generalized to a BANK of B independent models: a (B, D) bank of
+ball centers plus a (4, B) scalar block live in VMEM scratch, each (block_n,
+D) tile is read from HBM once, and one shared unsigned block Gram + one
+bank/tile matmul feed a fori_loop whose conditional update is vectorized
+across the model axis (per-model label signs re-applied as rank-1 factors).
+The bank itself is updated once per block via accumulated (decay, alpha)
+coefficients — a single (B, block_n) x (block_n, D) matmul — so B models cost
+one pass of data movement.
 """
 from __future__ import annotations
 
@@ -103,6 +113,106 @@ def _kernel(
         s_out_ref[0, 3] = st_ref[3]
 
 
+def _kernel_many(
+    x_ref,  # (block_n, D) VMEM tile of X (raw, unsigned rows)
+    ys_ref,  # (B, block_n) VMEM tile of per-model label signs
+    w0_ref,  # (B, D) initial ball-center bank
+    s0_ref,  # (B, 4) initial scalars [r, xi2, c_inv, _] per model
+    m0_ref,  # (B, 1) initial core-vector counts (int32)
+    gain_ref,  # (B, 1) per-model slack gain (1/C exact, 1.0 paper-listing)
+    nv_ref,  # (1, 1) number of valid rows (N before padding)
+    w_out_ref,  # (B, D) output bank
+    s_out_ref,  # (B, 4) output scalars
+    m_out_ref,  # (B, 1) output core-vector counts (int32)
+    w_ref,  # VMEM scratch (B, D) — persistent bank of ball centers
+    st_ref,  # VMEM scratch (4, B) — persistent rows [r, xi2, wsq, _]
+    m_ref,  # VMEM scratch (1, B) int32 — persistent m (exact past 2^24)
+    *,
+    block_n: int,
+):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        w_ref[...] = w0_ref[...]
+        st_ref[0, :] = s0_ref[:, 0]  # r
+        st_ref[1, :] = s0_ref[:, 1]  # xi2
+        st_ref[2, :] = jnp.sum(w0_ref[...] * w0_ref[...], axis=1)  # |w_b|^2
+        st_ref[3, :] = jnp.zeros_like(s0_ref[:, 3])
+        m_ref[0, :] = m0_ref[:, 0]
+
+    c_inv = s0_ref[:, 2]  # (B,)
+    gain = gain_ref[:, 0]  # (B,)
+    n_valid = nv_ref[0, 0]
+
+    x = x_ref[...]  # (block_n, D)
+    ys = ys_ref[...]  # (B, block_n)
+    # One block Gram of the *unsigned* rows, shared by every model (signs are
+    # re-applied per model as rank-1 outer factors), plus the bank/tile inner
+    # products — the only O(D) work in the block, all MXU.
+    gram = jax.lax.dot_general(
+        x, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (block_n, block_n)
+    h0 = jax.lax.dot_general(
+        w_ref[...], x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (B, block_n): <w_b, x_k>
+    g0 = ys * h0  # g[b, k] = <w_b, y_bk x_k>
+
+    row_base = step * block_n
+    row_ids = row_base + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
+    valid = (row_ids < n_valid).astype(jnp.float32)
+    col_ids = jax.lax.broadcasted_iota(jnp.int32, ys.shape, 1)  # (B, block_n)
+
+    def body(j, carry):
+        g, alpha, decay, r, xi2, wsq, m = carry
+        gj = g[:, j]  # (B,) current <w_b, y_bj x_j>
+        gjj = gram[j, j]
+        d2 = wsq - 2.0 * gj + gjj + xi2 + c_inv
+        d = jnp.sqrt(jnp.maximum(d2, 1e-12))
+        upd = jnp.logical_and(d >= r, valid[j] > 0.0)
+        s = jnp.where(upd, 0.5 * (1.0 - r / d), 0.0)  # (B,)
+        one_s = 1.0 - s
+        yj = ys[:, j]  # (B,)
+        # rank-1 maintenance of g under w_b <- (1-s_b) w_b + s_b y_bj x_j:
+        # <x_j, y_bk x_k> = y_bk G[j, k]
+        g = one_s[:, None] * g + (s * yj)[:, None] * (ys * gram[j][None, :])
+        # Deferred bank update: w_end = decay * w_start + sum_j alpha_j y_bj x_j,
+        # with alpha_j = s_j * prod_{k>j} (1 - s_k) — applied post-loop as one
+        # (B, block_n) x (block_n, D) matmul instead of a per-row AXPY.
+        alpha = one_s[:, None] * alpha + jnp.where(col_ids == j, s[:, None], 0.0)
+        decay = decay * one_s
+        wsq = one_s**2 * wsq + 2.0 * s * one_s * gj + s**2 * gjj
+        r = jnp.where(upd, r + 0.5 * (d - r), r)
+        xi2 = xi2 * one_s**2 + s**2 * gain
+        m = m + upd.astype(jnp.int32)
+        return g, alpha, decay, r, xi2, wsq, m
+
+    B = ys.shape[0]
+    init = (
+        g0,
+        jnp.zeros_like(g0),
+        jnp.ones((B,), jnp.float32),
+        st_ref[0, :],
+        st_ref[1, :],
+        st_ref[2, :],
+        m_ref[0, :],
+    )
+    g, alpha, decay, r, xi2, wsq, m = jax.lax.fori_loop(0, block_n, body, init)
+    w_ref[...] = decay[:, None] * w_ref[...] + jax.lax.dot_general(
+        alpha * ys, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    st_ref[0, :], st_ref[1, :], st_ref[2, :] = r, xi2, wsq
+    m_ref[0, :] = m
+
+    @pl.when(step == pl.num_programs(0) - 1)
+    def _finish():
+        w_out_ref[...] = w_ref[...]
+        s_out_ref[...] = jnp.stack(
+            (st_ref[0, :], st_ref[1, :], c_inv, st_ref[3, :]), axis=-1
+        )
+        m_out_ref[...] = m_ref[0, :][:, None]
+
+
 def streamsvm_scan_pallas(
     X: jax.Array,
     y: jax.Array,
@@ -157,3 +267,95 @@ def streamsvm_scan_pallas(
         interpret=interpret,
     )(X.astype(jnp.float32), y.reshape(n, 1).astype(jnp.float32), w0, s0, nv)
     return w_out[0], s_out[0, 0], s_out[0, 1], s_out[0, 3].astype(jnp.int32)
+
+
+def streamsvm_scan_many_pallas(
+    X: jax.Array,
+    Y: jax.Array,
+    W0: jax.Array,
+    r0: jax.Array,
+    xi20: jax.Array,
+    c_inv: jax.Array,
+    m0: jax.Array,
+    gain: jax.Array | None = None,
+    *,
+    n_valid: int | None = None,
+    block_n: int = 256,
+    interpret: bool | None = None,
+):
+    """One data pass updating a bank of B balls (the multi-ball engine).
+
+    X: (N, D) float32 stream (raw rows, no label signs) — D padded to a
+    multiple of 128, N to a multiple of block_n; rows >= n_valid are ignored.
+    Y: (B, N) per-model label signs in {-1, +1} (0 on padded model rows).
+    W0/(r0, xi20, c_inv, m0): per-model starting state, shapes (B, D)/(B,).
+    gain: per-model slack gain (defaults to c_inv — the "exact" variant).
+
+    Every (block_n, D) tile is loaded from HBM once and updates all B models:
+    one block Gram matmul + one bank/tile matmul feed a fori_loop that runs
+    the sequential conditional updates vectorized across the model axis.
+    Returns (W, r, xi2, m) with leading axis B.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, d = X.shape
+    b = Y.shape[0]
+    assert Y.shape == (b, n), (Y.shape, (b, n))
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+
+    W0 = W0.reshape(b, d).astype(jnp.float32)
+    c_inv = jnp.broadcast_to(jnp.asarray(c_inv, jnp.float32), (b,))
+    gain = c_inv if gain is None else jnp.broadcast_to(
+        jnp.asarray(gain, jnp.float32), (b,)
+    )
+    s0 = jnp.stack(
+        [
+            jnp.broadcast_to(jnp.asarray(r0, jnp.float32), (b,)),
+            jnp.broadcast_to(jnp.asarray(xi20, jnp.float32), (b,)),
+            c_inv,
+            jnp.zeros((b,), jnp.float32),
+        ],
+        axis=-1,
+    )  # (B, 4)
+    m0 = jnp.broadcast_to(jnp.asarray(m0, jnp.int32), (b,)).reshape(b, 1)
+    nv = jnp.array([[n if n_valid is None else n_valid]], jnp.int32)
+
+    w_out, s_out, m_out = pl.pallas_call(
+        functools.partial(_kernel_many, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((b, block_n), lambda i: (0, i)),
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((b, 4), lambda i: (0, 0)),
+            pl.BlockSpec((b, 1), lambda i: (0, 0)),
+            pl.BlockSpec((b, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((b, 4), lambda i: (0, 0)),
+            pl.BlockSpec((b, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, 4), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((b, d), jnp.float32),
+            pltpu.VMEM((4, b), jnp.float32),
+            pltpu.VMEM((1, b), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        X.astype(jnp.float32),
+        Y.astype(jnp.float32),
+        W0,
+        s0,
+        m0,
+        gain.reshape(b, 1),
+        nv,
+    )
+    return w_out, s_out[:, 0], s_out[:, 1], m_out[:, 0]
