@@ -151,18 +151,27 @@ def fit_bank(
     balls: Ball | None = None,
     *,
     variant: str = "exact",
+    lookahead=None,
     block_n: int = 256,
+    b_tile: int | None = None,
+    stream_dtype=None,
     interpret: bool | None = None,
 ) -> Ball:
-    """One-pass fit of a bank of B models via the multi-ball Pallas engine.
+    """One-pass fit of a bank of B models via the tiled multi-ball engine.
 
     X: (N, D) shared stream; Y: (B, N) per-model label signs; cs: scalar or
     (B,) per-model C. Continues from ``balls`` (stacked Ball) when given.
+    ``b_tile`` tiles the bank across the engine's second grid axis (any B in
+    one stream pass), ``stream_dtype="bf16"`` halves stream HBM traffic, and
+    ``variant="lookahead"`` runs fused Algorithm 2 with per-model windows
+    (``lookahead``: int or length-B tuple, static) — see kernels.ops.
     """
     from repro.kernels.ops import streamsvm_fit_many  # lazy: avoids core<->kernels cycle
 
     return streamsvm_fit_many(
-        X, Y, cs, balls, variant=variant, block_n=block_n, interpret=interpret
+        X, Y, cs, balls,
+        variant=variant, lookahead=lookahead, block_n=block_n,
+        b_tile=b_tile, stream_dtype=stream_dtype, interpret=interpret,
     )
 
 

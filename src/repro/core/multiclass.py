@@ -2,10 +2,11 @@
 
 Classes and C-grid points are embarrassingly parallel *in math* but share the
 same stream, so the default path flattens them onto the model axis of the
-multi-ball Pallas engine (kernels.ops.streamsvm_fit_many): every (block_n, D)
-tile is read from HBM once and updates all B models. The pre-engine vmap'd
-lax.scan path is kept as ``engine="scan"`` (and for lookahead > 1, which the
-one-pass engine does not buffer). On a mesh, the class/grid axis maps to the
+tiled multi-ball Pallas engine (kernels.ops.streamsvm_fit_many): every
+(block_n, D) tile is read from HBM once and updates all B models — bank
+tiling (``b_tile``) keeps that true for hundreds of classes x a C-grid, and
+``lookahead > 1`` runs the fused in-kernel Algorithm 2. The pre-engine vmap'd
+lax.scan path is kept as ``engine="scan"``. On a mesh, the class/grid axis maps to the
 `model` axis (see launch/train.py --svm-head) while the stream itself shards
 over (pod, data) via distributed.fit_sharded.
 """
@@ -36,27 +37,59 @@ def ovr_signs(labels: jax.Array, n_classes: int, dtype=jnp.float32) -> jax.Array
     ).astype(dtype)
 
 
-@partial(jax.jit, static_argnames=("n_classes", "c", "lookahead", "variant", "engine"))
+@partial(
+    jax.jit,
+    static_argnames=(
+        "n_classes", "lookahead", "variant", "engine", "b_tile", "stream_dtype",
+    ),
+)
 def fit_ovr(
     X: jax.Array,
     labels: jax.Array,
     n_classes: int,
-    c: float,
+    c,
     *,
     lookahead: int = 1,
     variant: str = "exact",
     engine: str = "pallas",
+    b_tile: int | None = None,
+    stream_dtype=None,
 ) -> Ball:
-    """labels: (N,) int in [0, n_classes). Returns Ball stacked over classes."""
+    """labels: (N,) int in [0, n_classes). Returns Ball stacked over classes.
+
+    ``c`` is traced (sweeping C reuses one compilation). The default engine
+    flattens all classes onto the bank axis of the tiled Pallas engine —
+    including ``lookahead > 1``, which runs the fused in-kernel Algorithm 2 —
+    so hundreds of classes train in ONE stream pass; ``b_tile`` bounds the
+    per-step VMEM working set and ``stream_dtype="bf16"`` halves stream HBM
+    traffic. ``engine="scan"`` keeps the pre-engine vmap'd lax.scan path
+    (Badoiu-Clarkson window solves for lookahead > 1).
+    """
     if engine not in ("pallas", "scan"):
         raise ValueError(f"unknown engine {engine!r}; expected 'pallas' or 'scan'")
+    if variant not in ("exact", "paper-listing"):
+        raise ValueError(
+            f"unknown variant {variant!r}; expected 'exact' or 'paper-listing'"
+        )
     ys = ovr_signs(labels, n_classes, X.dtype)
-    if lookahead <= 1 and engine == "pallas":
-        return _cast_ball(fit_bank(X, ys, c, variant=variant), X.dtype)
+    if engine == "pallas":
+        if lookahead <= 1:
+            bank = fit_bank(
+                X, ys, c, variant=variant, b_tile=b_tile,
+                stream_dtype=stream_dtype,
+            )
+        else:
+            bank = fit_bank(
+                X, ys, c,
+                variant="lookahead" if variant == "exact" else "lookahead-paper",
+                lookahead=int(lookahead),
+                b_tile=b_tile, stream_dtype=stream_dtype,
+            )
+        return _cast_ball(bank, X.dtype)
     if lookahead <= 1:
         f = lambda yv: fit(X, yv, c, variant=variant)
     else:
-        f = lambda yv: fit_lookahead(X, yv, c, lookahead, variant=variant)
+        f = lambda yv: fit_lookahead(X, yv, c, lookahead, variant=variant, engine="qp")
     return jax.vmap(f)(ys)
 
 
@@ -65,7 +98,7 @@ def predict_ovr(balls: Ball, X: jax.Array) -> jax.Array:
     return jnp.argmax(scores, axis=-1)
 
 
-@partial(jax.jit, static_argnames=("variant", "engine"))
+@partial(jax.jit, static_argnames=("variant", "engine", "b_tile", "stream_dtype"))
 def fit_c_grid(
     X: jax.Array,
     y: jax.Array,
@@ -73,6 +106,8 @@ def fit_c_grid(
     *,
     variant: str = "exact",
     engine: str = "pallas",
+    b_tile: int | None = None,
+    stream_dtype=None,
 ) -> Ball:
     """Model-selection sweep over a grid of C values in ONE stream pass.
 
@@ -85,7 +120,13 @@ def fit_c_grid(
     b = c_grid.shape[0]
     if engine == "pallas":
         Y = jnp.broadcast_to(y[None, :], (b, y.shape[0])).astype(X.dtype)
-        return _cast_ball(fit_bank(X, Y, c_grid, variant=variant), X.dtype)
+        return _cast_ball(
+            fit_bank(
+                X, Y, c_grid, variant=variant, b_tile=b_tile,
+                stream_dtype=stream_dtype,
+            ),
+            X.dtype,
+        )
 
     def f(cv):
         from .meb import enclose_point, point_distance

@@ -116,8 +116,38 @@ def fit_lookahead(
     *,
     qp_iters: int = 128,
     variant: str = "exact",
+    engine: str = "pallas",
+    block_n: int = 256,
+    stream_dtype=None,
 ) -> Ball:
-    """Algorithm 2. lookahead=1 ~ Algorithm 1 (up to BC-solver tolerance)."""
+    """Algorithm 2. lookahead=1 ~ Algorithm 1 (exactly, for engine="pallas").
+
+    engine="pallas" (default) routes through the fused lookahead path of the
+    multi-ball engine: the L-row window lives in VMEM next to the ball and is
+    flushed farthest-point-first inside the kernel (greedy Badoiu-Clarkson
+    insertion over the window), so Algorithm 2 costs the same single stream
+    read as Algorithm 1. engine="qp" keeps the pre-engine behavior — a
+    lax.scan that solves the buffered window with the iterative BC solver in
+    qp.py (also what ``fit_chunked`` uses, chunk by chunk). The two accept
+    slightly different core-vector sets (greedy insertion vs window solve);
+    both satisfy the paper's enclosure guarantee.
+    """
+    if engine not in ("pallas", "qp"):
+        raise ValueError(f"unknown engine {engine!r}; expected 'pallas' or 'qp'")
+    if variant not in ("exact", "paper-listing"):
+        raise ValueError(
+            f"unknown variant {variant!r}; expected 'exact' or 'paper-listing'"
+        )
+    if engine == "pallas":
+        from .multiball import fit_bank
+
+        bank = fit_bank(
+            X, y[None, :].astype(X.dtype), c,
+            variant="lookahead" if variant == "exact" else "lookahead-paper",
+            lookahead=int(lookahead),
+            block_n=block_n, stream_dtype=stream_dtype,
+        )
+        return jax.tree.map(lambda v: v[0], bank)
     ball = init_ball(X[0], y[0], c, variant=variant)
     return fit_lookahead_ball(ball, X[1:], y[1:], c, lookahead, qp_iters=qp_iters)
 
@@ -192,6 +222,8 @@ def fit_chunked_many(
     *,
     variant: str = "exact",
     block_n: int = 256,
+    b_tile: Optional[int] = None,
+    stream_dtype=None,
     resume: Optional[StreamCheckpoint] = None,
     checkpoint_every: int = 0,
     checkpoint_cb: Optional[Callable[[StreamCheckpoint], None]] = None,
@@ -219,7 +251,10 @@ def fit_chunked_many(
         if yc.ndim == 1:
             yc = jnp.broadcast_to(yc[None, :], (n_models, yc.shape[0]))
         n_chunk = int(Xc.shape[0])
-        bank = fit_bank(Xc, yc, cs, bank, variant=variant, block_n=block_n)
+        bank = fit_bank(
+            Xc, yc, cs, bank, variant=variant, block_n=block_n,
+            b_tile=b_tile, stream_dtype=stream_dtype,
+        )
         pos += n_chunk
         since_ckpt += n_chunk
         if checkpoint_every and checkpoint_cb and since_ckpt >= checkpoint_every:

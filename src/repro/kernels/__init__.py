@@ -1,12 +1,16 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
-streamsvm_scan — blocked one-pass Algorithm 1 (ball state resident in VMEM),
-                 single-ball and multi-ball (B-model bank, one data pass)
+streamsvm_scan — blocked one-pass Algorithm 1 (ball state resident in VMEM):
+                 single-ball, and the tiled multi-ball bank engine — a 2-D
+                 data-major grid training B models per stream pass for
+                 arbitrary B (bank tiled across VMEM scratch), with fused
+                 Algorithm-2 lookahead windows and a bf16 stream-tile policy
 gram           — tiled kernel-matrix blocks (linear / RBF epilogues)
 
-ops.py carries the jit'd public wrappers; ref.py the pure-jnp oracles.
-Kernels validate in interpret=True mode on CPU and target TPU BlockSpec
-tiling (128-aligned lanes, f32 VMEM accumulators).
+ops.py carries the jit'd public wrappers (padding, bank tiling, dtype
+policy); ref.py the pure-jnp/numpy oracles. Kernels validate in
+interpret=True mode on CPU and target TPU BlockSpec tiling (128-aligned
+lanes, f32 VMEM accumulators).
 """
 from .ops import gram, streamsvm_fit, streamsvm_fit_many
 

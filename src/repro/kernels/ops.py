@@ -2,8 +2,25 @@
 
 These are the entry points the rest of the framework uses; they handle
 128-alignment padding, interpret-mode selection (CPU container vs real TPU),
-and state packing. Semantics match ref.py exactly (tests sweep shapes and
-dtypes).
+bank tiling (`b_tile`), the stream dtype policy, and state packing.
+Semantics match ref.py exactly (tests sweep shapes and dtypes).
+
+Dtype policy
+------------
+``stream_dtype`` controls the precision the *streamed* tiles — the
+(block_n, D) data tiles and (b_tile, block_n) sign tiles — are DMA'd from
+HBM as. ``"bf16"`` halves stream HBM traffic, which is the dominant byte
+term at scale (the bank is O(B*D) once, the stream is O(N*D) every fit).
+The bank, ball scalars, and every in-kernel accumulator stay f32
+regardless. Labels in {-1, 0, +1} are exact in bf16; feature rounding is
+bounded by the bf16 eps sweep in tests/test_tiled_engine.py.
+
+Compile caching
+---------------
+``c`` / ``cs`` enter the kernels only through the traced ``1/C`` array, so
+sweeping C values NEVER recompiles — only shape, ``block_n``, ``b_tile``,
+``variant``, ``lookahead`` and dtype changes do (regression-tested via the
+jit cache in tests/test_tiled_engine.py).
 """
 from __future__ import annotations
 
@@ -16,6 +33,39 @@ from repro.core.meb import Ball
 from .gram import gram_pallas
 from .streamsvm_scan import streamsvm_scan_many_pallas, streamsvm_scan_pallas
 
+_STREAM_DTYPES = {
+    None: None,
+    "f32": jnp.float32,
+    "float32": jnp.float32,
+    "bf16": jnp.bfloat16,
+    "bfloat16": jnp.bfloat16,
+}
+
+
+def _resolve_stream_dtype(stream_dtype):
+    if stream_dtype in _STREAM_DTYPES:
+        return _STREAM_DTYPES[stream_dtype]
+    try:
+        return jnp.dtype(stream_dtype).type
+    except TypeError:
+        raise ValueError(
+            f"unknown stream_dtype {stream_dtype!r}; expected None, 'f32', "
+            "'bf16', or a jnp dtype"
+        ) from None
+
+
+def bank_tiling(b: int, b_tile: int | None):
+    """Resolve the engine's bank tiling for B models.
+
+    Returns ``(effective_b_tile, n_bank_tiles)``: the requested tile rounded
+    up to the f32 sublane multiple of 8 (default: one tile holding the whole
+    bank) and the number of tiles covering the (padded) bank. The single
+    source of truth for this policy — the throughput harness derives its
+    modeled tile counts from here too.
+    """
+    bt = -(-b // 8) * 8 if b_tile is None else -(-b_tile // 8) * 8
+    return bt, -(-b // bt)
+
 
 def _pad_to(x, mult, axis):
     size = x.shape[axis]
@@ -27,11 +77,11 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, widths)
 
 
-@partial(jax.jit, static_argnames=("c", "block_n", "interpret"))
+@partial(jax.jit, static_argnames=("block_n", "interpret"))
 def streamsvm_fit(
     X: jax.Array,
     y: jax.Array,
-    c: float,
+    c,
     ball: Ball | None = None,
     *,
     block_n: int = 256,
@@ -40,13 +90,19 @@ def streamsvm_fit(
     """One-pass Algorithm 1 via the Pallas kernel. Returns a core Ball.
 
     Starts from `ball` if given, else initializes from the first example
-    (exact variant: xi2 = 1/C).
+    (exact variant: xi2 = 1/C). ``c`` is traced (a C sweep reuses one
+    compilation); only ``block_n``/``interpret`` are static.
     """
     n, d = X.shape
-    c_inv = 1.0 / c
+    if y.shape != (n,):
+        raise ValueError(
+            f"y must be (N,) labels matching X: got y.shape={y.shape}, "
+            f"X.shape={X.shape}"
+        )
+    c_inv = 1.0 / jnp.asarray(c, jnp.float32)
     if ball is None:
         w0 = y[0] * X[0]
-        r0, xi20, m0 = 0.0, c_inv, 1
+        r0, xi20, m0 = jnp.float32(0.0), c_inv, 1
         X, y = X[1:], y[1:]
         n -= 1
     else:
@@ -61,7 +117,12 @@ def streamsvm_fit(
     return Ball(w=w[:d], r=r, xi2=xi2, m=m)
 
 
-@partial(jax.jit, static_argnames=("variant", "block_n", "interpret"))
+@partial(
+    jax.jit,
+    static_argnames=(
+        "variant", "lookahead", "block_n", "b_tile", "stream_dtype", "interpret",
+    ),
+)
 def streamsvm_fit_many(
     X: jax.Array,
     Y: jax.Array,
@@ -69,24 +130,69 @@ def streamsvm_fit_many(
     balls: Ball | None = None,
     *,
     variant: str = "exact",
+    lookahead=None,
     block_n: int = 256,
+    b_tile: int | None = None,
+    stream_dtype=None,
     interpret: bool | None = None,
 ) -> Ball:
-    """One-pass Algorithm 1 for a bank of B models — ONE read of the stream.
+    """One-pass Algorithm 1/2 for a bank of B models — ONE read of the stream.
 
     X: (N, D) shared stream; Y: (B, N) per-model label signs in {-1, +1}
     (classes x C-grid x variants all flatten onto the B axis); cs: scalar or
-    (B,) per-model C. Starts from ``balls`` (a Ball stacked on a leading B
-    axis) if given, else initializes every model from the first example.
-    Returns a stacked Ball; state stays O(B * D) while each (block_n, D) tile
-    is loaded from HBM exactly once and updates all B models.
+    (B,) per-model C (traced — a C sweep reuses one compilation). Starts from
+    ``balls`` (a Ball stacked on a leading B axis) if given, else initializes
+    every model from the first example. Returns a stacked Ball; state stays
+    O(B * D) while each (block_n, D) tile is loaded from HBM exactly once and
+    updates all B models.
+
+    variant: "exact" / "paper-listing" select Algorithm 1's slack gain;
+    "lookahead" / "lookahead-paper" run fused Algorithm 2 (exact vs
+    paper-listing slack gain) with per-model windows given by ``lookahead``
+    (an int, or a length-B tuple of ints; static). Windows are flushed
+    farthest-point-first when full and at end of stream.
+    b_tile: models per VMEM bank tile (rounded up to the f32 sublane multiple
+    of 8; default: one tile holding the whole bank). The engine's grid is
+    data-major, so any B runs in ONE stream pass — B/b_tile bank tiles
+    revisit each resident stream tile instead of re-reading it.
+    stream_dtype: None/"f32" or "bf16" — see the module dtype policy.
     """
     b, n_y = Y.shape
     n, d = X.shape
-    assert n_y == n, (Y.shape, X.shape)
+    if n_y != n:
+        raise ValueError(
+            f"Y must be (B, N) sign rows matching X: got Y.shape={Y.shape}, "
+            f"X.shape={X.shape}"
+        )
+    if variant not in ("exact", "paper-listing", "lookahead", "lookahead-paper"):
+        raise ValueError(
+            f"unknown variant {variant!r}; expected 'exact', 'paper-listing', "
+            "'lookahead' or 'lookahead-paper'"
+        )
+    is_lookahead = variant in ("lookahead", "lookahead-paper")
+    if not is_lookahead and lookahead is not None:
+        raise ValueError(
+            f"lookahead={lookahead!r} requires variant='lookahead' or "
+            f"'lookahead-paper' (got variant={variant!r})"
+        )
+    stream_dtype = _resolve_stream_dtype(stream_dtype)
     cs = jnp.broadcast_to(jnp.asarray(cs, jnp.float32), (b,))
     c_inv = 1.0 / cs
-    gain = c_inv if variant == "exact" else jnp.ones_like(c_inv)
+    gain = (
+        jnp.ones_like(c_inv)
+        if variant in ("paper-listing", "lookahead-paper")
+        else c_inv
+    )
+    if is_lookahead:
+        lookahead = 1 if lookahead is None else lookahead
+        if isinstance(lookahead, int):
+            lookahead = (lookahead,) * b
+        lookahead = tuple(int(l) for l in lookahead)
+        if len(lookahead) != b or min(lookahead) < 1:
+            raise ValueError(
+                f"lookahead must be an int >= 1 or a length-B tuple of them: "
+                f"got {lookahead} for B={b}"
+            )
     if balls is None:
         w0 = Y[:, 0:1] * X[0][None, :]
         r0 = jnp.zeros((b,), jnp.float32)
@@ -102,27 +208,42 @@ def streamsvm_fit_many(
             xi2=jnp.broadcast_to(jnp.asarray(xi20, jnp.float32), (b,)),
             m=jnp.broadcast_to(jnp.asarray(m0, jnp.int32), (b,)),
         )
-    # Pad models to the f32 sublane multiple; padded rows carry zero signs and
-    # C=1 so they stay finite, and are sliced off below.
-    bp = -(-b // 8) * 8
+    # Pad models to a whole number of bank tiles (tiles themselves to the f32
+    # sublane multiple of 8); padded rows carry zero signs, C=1, L=1 and an
+    # infinite starting radius — they never "violate", so they absorb nothing
+    # and (in lookahead mode) never buffer or flush — and are sliced off
+    # below.
+    bt, _ = bank_tiling(b, b_tile)
+    bp = -(-b // bt) * bt
     live = jnp.arange(bp) < b
     Xp = _pad_to(_pad_to(X.astype(jnp.float32), 128, 1), block_n, 0)
-    Yp = _pad_to(_pad_to(Y.astype(jnp.float32), block_n, 1), 8, 0)
-    W0p = _pad_to(_pad_to(w0.astype(jnp.float32), 128, 1), 8, 0)
+    Yp = _pad_to(_pad_to(Y.astype(jnp.float32), block_n, 1), bp, 0)
+    W0p = _pad_to(_pad_to(w0.astype(jnp.float32), 128, 1), bp, 0)
     pad1 = lambda v: _pad_to(
-        jnp.broadcast_to(jnp.asarray(v, jnp.float32), (b,)), 8, 0
+        jnp.broadcast_to(jnp.asarray(v, jnp.float32), (b,)), bp, 0
     )
+    if is_lookahead:
+        l_pad = lookahead + (1,) * (bp - b)
+        l_arr = jnp.asarray(l_pad, jnp.int32)
+        l_max = max(lookahead)
+    else:
+        l_arr = None
+        l_max = None
     W, r, xi2, m = streamsvm_scan_many_pallas(
         Xp,
         Yp,
         W0p,
-        pad1(r0),
+        jnp.where(live, pad1(r0), jnp.inf),
         pad1(xi20),
         jnp.where(live, pad1(c_inv), 1.0),
-        _pad_to(jnp.broadcast_to(jnp.asarray(m0, jnp.int32), (b,)), 8, 0),
+        _pad_to(jnp.broadcast_to(jnp.asarray(m0, jnp.int32), (b,)), bp, 0),
         jnp.where(live, pad1(gain), 1.0),
+        lookahead=l_arr,
+        lookahead_max=l_max,
         n_valid=n,
         block_n=block_n,
+        b_tile=bt,
+        stream_dtype=stream_dtype,
         interpret=interpret,
     )
     return Ball(w=W[:b, :d], r=r[:b], xi2=xi2[:b], m=m[:b])
@@ -146,6 +267,11 @@ def gram(
     """Kernel matrix K[i, j] = k(a_i, b_j) with MXU tiling."""
     m, d = A.shape
     n, _ = B.shape
+    if B.shape[1] != d:
+        raise ValueError(
+            f"A and B must share the feature axis: got A.shape={A.shape}, "
+            f"B.shape={B.shape}"
+        )
     bm_ = min(bm, max(8, m))
     bn_ = min(bn, max(128, n))
     Ap = _pad_to(_pad_to(A.astype(jnp.float32), bk, 1), bm_, 0)

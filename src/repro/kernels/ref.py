@@ -1,13 +1,15 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose references).
+"""Pure-jnp/numpy oracles for every Pallas kernel (the allclose references).
 
 Deliberately written as straight-line jnp (row-at-a-time scan for the
-streaming kernel, one einsum for the Gram kernel) and independent of the
+streaming kernel, one einsum for the Gram kernel) or plain-python numpy
+(the lookahead oracle, buffer as a python list) and independent of the
 kernel implementations.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def streamsvm_scan_ref(X, y, w0, r0, xi20, c_inv, m0, *, gain=None, n_valid=None):
@@ -65,6 +67,99 @@ def streamsvm_scan_many_ref(X, Y, W0, r0, xi20, c_inv, m0, *, gain=None, n_valid
     return jax.vmap(one)(
         Y, jnp.asarray(W0, jnp.float32), bcast(r0), bcast(xi20), bcast(c_inv),
         bcast(m0).astype(jnp.int32), gain,
+    )
+
+
+def streamsvm_scan_lookahead_ref(
+    X, y, w0, r0, xi20, c_inv, m0, lookahead, *, gain=None, n_valid=None
+):
+    """Row-at-a-time Algorithm 2: deferred acceptance through an L-row window.
+
+    A violating row is buffered instead of absorbed; when the buffer holds
+    ``lookahead`` rows it is flushed farthest-point-first — repeatedly apply
+    the Algorithm-1 update to the farthest buffered point and drop the whole
+    window as soon as its farthest point is already enclosed (greedy
+    Badoiu-Clarkson insertion over the window; the engine's in-kernel
+    semantics). ``m`` counts buffered violators at push time (matching the
+    QP path's per-flush accounting). The trailing partial window is flushed
+    at end of stream. ``lookahead == 1`` is exactly Algorithm 1.
+
+    Plain-python numpy on purpose: the slow, obviously-correct target the
+    fused kernel is swept against.
+    """
+    L = int(lookahead)
+    if L < 1:
+        raise ValueError(f"lookahead must be >= 1, got {L}")
+    X = np.asarray(X, np.float32)
+    y = np.asarray(y, np.float32)
+    w = np.array(w0, np.float32, copy=True)
+    r = np.float32(r0)
+    xi2 = np.float32(xi20)
+    cinv = np.float32(c_inv)
+    g = np.float32(cinv if gain is None else gain)
+    m = int(m0)
+    n = X.shape[0]
+    nv = n if n_valid is None else int(n_valid)
+    buf: list = []
+
+    def dist(p):
+        d2 = np.sum((w - p) ** 2, dtype=np.float32) + xi2 + cinv
+        return np.sqrt(np.maximum(d2, np.float32(1e-12)))
+
+    def flush():
+        nonlocal w, r, xi2, buf
+        while buf:
+            ds = [dist(p) for p in buf]
+            k = int(np.argmax(ds))
+            dk = ds[k]
+            if not dk >= r:  # farthest enclosed -> whole window enclosed
+                buf = []
+                break
+            s = np.float32(0.5) * (np.float32(1.0) - r / dk)
+            w = (np.float32(1.0) - s) * w + s * buf[k]
+            r = r + np.float32(0.5) * (dk - r)
+            xi2 = xi2 * (np.float32(1.0) - s) ** 2 + s**2 * g
+            buf.pop(k)
+
+    for i in range(min(n, nv)):
+        p = y[i] * X[i]
+        if dist(p) >= r:
+            buf.append(p)
+            m += 1
+            if len(buf) >= L:
+                flush()
+    flush()  # trailing partial window
+    return w, r, xi2, m
+
+
+def streamsvm_scan_lookahead_many_ref(
+    X, Y, W0, r0, xi20, c_inv, m0, lookahead, *, gain=None, n_valid=None
+):
+    """Bank-of-balls lookahead oracle: per-model Algorithm 2, per-model L.
+
+    Shapes as in ``streamsvm_scan_many_ref`` plus ``lookahead``: an int or
+    (B,) of ints (python loop over models — L is per-model static).
+    """
+    b = Y.shape[0]
+    bc = lambda v: np.broadcast_to(np.asarray(v, np.float32), (b,))
+    r0, xi20, c_inv = bc(r0), bc(xi20), bc(c_inv)
+    m0 = np.broadcast_to(np.asarray(m0), (b,)).astype(np.int32)
+    gain = c_inv if gain is None else bc(gain)
+    ls = np.broadcast_to(np.asarray(lookahead), (b,)).astype(np.int32)
+    W0 = np.asarray(W0, np.float32)
+    outs = [
+        streamsvm_scan_lookahead_ref(
+            X, np.asarray(Y)[i], W0[i], r0[i], xi20[i], c_inv[i], m0[i],
+            int(ls[i]), gain=gain[i], n_valid=n_valid,
+        )
+        for i in range(b)
+    ]
+    w = np.stack([o[0] for o in outs])
+    return (
+        w,
+        np.asarray([o[1] for o in outs], np.float32),
+        np.asarray([o[2] for o in outs], np.float32),
+        np.asarray([o[3] for o in outs], np.int32),
     )
 
 

@@ -19,15 +19,35 @@ scan (tests sweep shapes/dtypes against ref.py).
 
 Scalar state is carried in an SMEM (4,)-vector: [r, xi2, m, n_valid].
 
-The multi-ball variant (`_kernel_many` / `streamsvm_scan_many_pallas`) is the
-same pass generalized to a BANK of B independent models: a (B, D) bank of
-ball centers plus a (4, B) scalar block live in VMEM scratch, each (block_n,
-D) tile is read from HBM once, and one shared unsigned block Gram + one
-bank/tile matmul feed a fori_loop whose conditional update is vectorized
-across the model axis (per-model label signs re-applied as rank-1 factors).
-The bank itself is updated once per block via accumulated (decay, alpha)
-coefficients — a single (B, block_n) x (block_n, D) matmul — so B models cost
-one pass of data movement.
+The multi-ball variant (`_kernel_many_tiled` / `streamsvm_scan_many_pallas`)
+is the same pass generalized to a BANK of B independent models on a 2-D grid
+``(n_block, bank_tile)`` with DATA-MAJOR iteration order: the data-block axis
+is outer and the bank-tile axis inner, so each (block_n, D) stream tile is
+fetched from HBM exactly once (its BlockSpec index ignores the bank axis, so
+Pallas elides the re-copy across the inner iterations) and is revisited by
+every (b_tile, D) slice of the bank. The full (B, D) bank plus the (4, B)
+scalar block live tiled across VMEM-resident scratch, dynamically sliced per
+bank tile — the per-step BlockSpec working set is O(b_tile * D + block_n * D)
+no matter how large B grows, which lifts PR 1's "whole bank per grid step"
+VMEM cap. Per (i, j) step: one shared unsigned block Gram + one tile/block
+matmul feed a fori_loop whose conditional update is vectorized across the
+b_tile model lanes (per-model label signs re-applied as rank-1 factors), and
+the bank tile is updated once per block via accumulated (decay, alpha)
+coefficients — a single (b_tile, block_n) x (block_n, D) matmul. B models
+still cost ONE pass of data movement, now for arbitrary B.
+
+The fused Algorithm-2 variant (``lookahead`` is not None) defers acceptance:
+violating rows are pushed into a per-model L-row VMEM buffer (persistent
+scratch, like the bank) and only when a model's buffer fills is it flushed —
+repeatedly absorbing the FARTHEST buffered point (the paper's farthest-point
+lookahead; greedy Badoiu-Clarkson insertion over the window) and dropping
+buffered points the grown ball now encloses. Per-model L rides a (B,) input;
+buffers persist across block AND tile boundaries, with a final partial flush
+on the last grid step (same boundary-flush semantics as fit_chunked).
+
+Stream tiles may be bf16 (``X``/``Y`` dtype is whatever the caller DMAs in —
+see ops.py's ``stream_dtype`` policy); the bank, scalar state, and every
+accumulator stay f32 in scratch.
 """
 from __future__ import annotations
 
@@ -113,104 +133,257 @@ def _kernel(
         s_out_ref[0, 3] = st_ref[3]
 
 
-def _kernel_many(
-    x_ref,  # (block_n, D) VMEM tile of X (raw, unsigned rows)
-    ys_ref,  # (B, block_n) VMEM tile of per-model label signs
-    w0_ref,  # (B, D) initial ball-center bank
-    s0_ref,  # (B, 4) initial scalars [r, xi2, c_inv, _] per model
-    m0_ref,  # (B, 1) initial core-vector counts (int32)
-    gain_ref,  # (B, 1) per-model slack gain (1/C exact, 1.0 paper-listing)
+def _bank_flush(w, r, xi2, g, cnt, buf, fmask, x, ys, c_inv, gain):
+    """Farthest-first flush of the lookahead buffers of the masked models.
+
+    Vectorized over the b_tile model lanes: up to L_max greedy steps, each
+    absorbing the farthest still-buffered point of every flushing model (the
+    Algorithm-1 update), dropping the whole remaining window as soon as its
+    farthest point is already enclosed. ``g`` (the maintained <w, y x_k> for
+    the rest of the current block) picks up a rank-1 correction per absorb via
+    one (b_tile, D) x (D, block_n) matmul. Returns the updated carry pieces
+    (m is counted at buffer-push time, not here).
+    """
+    bt, l_max, _ = buf.shape
+    slot = jax.lax.broadcasted_iota(jnp.int32, (bt, l_max), 1)
+    remain = jnp.logical_and(slot < cnt[:, None], fmask[:, None])
+
+    def fstep(_, carry):
+        w, r, xi2, g, remain = carry
+        bd2 = (
+            jnp.sum((w[:, None, :] - buf) ** 2, axis=-1)
+            + xi2[:, None]
+            + c_inv[:, None]
+        )  # (bt, L)
+        bd = jnp.sqrt(jnp.maximum(bd2, 1e-12))
+        bdm = jnp.where(remain, bd, -jnp.inf)
+        far = jnp.argmax(bdm, axis=1)  # (bt,)
+        dfar = jnp.max(bdm, axis=1)
+        has = jnp.any(remain, axis=1)
+        act = jnp.logical_and(has, dfar >= r)  # absorb only live violators
+        s = jnp.where(act, 0.5 * (1.0 - r / jnp.where(act, dfar, 1.0)), 0.0)
+        one_s = 1.0 - s
+        sel = slot == far[:, None]
+        pfar = jnp.sum(jnp.where((sel & remain)[:, :, None], buf, 0.0), axis=1)
+        w = one_s[:, None] * w + s[:, None] * pfar
+        r = jnp.where(act, r + 0.5 * (dfar - r), r)
+        xi2 = xi2 * one_s**2 + s**2 * gain
+        # <w', y_bk x_k> = (1-s) g + s y_bk <pfar, x_k>
+        pg = jax.lax.dot_general(
+            pfar, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bt, block_n)
+        g = one_s[:, None] * g + s[:, None] * (ys * pg)
+        # remove the absorbed slot; if the farthest point was enclosed, every
+        # remaining buffered point is too — drop the whole window.
+        drop_all = jnp.logical_and(has, jnp.logical_not(act))
+        remain = jnp.logical_and(remain, jnp.logical_not(sel & act[:, None]))
+        remain = jnp.where(drop_all[:, None], False, remain)
+        return w, r, xi2, g, remain
+
+    w, r, xi2, g, _ = jax.lax.fori_loop(
+        0, l_max, fstep, (w, r, xi2, g, remain)
+    )
+    cnt = jnp.where(fmask, 0, cnt)
+    return w, r, xi2, g, cnt
+
+
+def _kernel_many_tiled(
+    x_ref,  # (block_n, D) stream tile (raw rows; f32 or bf16)
+    ys_ref,  # (b_tile, block_n) per-model label-sign tile
+    w0_ref,  # (b_tile, D) initial ball-center tile of the bank
+    s0_ref,  # (b_tile, 4) initial scalars [r, xi2, c_inv, _] per model
+    m0_ref,  # (b_tile, 1) initial core-vector counts (int32)
+    gain_ref,  # (b_tile, 1) per-model slack gain (1/C exact, 1.0 paper-listing)
+    l_ref,  # (b_tile, 1) per-model lookahead window (int32; 1 == greedy)
     nv_ref,  # (1, 1) number of valid rows (N before padding)
-    w_out_ref,  # (B, D) output bank
-    s_out_ref,  # (B, 4) output scalars
-    m_out_ref,  # (B, 1) output core-vector counts (int32)
-    w_ref,  # VMEM scratch (B, D) — persistent bank of ball centers
+    w_out_ref,  # (b_tile, D) output bank tile
+    s_out_ref,  # (b_tile, 4) output scalars
+    m_out_ref,  # (b_tile, 1) output core-vector counts (int32)
+    bank_ref,  # VMEM scratch (B, D) — persistent full bank, sliced per tile
     st_ref,  # VMEM scratch (4, B) — persistent rows [r, xi2, wsq, _]
     m_ref,  # VMEM scratch (1, B) int32 — persistent m (exact past 2^24)
+    cnt_ref=None,  # VMEM scratch (1, B) int32 — lookahead buffer fill counts
+    buf_ref=None,  # VMEM scratch (B * L_max, D) — lookahead windows (flat)
     *,
     block_n: int,
+    b_tile: int,
+    lookahead_max: int | None,
 ):
-    step = pl.program_id(0)
+    i = pl.program_id(0)  # data block (outer — the stream is read ONCE)
+    j = pl.program_id(1)  # bank tile (inner — revisits the resident tile)
+    n_blocks = pl.num_programs(0)
+    j0 = j * b_tile
+    tile = pl.ds(j0, b_tile)
 
-    @pl.when(step == 0)
-    def _init():
-        w_ref[...] = w0_ref[...]
-        st_ref[0, :] = s0_ref[:, 0]  # r
-        st_ref[1, :] = s0_ref[:, 1]  # xi2
-        st_ref[2, :] = jnp.sum(w0_ref[...] * w0_ref[...], axis=1)  # |w_b|^2
-        st_ref[3, :] = jnp.zeros_like(s0_ref[:, 3])
-        m_ref[0, :] = m0_ref[:, 0]
+    @pl.when(i == 0)
+    def _init():  # first visit of bank tile j
+        bank_ref[tile, :] = w0_ref[...].astype(jnp.float32)
+        st_ref[0, tile] = s0_ref[:, 0]  # r
+        st_ref[1, tile] = s0_ref[:, 1]  # xi2
+        st_ref[2, tile] = jnp.sum(
+            w0_ref[...].astype(jnp.float32) ** 2, axis=1
+        )  # |w_b|^2
+        st_ref[3, tile] = jnp.zeros_like(s0_ref[:, 3])
+        m_ref[0, tile] = m0_ref[:, 0]
+        if lookahead_max is not None:
+            cnt_ref[0, tile] = jnp.zeros((b_tile,), jnp.int32)
+            buf_ref[pl.ds(j0 * lookahead_max, b_tile * lookahead_max), :] = (
+                jnp.zeros((b_tile * lookahead_max, buf_ref.shape[1]), jnp.float32)
+            )
 
-    c_inv = s0_ref[:, 2]  # (B,)
-    gain = gain_ref[:, 0]  # (B,)
+    c_inv = s0_ref[:, 2]  # (b_tile,)
+    gain = gain_ref[:, 0]  # (b_tile,)
     n_valid = nv_ref[0, 0]
 
-    x = x_ref[...]  # (block_n, D)
-    ys = ys_ref[...]  # (B, block_n)
+    x = x_ref[...].astype(jnp.float32)  # (block_n, D) — bf16 tiles upcast here
+    ys = ys_ref[...].astype(jnp.float32)  # (b_tile, block_n)
+    w_tile = bank_ref[tile, :]  # (b_tile, D)
     # One block Gram of the *unsigned* rows, shared by every model (signs are
-    # re-applied per model as rank-1 outer factors), plus the bank/tile inner
+    # re-applied per model as rank-1 outer factors), plus the tile/block inner
     # products — the only O(D) work in the block, all MXU.
     gram = jax.lax.dot_general(
         x, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )  # (block_n, block_n)
     h0 = jax.lax.dot_general(
-        w_ref[...], x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )  # (B, block_n): <w_b, x_k>
+        w_tile, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (b_tile, block_n): <w_b, x_k>
     g0 = ys * h0  # g[b, k] = <w_b, y_bk x_k>
 
-    row_base = step * block_n
+    row_base = i * block_n
     row_ids = row_base + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
     valid = (row_ids < n_valid).astype(jnp.float32)
-    col_ids = jax.lax.broadcasted_iota(jnp.int32, ys.shape, 1)  # (B, block_n)
+    col_ids = jax.lax.broadcasted_iota(jnp.int32, ys.shape, 1)  # (b_tile, block_n)
 
-    def body(j, carry):
-        g, alpha, decay, r, xi2, wsq, m = carry
-        gj = g[:, j]  # (B,) current <w_b, y_bj x_j>
-        gjj = gram[j, j]
-        d2 = wsq - 2.0 * gj + gjj + xi2 + c_inv
-        d = jnp.sqrt(jnp.maximum(d2, 1e-12))
-        upd = jnp.logical_and(d >= r, valid[j] > 0.0)
-        s = jnp.where(upd, 0.5 * (1.0 - r / d), 0.0)  # (B,)
-        one_s = 1.0 - s
-        yj = ys[:, j]  # (B,)
-        # rank-1 maintenance of g under w_b <- (1-s_b) w_b + s_b y_bj x_j:
-        # <x_j, y_bk x_k> = y_bk G[j, k]
-        g = one_s[:, None] * g + (s * yj)[:, None] * (ys * gram[j][None, :])
-        # Deferred bank update: w_end = decay * w_start + sum_j alpha_j y_bj x_j,
-        # with alpha_j = s_j * prod_{k>j} (1 - s_k) — applied post-loop as one
-        # (B, block_n) x (block_n, D) matmul instead of a per-row AXPY.
-        alpha = one_s[:, None] * alpha + jnp.where(col_ids == j, s[:, None], 0.0)
-        decay = decay * one_s
-        wsq = one_s**2 * wsq + 2.0 * s * one_s * gj + s**2 * gjj
-        r = jnp.where(upd, r + 0.5 * (d - r), r)
-        xi2 = xi2 * one_s**2 + s**2 * gain
-        m = m + upd.astype(jnp.int32)
-        return g, alpha, decay, r, xi2, wsq, m
+    if lookahead_max is None:
+        # ----- Algorithm 1: immediate greedy acceptance (bit-exact with the
+        # single-tile PR 1 path — identical per-lane arithmetic). -----
+        def body(jr, carry):
+            g, alpha, decay, r, xi2, wsq, m = carry
+            gj = g[:, jr]  # (b_tile,) current <w_b, y_bj x_j>
+            gjj = gram[jr, jr]
+            d2 = wsq - 2.0 * gj + gjj + xi2 + c_inv
+            d = jnp.sqrt(jnp.maximum(d2, 1e-12))
+            upd = jnp.logical_and(d >= r, valid[jr] > 0.0)
+            s = jnp.where(upd, 0.5 * (1.0 - r / d), 0.0)  # (b_tile,)
+            one_s = 1.0 - s
+            yj = ys[:, jr]  # (b_tile,)
+            # rank-1 maintenance of g under w_b <- (1-s_b) w_b + s_b y_bj x_j:
+            # <x_j, y_bk x_k> = y_bk G[j, k]
+            g = one_s[:, None] * g + (s * yj)[:, None] * (ys * gram[jr][None, :])
+            # Deferred bank update: w_end = decay * w_start + sum_j alpha_j
+            # y_bj x_j with alpha_j = s_j * prod_{k>j} (1 - s_k) — applied
+            # post-loop as ONE (b_tile, block_n) x (block_n, D) matmul.
+            alpha = one_s[:, None] * alpha + jnp.where(
+                col_ids == jr, s[:, None], 0.0
+            )
+            decay = decay * one_s
+            wsq = one_s**2 * wsq + 2.0 * s * one_s * gj + s**2 * gjj
+            r = jnp.where(upd, r + 0.5 * (d - r), r)
+            xi2 = xi2 * one_s**2 + s**2 * gain
+            m = m + upd.astype(jnp.int32)
+            return g, alpha, decay, r, xi2, wsq, m
 
-    B = ys.shape[0]
-    init = (
-        g0,
-        jnp.zeros_like(g0),
-        jnp.ones((B,), jnp.float32),
-        st_ref[0, :],
-        st_ref[1, :],
-        st_ref[2, :],
-        m_ref[0, :],
-    )
-    g, alpha, decay, r, xi2, wsq, m = jax.lax.fori_loop(0, block_n, body, init)
-    w_ref[...] = decay[:, None] * w_ref[...] + jax.lax.dot_general(
-        alpha * ys, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )
-    st_ref[0, :], st_ref[1, :], st_ref[2, :] = r, xi2, wsq
-    m_ref[0, :] = m
-
-    @pl.when(step == pl.num_programs(0) - 1)
-    def _finish():
-        w_out_ref[...] = w_ref[...]
-        s_out_ref[...] = jnp.stack(
-            (st_ref[0, :], st_ref[1, :], c_inv, st_ref[3, :]), axis=-1
+        init = (
+            g0,
+            jnp.zeros_like(g0),
+            jnp.ones((b_tile,), jnp.float32),
+            st_ref[0, tile],
+            st_ref[1, tile],
+            st_ref[2, tile],
+            m_ref[0, tile],
         )
-        m_out_ref[...] = m_ref[0, :][:, None]
+        g, alpha, decay, r, xi2, wsq, m = jax.lax.fori_loop(
+            0, block_n, body, init
+        )
+        bank_ref[tile, :] = decay[:, None] * w_tile + jax.lax.dot_general(
+            alpha * ys, x, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        # ----- Algorithm 2: deferred acceptance through per-model L-row
+        # lookahead windows, flushed farthest-point-first. -----
+        l_arr = l_ref[:, 0]  # (b_tile,) per-model L
+        btile_rows = pl.ds(j0 * lookahead_max, b_tile * lookahead_max)
+        buf0 = buf_ref[btile_rows, :].reshape(
+            b_tile, lookahead_max, x.shape[1]
+        )
+
+        def body(jr, carry):
+            g, w, r, xi2, wsq, m, cnt, buf = carry
+            gj = g[:, jr]
+            d2 = wsq - 2.0 * gj + gram[jr, jr] + xi2 + c_inv
+            d = jnp.sqrt(jnp.maximum(d2, 1e-12))
+            violate = jnp.logical_and(d >= r, valid[jr] > 0.0)
+            # push the signed row into each violated model's window
+            p = ys[:, jr][:, None] * x[jr][None, :]  # (b_tile, D)
+            slot = jax.lax.broadcasted_iota(
+                jnp.int32, (b_tile, lookahead_max), 1
+            )
+            put = jnp.logical_and(violate[:, None], slot == cnt[:, None])
+            buf = jnp.where(put[:, :, None], p[:, None, :], buf)
+            cnt = cnt + violate.astype(jnp.int32)
+            m = m + violate.astype(jnp.int32)  # counted at push (QP parity)
+            full = cnt >= l_arr
+
+            def flush(args):
+                g, w, r, xi2, wsq, cnt, buf = args
+                w, r, xi2, g, cnt = _bank_flush(
+                    w, r, xi2, g, cnt, buf, full, x, ys, c_inv, gain
+                )
+                # w only changes here, so |w|^2 only needs refreshing here
+                return g, w, r, xi2, jnp.sum(w * w, axis=1), cnt, buf
+
+            g, w, r, xi2, wsq, cnt, buf = jax.lax.cond(
+                jnp.any(full), flush, lambda a: a,
+                (g, w, r, xi2, wsq, cnt, buf),
+            )
+            return g, w, r, xi2, wsq, m, cnt, buf
+
+        init = (
+            g0,
+            w_tile,
+            st_ref[0, tile],
+            st_ref[1, tile],
+            st_ref[2, tile],
+            m_ref[0, tile],
+            cnt_ref[0, tile],
+            buf0,
+        )
+        g, w, r, xi2, wsq, m, cnt, buf = jax.lax.fori_loop(
+            0, block_n, body, init
+        )
+
+        # Final partial flush on the last data block (paper lines 12-14 /
+        # fit_chunked's boundary-flush semantics).
+        def final_flush(args):
+            w, r, xi2, g, wsq, cnt = args
+            w, r, xi2, g, cnt = _bank_flush(
+                w, r, xi2, g, cnt, buf, cnt > 0, x, ys, c_inv, gain
+            )
+            return w, r, xi2, g, jnp.sum(w * w, axis=1), cnt
+
+        w, r, xi2, g, wsq, cnt = jax.lax.cond(
+            jnp.logical_and(i == n_blocks - 1, jnp.any(cnt > 0)),
+            final_flush,
+            lambda a: a,
+            (w, r, xi2, g, wsq, cnt),
+        )
+        bank_ref[tile, :] = w
+        cnt_ref[0, tile] = cnt
+        buf_ref[btile_rows, :] = buf.reshape(
+            b_tile * lookahead_max, x.shape[1]
+        )
+
+    st_ref[0, tile], st_ref[1, tile], st_ref[2, tile] = r, xi2, wsq
+    m_ref[0, tile] = m
+
+    @pl.when(i == n_blocks - 1)
+    def _finish():
+        w_out_ref[...] = bank_ref[tile, :]
+        s_out_ref[...] = jnp.stack(
+            (st_ref[0, tile], st_ref[1, tile], c_inv, st_ref[3, tile]), axis=-1
+        )
+        m_out_ref[...] = m_ref[0, tile][:, None]
 
 
 def streamsvm_scan_pallas(
@@ -235,7 +408,11 @@ def streamsvm_scan_pallas(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     n, d = X.shape
-    assert n % block_n == 0, (n, block_n)
+    if n % block_n != 0:
+        raise ValueError(
+            f"N={n} must be a multiple of block_n={block_n} (pad the stream; "
+            "ops.streamsvm_fit does this)"
+        )
     grid = (n // block_n,)
 
     w0 = w0.reshape(1, d).astype(jnp.float32)
@@ -279,30 +456,64 @@ def streamsvm_scan_many_pallas(
     m0: jax.Array,
     gain: jax.Array | None = None,
     *,
+    lookahead: jax.Array | None = None,
+    lookahead_max: int | None = None,
     n_valid: int | None = None,
     block_n: int = 256,
+    b_tile: int | None = None,
+    stream_dtype=None,
     interpret: bool | None = None,
 ):
-    """One data pass updating a bank of B balls (the multi-ball engine).
+    """One data pass updating a bank of B balls (the tiled multi-ball engine).
 
-    X: (N, D) float32 stream (raw rows, no label signs) — D padded to a
-    multiple of 128, N to a multiple of block_n; rows >= n_valid are ignored.
+    X: (N, D) stream (raw rows, no label signs) — D padded to a multiple of
+    128, N to a multiple of block_n; rows >= n_valid are ignored.
     Y: (B, N) per-model label signs in {-1, +1} (0 on padded model rows).
     W0/(r0, xi20, c_inv, m0): per-model starting state, shapes (B, D)/(B,).
     gain: per-model slack gain (defaults to c_inv — the "exact" variant).
+    lookahead/lookahead_max: per-model (B,) int32 Algorithm-2 window sizes
+    plus their static max — None runs Algorithm 1. Partial windows are
+    flushed on the last grid step.
+    b_tile: models per bank tile (must divide B; defaults to B — the PR 1
+    single-tile layout). The grid is (N/block_n, B/b_tile) with the DATA axis
+    outer, so every stream tile is DMA'd from HBM once and revisited by all
+    bank tiles; the full bank persists in VMEM scratch across the grid.
+    stream_dtype: dtype the (block_n, D) stream and (b_tile, block_n) sign
+    tiles are DMA'd as (e.g. jnp.bfloat16 halves stream HBM traffic); bank,
+    scalar state, and accumulators stay f32.
 
-    Every (block_n, D) tile is loaded from HBM once and updates all B models:
-    one block Gram matmul + one bank/tile matmul feed a fori_loop that runs
-    the sequential conditional updates vectorized across the model axis.
     Returns (W, r, xi2, m) with leading axis B.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     n, d = X.shape
     b = Y.shape[0]
-    assert Y.shape == (b, n), (Y.shape, (b, n))
-    assert n % block_n == 0, (n, block_n)
-    grid = (n // block_n,)
+    if Y.shape != (b, n):
+        raise ValueError(
+            f"Y must be (B, N) sign rows matching X: got Y.shape={Y.shape}, "
+            f"X.shape={X.shape}"
+        )
+    if n % block_n != 0:
+        raise ValueError(
+            f"N={n} must be a multiple of block_n={block_n} (pad the stream; "
+            "ops.streamsvm_fit_many does this)"
+        )
+    if b_tile is None:
+        b_tile = b
+    if b % b_tile != 0:
+        raise ValueError(
+            f"B={b} must be a multiple of b_tile={b_tile} (pad the bank; "
+            "ops.streamsvm_fit_many does this)"
+        )
+    if (lookahead is None) != (lookahead_max is None):
+        raise ValueError(
+            "lookahead (per-model array) and lookahead_max (static int) must "
+            f"be passed together: got {lookahead=}, {lookahead_max=}"
+        )
+    n_blocks = n // block_n
+    n_btiles = b // b_tile
+    grid = (n_blocks, n_btiles)
+    stream_dtype = jnp.float32 if stream_dtype is None else stream_dtype
 
     W0 = W0.reshape(b, d).astype(jnp.float32)
     c_inv = jnp.broadcast_to(jnp.asarray(c_inv, jnp.float32), (b,))
@@ -319,43 +530,70 @@ def streamsvm_scan_many_pallas(
         axis=-1,
     )  # (B, 4)
     m0 = jnp.broadcast_to(jnp.asarray(m0, jnp.int32), (b,)).reshape(b, 1)
+    l_arr = (
+        jnp.ones((b,), jnp.int32)
+        if lookahead is None
+        else jnp.broadcast_to(jnp.asarray(lookahead, jnp.int32), (b,))
+    ).reshape(b, 1)
     nv = jnp.array([[n if n_valid is None else n_valid]], jnp.int32)
 
+    # Index maps. The stream tile ignores the (inner) bank axis, so Pallas
+    # keeps it resident across all bank tiles of a data block — that is the
+    # data-major reuse the 2-D grid exists for. W0 is only consumed on the
+    # i == 0 row of the grid and the outputs are only stored on the last row;
+    # parking their index at tile 0 elsewhere stops Pallas re-streaming
+    # B x D bytes every step (outputs flush once per tile, not once per step).
+    first_i = lambda i, j: (jnp.where(i == 0, j, 0), 0)
+    last_i = lambda i, j: (jnp.where(i == n_blocks - 1, j, 0), 0)
+    scratch = [
+        pltpu.VMEM((b, d), jnp.float32),
+        pltpu.VMEM((4, b), jnp.float32),
+        pltpu.VMEM((1, b), jnp.int32),
+    ]
+    if lookahead_max is not None:
+        scratch += [
+            pltpu.VMEM((1, b), jnp.int32),
+            pltpu.VMEM((b * lookahead_max, d), jnp.float32),
+        ]
+
     w_out, s_out, m_out = pl.pallas_call(
-        functools.partial(_kernel_many, block_n=block_n),
+        functools.partial(
+            _kernel_many_tiled,
+            block_n=block_n,
+            b_tile=b_tile,
+            lookahead_max=lookahead_max,
+        ),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
-            pl.BlockSpec((b, block_n), lambda i: (0, i)),
-            pl.BlockSpec((b, d), lambda i: (0, 0)),
-            pl.BlockSpec((b, 4), lambda i: (0, 0)),
-            pl.BlockSpec((b, 1), lambda i: (0, 0)),
-            pl.BlockSpec((b, 1), lambda i: (0, 0)),
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((b_tile, block_n), lambda i, j: (j, i)),
+            pl.BlockSpec((b_tile, d), first_i),
+            pl.BlockSpec((b_tile, 4), lambda i, j: (j, 0)),
+            pl.BlockSpec((b_tile, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((b_tile, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((b_tile, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((b, d), lambda i: (0, 0)),
-            pl.BlockSpec((b, 4), lambda i: (0, 0)),
-            pl.BlockSpec((b, 1), lambda i: (0, 0)),
+            pl.BlockSpec((b_tile, d), last_i),
+            pl.BlockSpec((b_tile, 4), last_i),
+            pl.BlockSpec((b_tile, 1), last_i),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((b, d), jnp.float32),
             jax.ShapeDtypeStruct((b, 4), jnp.float32),
             jax.ShapeDtypeStruct((b, 1), jnp.int32),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((b, d), jnp.float32),
-            pltpu.VMEM((4, b), jnp.float32),
-            pltpu.VMEM((1, b), jnp.int32),
-        ],
+        scratch_shapes=scratch,
         interpret=interpret,
     )(
-        X.astype(jnp.float32),
-        Y.astype(jnp.float32),
+        X.astype(stream_dtype),
+        Y.astype(stream_dtype),
         W0,
         s0,
         m0,
         gain.reshape(b, 1),
+        l_arr,
         nv,
     )
     return w_out, s_out[:, 0], s_out[:, 1], m_out[:, 0]

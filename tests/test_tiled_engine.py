@@ -1,0 +1,315 @@
+"""Tiled bank engine: b_tile sweeps, fused lookahead, bf16 tiles, recompiles.
+
+The tiled 2-D grid path must be BIT-EXACT (f32) with the single-tile layout —
+same per-lane arithmetic, only the grid decomposition changes — and the fused
+in-kernel Algorithm 2 must match the plain-python oracle in ref.py across
+(B, N, D, L, block_n), including L > block_n boundary flushes and per-model
+L. bf16 stream tiles trade bounded precision for half the stream traffic.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import fit_bank, fit_lookahead, fit_ovr, predict_ovr
+from repro.kernels import streamsvm_fit, streamsvm_fit_many
+from repro.kernels.ref import (
+    streamsvm_scan_lookahead_many_ref,
+    streamsvm_scan_lookahead_ref,
+    streamsvm_scan_many_ref,
+)
+
+
+def _bank_data(b, n, d, seed):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    Y = jnp.asarray(np.sign(rng.normal(size=(b, n))).astype(np.float32))
+    cs = jnp.asarray(np.exp(rng.uniform(-1, 4, size=b)).astype(np.float32))
+    return X, Y, cs
+
+
+# ---------------------------------------------------------------------------
+# Bank tiling (tentpole): 2-D grid == single-tile, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,n,d,block_n,b_tile", [
+    (64, 300, 20, 64, 8),      # 8 tiles: B = 8x the single-tile layout
+    (16, 512, 128, 128, 8),
+    (11, 257, 33, 64, 8),      # B not a multiple of b_tile (padded lanes)
+    (13, 300, 20, 64, 3),      # b_tile not a multiple of 8 (rounded up)
+    (24, 200, 40, 256, 8),     # N < block_n, multiple tiles
+])
+def test_tiled_bit_exact_with_single_tile(b, n, d, block_n, b_tile):
+    """The grid decomposition must not change a single bit of f32 output."""
+    X, Y, cs = _bank_data(b, n, d, seed=b * n + d)
+    one = streamsvm_fit_many(X, Y, cs, block_n=block_n)
+    tiled = streamsvm_fit_many(X, Y, cs, block_n=block_n, b_tile=b_tile)
+    np.testing.assert_array_equal(np.asarray(tiled.w), np.asarray(one.w))
+    np.testing.assert_array_equal(np.asarray(tiled.r), np.asarray(one.r))
+    np.testing.assert_array_equal(np.asarray(tiled.xi2), np.asarray(one.xi2))
+    np.testing.assert_array_equal(np.asarray(tiled.m), np.asarray(one.m))
+
+
+def test_tiled_matches_bank_ref_at_8x_tile():
+    """B = 8 * b_tile against the pure-jnp oracle (not just self-consistency)."""
+    b, n, d, b_tile = 64, 400, 24, 8
+    X, Y, cs = _bank_data(b, n, d, seed=17)
+    bank = streamsvm_fit_many(X, Y, cs, block_n=128, b_tile=b_tile)
+    c_inv = 1.0 / cs
+    W0 = Y[:, 0:1] * X[0][None, :]
+    w, r, xi2, m = streamsvm_scan_many_ref(
+        X[1:], Y[:, 1:], W0, 0.0, c_inv, c_inv, 1, gain=c_inv
+    )
+    np.testing.assert_allclose(np.asarray(bank.w), np.asarray(w), rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(bank.r), np.asarray(r), rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(bank.m), np.asarray(m))
+
+
+def test_padded_model_rows_stay_inert():
+    """B % b_tile != 0 pads model lanes; results must equal the unpadded run
+    and contain no NaN/inf leakage from the padded lanes."""
+    b, n, d = 10, 333, 18
+    X, Y, cs = _bank_data(b, n, d, seed=5)
+    plain = streamsvm_fit_many(X, Y, cs, block_n=64)
+    padded = streamsvm_fit_many(X, Y, cs, block_n=64, b_tile=8)  # pads to 16
+    np.testing.assert_array_equal(np.asarray(padded.w), np.asarray(plain.w))
+    np.testing.assert_array_equal(np.asarray(padded.m), np.asarray(plain.m))
+    assert np.isfinite(np.asarray(padded.w)).all()
+    assert np.isfinite(np.asarray(padded.r)).all()
+
+
+def test_tiled_restart_equals_continuous_pass():
+    """Bank checkpoint/resume with tiling == one continuous tiled pass.
+
+    allclose, not bit-equal: the restart re-derives |w|^2 from the
+    checkpointed center while the continuous pass maintains it by recursion
+    (identical to the PR 1 restart semantics).
+    """
+    b, n, d = 20, 514, 41
+    X, Y, cs = _bank_data(b, n, d, seed=99)
+    full = streamsvm_fit_many(X, Y, cs, block_n=64, b_tile=8)
+    head = streamsvm_fit_many(X[:200], Y[:, :200], cs, block_n=64, b_tile=8)
+    rest = streamsvm_fit_many(X[200:], Y[:, 200:], cs, head, block_n=64, b_tile=8)
+    np.testing.assert_allclose(
+        np.asarray(rest.w), np.asarray(full.w), rtol=2e-4, atol=2e-5
+    )
+    np.testing.assert_array_equal(np.asarray(rest.m), np.asarray(full.m))
+
+
+# ---------------------------------------------------------------------------
+# Fused Algorithm-2 lookahead vs the ref.py oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,n,d,block_n,b_tile,ls", [
+    (5, 257, 16, 64, 8, (1, 4, 7, 100, 3)),    # per-model L, L > block_n
+    (8, 400, 24, 128, 8, 10),                  # shared L
+    (3, 129, 7, 256, None, (2, 300, 5)),       # L >> N: single final flush
+    (12, 300, 33, 64, 8, 6),                   # unaligned B/D
+])
+def test_lookahead_kernel_matches_oracle(b, n, d, block_n, b_tile, ls):
+    X, Y, cs = _bank_data(b, n, d, seed=7 * b + n)
+    bank = streamsvm_fit_many(
+        X, Y, cs, variant="lookahead", lookahead=ls, block_n=block_n,
+        b_tile=b_tile,
+    )
+    c_inv = 1.0 / np.asarray(cs)
+    W0 = np.asarray(Y[:, 0:1] * X[0][None, :])
+    w, r, xi2, m = streamsvm_scan_lookahead_many_ref(
+        np.asarray(X[1:]), np.asarray(Y[:, 1:]), W0, 0.0, c_inv, c_inv, 1, ls,
+        gain=c_inv,
+    )
+    np.testing.assert_allclose(np.asarray(bank.w), w, rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(bank.r), r, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(bank.xi2), xi2, rtol=1e-3, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(bank.m), m)
+
+
+def test_lookahead_paper_variant_honors_gain():
+    """variant='lookahead-paper' must use the paper-listing slack gain (1.0),
+    both through the kernel and through core.fit_lookahead's routing."""
+    X, Y, cs = _bank_data(4, 200, 10, seed=37)
+    exact = streamsvm_fit_many(X, Y, cs, variant="lookahead", lookahead=5, block_n=64)
+    paper = streamsvm_fit_many(
+        X, Y, cs, variant="lookahead-paper", lookahead=5, block_n=64
+    )
+    assert not np.allclose(np.asarray(paper.xi2), np.asarray(exact.xi2))
+    c_inv = 1.0 / np.asarray(cs)
+    W0 = np.asarray(Y[:, 0:1] * X[0][None, :])
+    ones = np.ones_like(c_inv)
+    w, r, xi2, m = streamsvm_scan_lookahead_many_ref(
+        np.asarray(X[1:]), np.asarray(Y[:, 1:]), W0, 0.0, ones, c_inv, 1, 5,
+        gain=ones,
+    )
+    np.testing.assert_allclose(np.asarray(paper.w), w, rtol=2e-4, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(paper.m), m)
+    one = fit_lookahead(X, Y[0], float(cs[0]), 5, variant="paper-listing", block_n=64)
+    np.testing.assert_allclose(np.asarray(one.w), w[0], rtol=2e-4, atol=2e-5)
+
+
+def test_lookahead_one_equals_algorithm_1():
+    """L=1 buffers each violator and immediately flushes it: Algorithm 1."""
+    X, Y, cs = _bank_data(6, 300, 12, seed=2)
+    la = streamsvm_fit_many(X, Y, cs, variant="lookahead", lookahead=1, block_n=64)
+    a1 = streamsvm_fit_many(X, Y, cs, block_n=64)
+    np.testing.assert_allclose(
+        np.asarray(la.w), np.asarray(a1.w), rtol=2e-5, atol=2e-6
+    )
+    np.testing.assert_array_equal(np.asarray(la.m), np.asarray(a1.m))
+
+
+def test_lookahead_chunk_boundary_flush_semantics():
+    """A chained lookahead fit flushes its windows at the pass boundary; the
+    oracle applied chunk by chunk (each with its trailing flush) must agree."""
+    b, n, d, L, cut = 4, 360, 10, 6, 150
+    X, Y, cs = _bank_data(b, n, d, seed=11)
+    head = streamsvm_fit_many(
+        X[:cut], Y[:, :cut], cs, variant="lookahead", lookahead=L, block_n=64
+    )
+    rest = streamsvm_fit_many(
+        X[cut:], Y[:, cut:], cs, head, variant="lookahead", lookahead=L,
+        block_n=64,
+    )
+    c_inv = 1.0 / np.asarray(cs)
+    W0 = np.asarray(Y[:, 0:1] * X[0][None, :])
+    w, r, xi2, m = streamsvm_scan_lookahead_many_ref(
+        np.asarray(X[1:cut]), np.asarray(Y[:, 1:cut]), W0, 0.0, c_inv, c_inv,
+        1, L, gain=c_inv,
+    )
+    w, r, xi2, m = streamsvm_scan_lookahead_many_ref(
+        np.asarray(X[cut:]), np.asarray(Y[:, cut:]), w, r, xi2, c_inv, m, L,
+        gain=c_inv,
+    )
+    np.testing.assert_allclose(np.asarray(rest.w), w, rtol=2e-4, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(rest.m), m)
+
+
+def test_fit_lookahead_routes_to_engine():
+    """core.fit_lookahead default engine is the fused kernel; single model
+    must match the single-model oracle."""
+    rng = np.random.default_rng(21)
+    X = jnp.asarray(rng.normal(size=(400, 14)).astype(np.float32))
+    y = jnp.asarray(np.sign(rng.normal(size=400)).astype(np.float32))
+    ball = fit_lookahead(X, y, 10.0, 8)
+    w, r, xi2, m = streamsvm_scan_lookahead_ref(
+        np.asarray(X[1:]), np.asarray(y[1:]), np.asarray(y[0] * X[0]),
+        0.0, 0.1, 0.1, 1, 8, gain=np.float32(0.1),
+    )
+    np.testing.assert_allclose(np.asarray(ball.w), w, rtol=2e-4, atol=2e-5)
+    assert int(ball.m) == int(m)
+    # the BC window-solve path stays available
+    qp = fit_lookahead(X, y, 10.0, 8, engine="qp")
+    assert qp.w.shape == ball.w.shape
+
+
+def test_fit_ovr_lookahead_via_engine():
+    """200-class-style OVR with in-kernel lookahead: correct and one-pass."""
+    rng = np.random.default_rng(31)
+    proto = rng.normal(size=(6, 16)) * 4
+    labels = rng.integers(0, 6, size=900)
+    X = (rng.normal(size=(900, 16)) + proto[labels]).astype(np.float32)
+    X /= np.linalg.norm(X, axis=1, keepdims=True)
+    balls = fit_ovr(
+        jnp.asarray(X), jnp.asarray(labels), 6, 10.0, lookahead=8, b_tile=8
+    )
+    pred = predict_ovr(balls, jnp.asarray(X))
+    assert float(jnp.mean(pred == jnp.asarray(labels))) > 0.9
+
+
+# ---------------------------------------------------------------------------
+# bf16 stream tiles
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b_tile", [None, 8])
+def test_bf16_stream_tolerance(b_tile):
+    """bf16 tiles halve stream bytes; the result must stay within a few bf16
+    eps of the f32 run (labels are exact in bf16, features round)."""
+    X, Y, cs = _bank_data(8, 600, 32, seed=13)
+    f32 = streamsvm_fit_many(X, Y, cs, block_n=128, b_tile=b_tile)
+    bf16 = streamsvm_fit_many(
+        X, Y, cs, block_n=128, b_tile=b_tile, stream_dtype="bf16"
+    )
+    scale = np.abs(np.asarray(f32.w)).max()
+    rel = np.abs(np.asarray(bf16.w) - np.asarray(f32.w)).max() / scale
+    assert rel < 0.05, rel  # a sequential process: allow a few accumulated ulp
+    np.testing.assert_allclose(
+        np.asarray(bf16.r), np.asarray(f32.r), rtol=2e-2
+    )
+    # the models must still be *useful*: sign agreement on the stream
+    agree = np.mean(
+        np.sign(np.asarray(X) @ np.asarray(f32.w).T)
+        == np.sign(np.asarray(X) @ np.asarray(bf16.w).T)
+    )
+    assert agree > 0.97, agree
+
+
+def test_bf16_lookahead_runs():
+    X, Y, cs = _bank_data(4, 300, 16, seed=23)
+    bank = streamsvm_fit_many(
+        X, Y, cs, variant="lookahead", lookahead=4, stream_dtype="bf16",
+        block_n=64, b_tile=8,
+    )
+    assert np.isfinite(np.asarray(bank.w)).all()
+
+
+# ---------------------------------------------------------------------------
+# Compile-cache regressions: C sweeps must not recompile
+# ---------------------------------------------------------------------------
+
+
+def test_no_recompile_across_c_values():
+    X, Y, _ = _bank_data(4, 96, 9, seed=41)
+    y = Y[0]
+    start = streamsvm_fit._cache_size()
+    for c in (0.5, 3.0, 77.0):
+        streamsvm_fit(X, y, c, block_n=32)
+    assert streamsvm_fit._cache_size() == start + 1  # one entry, three Cs
+
+    start = streamsvm_fit_many._cache_size()
+    for scale in (1.0, 2.0, 10.0):
+        streamsvm_fit_many(X, Y, scale * jnp.ones((4,), jnp.float32), block_n=32)
+    assert streamsvm_fit_many._cache_size() == start + 1
+
+
+# ---------------------------------------------------------------------------
+# Shape errors survive python -O and carry the offending shapes
+# ---------------------------------------------------------------------------
+
+
+def test_shape_errors_are_value_errors():
+    X, Y, cs = _bank_data(4, 64, 8, seed=1)
+    with pytest.raises(ValueError, match=r"\(4, 64\)"):
+        streamsvm_fit_many(X[:32], Y, cs)  # Y rows don't match N
+    with pytest.raises(ValueError, match="sign rows"):
+        streamsvm_fit_many(X, Y.T, cs)
+    with pytest.raises(ValueError, match=r"y must be \(N,\)"):
+        streamsvm_fit(X, Y, 1.0)  # 2-D labels: classic fit_ovr misuse
+    with pytest.raises(ValueError, match="variant"):
+        streamsvm_fit_many(X, Y, cs, variant="bogus")
+    with pytest.raises(ValueError, match="lookahead"):
+        streamsvm_fit_many(X, Y, cs, variant="lookahead", lookahead=(2, 2))
+    with pytest.raises(ValueError, match="stream_dtype"):
+        streamsvm_fit_many(X, Y, cs, stream_dtype="int7")
+    with pytest.raises(ValueError, match="variant"):
+        fit_lookahead(X, Y[0], 1.0, 4, variant="lookahead")  # fit_bank-ism
+    with pytest.raises(ValueError, match="variant"):
+        fit_ovr(X, jnp.zeros(64, jnp.int32), 2, 1.0, lookahead=4, variant="exactt")
+
+
+def test_scan_wrapper_validates_tiling():
+    from repro.kernels.streamsvm_scan import streamsvm_scan_many_pallas
+
+    X = jnp.zeros((128, 128), jnp.float32)
+    Y = jnp.zeros((8, 128), jnp.float32)
+    W0 = jnp.zeros((8, 128), jnp.float32)
+    z = jnp.zeros((8,), jnp.float32)
+    with pytest.raises(ValueError, match="b_tile"):
+        streamsvm_scan_many_pallas(X, Y, W0, z, z, z, z, block_n=128, b_tile=3)
+    with pytest.raises(ValueError, match="block_n"):
+        streamsvm_scan_many_pallas(X[:100], Y[:, :100], W0, z, z, z, z, block_n=64)
+    with pytest.raises(ValueError, match="lookahead_max"):
+        streamsvm_scan_many_pallas(
+            X, Y, W0, z, z, z, z, block_n=128,
+            lookahead=jnp.ones((8,), jnp.int32),
+        )
