@@ -1,16 +1,25 @@
 """Engine throughput harness: sweeps the tiled bank engine, emits BENCH JSON.
 
-Sweeps (B, D, N, block_n, b_tile, stream_dtype, variant) over the tiled
-multi-ball engine, measures seconds/pass, rows/s and model-rows/s, derives
-achieved GB/s from the engine's modeled HBM byte traffic, and compares
-against a bandwidth-roofline estimate (TPU v5e 819 GB/s per chip; on the CPU
-interpret backend the roofline fraction is reported for trend only).
+Sweeps (B, D, N, block_n, b_tile, stream_dtype, variant, n_shards) over the
+tiled multi-ball engine, measures seconds/pass, rows/s and model-rows/s,
+derives achieved GB/s from the engine's modeled HBM byte traffic, and
+compares against a bandwidth-roofline estimate (TPU v5e 819 GB/s per chip;
+on the CPU interpret backend the roofline fraction is reported for trend
+only).
 
 The modeled bytes encode the engine's central claim: the stream is read ONCE
 per fit regardless of how many bank tiles revisit it (``stream_passes`` stays
 1.0 while ``naive_stream_bytes`` shows what B/b_tile passes would cost), and
 bf16 stream tiles halve the stream term. The bank round-trips HBM twice
 (in + out), independent of N.
+
+``n_shards > 1`` rows run ``core.fit_bank_sharded`` over a ``(n_shards,)``
+device mesh — each shard reads 1/n_shards of the stream, so the per-device
+byte model divides the stream/sign terms by the shard count and the ideal
+scaling efficiency is ``seconds(1 shard) / (n_shards * seconds(n))``.
+Configs needing more devices than the process has are SKIPPED (printed, not
+silent); CI's bench-smoke forces 8 host devices so the sharded smoke row is
+always measured there.
 
 Writes ``BENCH_engine.json`` at the repo root (schema below) so the perf
 trajectory is tracked from this PR onward, and prints one ``BENCH`` line per
@@ -41,31 +50,36 @@ _DTYPE_BYTES = {"f32": 4, "bf16": 2}
 # Keys every result row must carry — CI validates the emitted JSON against
 # this (see .github/workflows/ci.yml bench-smoke).
 RESULT_KEYS = (
-    "name", "B", "D", "N", "block_n", "b_tile", "n_bank_tiles",
+    "name", "B", "D", "N", "block_n", "b_tile", "n_bank_tiles", "n_shards",
     "stream_dtype", "variant", "lookahead", "seconds_per_pass", "rows_per_s",
     "model_rows_per_s", "bytes", "stream_passes", "naive_stream_bytes",
     "achieved_gbps", "roofline_seconds", "roofline_frac",
 )
 
 
-def modeled_bytes(B, D, N, stream_dtype):
-    """HBM bytes per pass under the tiled engine's movement model.
+def modeled_bytes(B, D, N, stream_dtype, n_shards=1):
+    """PER-DEVICE HBM bytes per pass under the tiled engine's movement model.
 
     stream: each (block_n, D) tile DMA'd once (data-major grid) — N*D at the
     stream dtype, NOT multiplied by the B/b_tile bank tiles that revisit it.
-    signs:  each (b_tile, block_n) tile read once over the whole grid — B*N.
-    bank:   (B, D) f32 in once + out once; scalar state is negligible.
+    Sharding splits the stream over devices: N/n_shards rows per device.
+    signs:  each (b_tile, block_n) tile read once over the whole grid —
+    B*N/n_shards per device.
+    bank:   (B, D) f32 in once + out once per device; the fold's all_gather
+    moves another (n_shards-1)*B*(D+3) floats over ICI (not HBM — excluded).
     """
     sz = _DTYPE_BYTES[stream_dtype]
+    shard_n = -(-N // n_shards)
     return {
-        "stream": N * D * sz,
-        "signs": B * N * sz,
+        "stream": shard_n * D * sz,
+        "signs": B * shard_n * sz,
         "bank": 2 * B * D * 4,
     }
 
 
 def bench_one(cfg, reps, interpret):
     B, D, N = cfg["B"], cfg["D"], cfg["N"]
+    n_shards = cfg.get("n_shards", 1)
     rng = np.random.default_rng(0)
     X = jnp.asarray(rng.normal(size=(N, D)).astype(np.float32))
     Y = jnp.asarray(np.sign(rng.normal(size=(B, N))).astype(np.float32))
@@ -80,7 +94,16 @@ def bench_one(cfg, reps, interpret):
         stream_dtype=cfg["stream_dtype"] if cfg["stream_dtype"] != "f32" else None,
         interpret=interpret,
     )
-    run = lambda: jax.block_until_ready(streamsvm_fit_many(X, Y, cs, **kw))
+    if n_shards > 1:
+        from repro.core import fit_bank_sharded
+
+        mesh = jax.make_mesh((n_shards,), ("data",))
+        fit = jax.jit(
+            lambda X_, Y_, cs_: fit_bank_sharded(X_, Y_, cs_, mesh, **kw)
+        )
+    else:
+        fit = lambda X_, Y_, cs_: streamsvm_fit_many(X_, Y_, cs_, **kw)
+    run = lambda: jax.block_until_ready(fit(X, Y, cs))
     run()  # compile
     t0 = time.perf_counter()
     for _ in range(reps):
@@ -88,7 +111,7 @@ def bench_one(cfg, reps, interpret):
     sec = (time.perf_counter() - t0) / reps
 
     b_tile_eff, n_btiles = bank_tiling(B, cfg["b_tile"])
-    by = modeled_bytes(B, D, N, cfg["stream_dtype"])
+    by = modeled_bytes(B, D, N, cfg["stream_dtype"], n_shards)
     total = sum(by.values())
     roofline_sec = total / (HBM_PEAK_GBPS * 1e9)
     return {
@@ -99,6 +122,7 @@ def bench_one(cfg, reps, interpret):
         "block_n": cfg["block_n"],
         "b_tile": b_tile_eff,
         "n_bank_tiles": n_btiles,
+        "n_shards": n_shards,
         "stream_dtype": cfg["stream_dtype"],
         "variant": variant,
         "lookahead": lookahead,
@@ -123,6 +147,10 @@ def sweep(smoke: bool):
             dict(name="smoke_bf16", **base, b_tile=8, stream_dtype="bf16"),
             dict(name="smoke_lookahead", **base, b_tile=8, stream_dtype="f32",
                  variant="lookahead", lookahead=4),
+            # sharded bank engine (needs >= 8 devices; CI's bench-smoke job
+            # forces 8 host devices via XLA_FLAGS so this row is measured)
+            dict(name="smoke_sharded_s8", **base, b_tile=8, stream_dtype="f32",
+                 n_shards=8),
         ]
     base = dict(D=128, N=4096, block_n=256)
     cfgs = [
@@ -143,12 +171,37 @@ def sweep(smoke: bool):
         # block_n sensitivity
         dict(name="bank_b64_t8_n512", B=64, D=128, N=4096, block_n=512,
              b_tile=8, stream_dtype="f32"),
+        # stream sharding: same fit spread over a device mesh — scaling
+        # efficiency is seconds(bank_b64_t8) / (n_shards * seconds(row))
+        dict(name="sharded_b64_t8_s2", B=64, **base, b_tile=8,
+             stream_dtype="f32", n_shards=2),
+        dict(name="sharded_b64_t8_s4", B=64, **base, b_tile=8,
+             stream_dtype="f32", n_shards=4),
+        dict(name="sharded_b64_t8_s8", B=64, **base, b_tile=8,
+             stream_dtype="f32", n_shards=8),
+        dict(name="sharded_b256_t32_s8_bf16", B=256, **base, b_tile=32,
+             stream_dtype="bf16", n_shards=8),
     ]
     return cfgs
 
 
-def run(smoke: bool, reps: int, interpret):
-    results = [bench_one(cfg, reps, interpret) for cfg in sweep(smoke)]
+def run(smoke: bool, reps: int, interpret, name_filter: str | None = None):
+    n_dev = len(jax.devices())
+    results = []
+    for cfg in sweep(smoke):
+        if name_filter is not None and name_filter not in cfg["name"]:
+            continue
+        if cfg.get("n_shards", 1) > n_dev:
+            # no silent caps: say what was dropped and how to get it
+            print(
+                f'SKIP {cfg["name"]}: n_shards={cfg["n_shards"]} > '
+                f"{n_dev} visible device(s) (set XLA_FLAGS="
+                f'--xla_force_host_platform_device_count={cfg["n_shards"]} '
+                "and re-run with --filter sharded --append, or use a real "
+                "mesh)"
+            )
+            continue
+        results.append(bench_one(cfg, reps, interpret))
     return {
         "schema": SCHEMA,
         "generated": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
@@ -187,6 +240,11 @@ def validate(report: dict):
             raise ValueError(f"result {row.get('name')!r} missing {missing}")
         if not (row["seconds_per_pass"] > 0 and row["achieved_gbps"] > 0):
             raise ValueError(f"{row['name']}: non-positive measurement")
+        if not (isinstance(row["n_shards"], int) and row["n_shards"] >= 1):
+            raise ValueError(
+                f"{row['name']}: n_shards must be an int >= 1, got "
+                f"{row['n_shards']!r}"
+            )
     return True
 
 
@@ -202,18 +260,39 @@ def main(argv=None):
         "--interpret", default=None, choices=["true", "false"],
         help="force interpret mode (default: auto — interpret off-TPU)",
     )
+    ap.add_argument(
+        "--filter", default=None, metavar="SUBSTR",
+        help="bench only configs whose name contains SUBSTR",
+    )
+    ap.add_argument(
+        "--append", action="store_true",
+        help="merge results into an existing --out report (rows with the "
+        "same name are replaced). Lets sharded rows — which need forced "
+        "host devices — be measured in a separate process from the "
+        "single-device rows, which must see the real device count "
+        "(conftest rule); CI's bench-smoke runs the harness twice this way",
+    )
     args = ap.parse_args(argv)
     interpret = None if args.interpret is None else args.interpret == "true"
 
-    report = run(args.smoke, args.reps, interpret)
+    report = run(args.smoke, args.reps, interpret, name_filter=args.filter)
+    out_path = Path(args.out)
+    if args.append and out_path.exists():
+        prev = json.loads(out_path.read_text())
+        new_names = {r["name"] for r in report["results"]}
+        report["results"] = [
+            r for r in prev.get("results", []) if r["name"] not in new_names
+        ] + report["results"]
     validate(report)
-    Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
+    out_path.write_text(json.dumps(report, indent=2) + "\n")
 
-    hdr = ("name", "rows/s", "model-rows/s", "GB/s", "roofline%", "s/pass")
+    hdr = ("name", "shards", "rows/s", "model-rows/s", "GB/s", "roofline%",
+           "s/pass")
     print(",".join(hdr))
     for r in report["results"]:
         print(
-            f'{r["name"]},{r["rows_per_s"]:.0f},{r["model_rows_per_s"]:.0f},'
+            f'{r["name"]},{r["n_shards"]},{r["rows_per_s"]:.0f},'
+            f'{r["model_rows_per_s"]:.0f},'
             f'{r["achieved_gbps"]:.3f},{100 * r["roofline_frac"]:.2f},'
             f'{r["seconds_per_pass"]:.4f}'
         )

@@ -4,8 +4,23 @@ a whole C-grid trained in ONE pass via the multi-ball engine, then a
 
     PYTHONPATH=src python examples/quickstart.py
 
-Engine throughput numbers for these paths are tracked in BENCH_engine.json —
-regenerate with:
+SHARDED: every bank entry point also takes ``mesh=`` — the stream splits
+into contiguous ranges over a device mesh axis, each shard runs the same
+tiled engine over its range, and the per-shard banks are folded with the
+paper's Sec-4.3 merge (one all_gather). N need not divide the shard count
+(ragged remainders are padded with inert sign-0 rows):
+
+    mesh = jax.make_mesh((8,), ("data",))
+    bank = fit_bank(X, Y, cs, b_tile=64, stream_dtype="bf16", mesh=mesh)
+    # equivalently: fit_ovr(..., mesh=mesh), fit_c_grid(..., mesh=mesh),
+    # fit_chunked_many(..., mesh=mesh) — and core.fit_bank_sharded directly.
+
+Run the 8-device version of this flow (simulated host devices):
+
+    PYTHONPATH=src python examples/svm_distributed.py
+
+Engine throughput numbers for these paths are tracked in BENCH_engine.json
+(including the ``n_shards`` scaling rows) — regenerate with:
 
     PYTHONPATH=src python benchmarks/streaming_throughput.py
 """

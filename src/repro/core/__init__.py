@@ -1,5 +1,13 @@
 """Core StreamSVM library — the paper's contribution as composable JAX modules."""
-from .meb import Ball, make_ball, merge_balls, fold_merge, point_distance, center_distance
+from .meb import (
+    Ball,
+    center_distance,
+    fold_merge,
+    make_ball,
+    merge_balls,
+    merge_banks,
+    point_distance,
+)
 from .streamsvm import (
     StreamCheckpoint,
     accuracy,
@@ -15,7 +23,7 @@ from .streamsvm import (
 )
 from .qp import solve_meb_ball_points
 from .kernelized import KernelBall, fit_kernelized, linear_kernel, rbf_kernel, linear_weights
-from .distributed import fit_sharded
+from .distributed import fit_bank_sharded, fit_sharded
 from .multiball import (
     MultiBall,
     bank_stack,
@@ -38,6 +46,7 @@ __all__ = [
     "fit",
     "fit_ball",
     "fit_bank",
+    "fit_bank_sharded",
     "fit_c_grid",
     "fit_chunked",
     "fit_chunked_many",
@@ -52,6 +61,7 @@ __all__ = [
     "linear_weights",
     "make_ball",
     "merge_balls",
+    "merge_banks",
     "ovr_signs",
     "point_distance",
     "predict",

@@ -6,11 +6,24 @@ balls with an all_gather and every shard deterministically folds them with the
 paper's Sec-4.3 merge operator (exact in the augmented space because shards
 touch disjoint slack coordinates — DESIGN.md §5).
 
-Communication: one all_gather of (D+3) floats per shard, once per stream —
-negligible against ICI bandwidth at any D that fits in HBM.
+Two entry points:
 
-The fold is commutative-associative up to float error (property-tested), so
-straggler re-assignment / elastic reshard does not change the model class.
+``fit_sharded``       one model, scan-path Algorithm 1/2 per shard.
+``fit_bank_sharded``  a BANK of B models per shard via the tiled multi-ball
+                      Pallas engine — M stream shards x B models in ONE data
+                      pass each, folded with the bank-vectorized merge
+                      (meb.fold_merge over the gathered (S, B, ...) stack).
+                      Ragged streams are padded with inert sign-0 rows, so
+                      any N works on any shard count.
+
+Communication: one all_gather of B * (D+3) floats per shard, once per stream —
+negligible against ICI bandwidth at any B * D that fits in HBM.
+
+The fold is commutative and, up to bounded geometric slack, order-invariant
+(any fold order yields an enclosing ball with radius within 2x of the optimum
+and center inside the hull of the shard centers — property-tested in
+tests/test_sharded_bank.py), so straggler re-assignment / elastic reshard
+does not change the model class.
 """
 from __future__ import annotations
 
@@ -28,8 +41,19 @@ except ImportError:  # older jax: experimental location, check_rep kwarg
     from jax.experimental.shard_map import shard_map as _shard_map
     _CHECK_REP_KW = "check_rep"
 
-from .meb import Ball, fold_merge
+from .meb import Ball, fold_merge, merge_banks
 from .streamsvm import fit, fit_lookahead
+
+
+def _mesh_axes(axis: str | Tuple[str, ...]) -> Tuple[str, ...]:
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+def _n_shards(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
 
 
 def fit_sharded(
@@ -44,14 +68,19 @@ def fit_sharded(
 ) -> Ball:
     """One-pass fit with the stream sharded over ``axis`` of ``mesh``.
 
-    X: (N, D), y: (N,). N must divide by the product of the axis sizes.
+    X: (N, D), y: (N,). N must divide by the product of the axis sizes
+    (``fit_bank_sharded`` lifts this by padding with inert rows).
     Returns the merged Ball, replicated on every device.
     """
-    axes = (axis,) if isinstance(axis, str) else tuple(axis)
-    n_shards = 1
-    for a in axes:
-        n_shards *= mesh.shape[a]
-    assert X.shape[0] % n_shards == 0, (X.shape, n_shards)
+    axes = _mesh_axes(axis)
+    n_shards = _n_shards(mesh, axes)
+    if X.shape[0] % n_shards != 0:
+        raise ValueError(
+            f"X rows must divide evenly over the {n_shards} stream shards of "
+            f"mesh axes {axes}: got X.shape={X.shape}. Pad the stream, or "
+            "use fit_bank_sharded, which pads ragged remainders with inert "
+            "sign-0 rows."
+        )
 
     def local_fit(Xs, ys):
         # Xs: (N/n_shards, D) local contiguous range of the stream.
@@ -80,3 +109,145 @@ def fit_sharded(
     X = jax.device_put(X, NamedSharding(mesh, P(axes)))
     y = jax.device_put(y, NamedSharding(mesh, P(axes)))
     return fn(X, y)
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "mesh", "axes", "n_shards", "shard_n", "n_rows", "variant",
+        "lookahead", "block_n", "b_tile", "stream_dtype", "interpret",
+    ),
+)
+def _sharded_fold(
+    X, Y, cs, *,
+    mesh, axes, n_shards, shard_n, n_rows, variant, lookahead, block_n,
+    b_tile, stream_dtype, interpret,
+):
+    """jit'd shard_map core of fit_bank_sharded.
+
+    Module-level so repeated calls with the same (shapes, mesh, config) hit
+    the jit cache instead of rebuilding and re-tracing the shard_map closure
+    — fit_chunked_many(mesh=...) calls this once per CHUNK.
+    """
+
+    def local_fit(Xs, Ys, cs_):
+        from repro.kernels.ops import streamsvm_fit_many  # lazy: module cycle
+
+        # Shards whose whole contiguous range is padding produce a
+        # placeholder ball; mask them out of the fold so padding never
+        # changes results. A trace-time constant: every quantity is static.
+        live = jnp.arange(n_shards) * shard_n < n_rows
+        bank = streamsvm_fit_many(
+            Xs, Ys, cs_, None,
+            variant=variant, lookahead=lookahead, block_n=block_n,
+            b_tile=b_tile, stream_dtype=stream_dtype, interpret=interpret,
+        )
+        gather = lambda v: jax.lax.all_gather(v, axes, tiled=False)
+        stacked = Ball(
+            w=gather(bank.w), r=gather(bank.r),
+            xi2=gather(bank.xi2), m=gather(bank.m),
+        )  # (S, B, ...) on every shard
+        return fold_merge(stacked, live=live)
+
+    fn = _shard_map(
+        local_fit,
+        mesh=mesh,
+        in_specs=(P(axes), P(None, axes), P()),
+        out_specs=jax.tree.map(lambda _: P(), Ball(0, 0, 0, 0)),
+        **{_CHECK_REP_KW: False},
+    )
+    return fn(X, Y, cs)
+
+
+def fit_bank_sharded(
+    X: jax.Array,
+    Y: jax.Array,
+    cs,
+    mesh: Mesh,
+    balls: Ball | None = None,
+    *,
+    axis: str | Tuple[str, ...] = "data",
+    variant: str = "exact",
+    lookahead=None,
+    block_n: int = 256,
+    b_tile: int | None = None,
+    stream_dtype=None,
+    interpret: bool | None = None,
+) -> Ball:
+    """M stream shards x B models in one pass: the sharded bank engine.
+
+    The stream is split into ``n_shards`` contiguous ranges over the ``axis``
+    axes of ``mesh``; every shard runs the tiled multi-ball Pallas engine
+    (``kernels.streamsvm_fit_many`` — ``b_tile``, fused ``lookahead``,
+    ``stream_dtype="bf16"`` all apply per shard) over its local range, the
+    per-shard (B, D) banks are exchanged with one all_gather, and every
+    model lane is folded with the Sec-4.3 merge (``meb.fold_merge`` over the
+    (S, B, ...) stack). Total data movement: each stream row is read from
+    HBM exactly once, on exactly one shard.
+
+    X: (N, D) stream, Y: (B, N) per-model sign rows, cs: scalar or (B,)
+    per-model C (traced). ``N % n_shards != 0`` is fine: the remainder is
+    padded with inert rows (feature 0, sign 0 — the engine's sign-0 contract
+    guarantees they update nothing), and shards whose whole range is padding
+    are masked out of the fold, so the result is identical to folding the
+    unpadded ragged ranges. (Padding is always a suffix, so every LIVE
+    shard's first row — its engine init example — is a real stream row;
+    the init caveat on ``streamsvm_fit_many`` never triggers here.)
+
+    ``balls`` (a stacked bank) continues a previous fit: shards fit their
+    ranges FRESH (keeping shard example-sets disjoint, which the merge's
+    slack orthogonality needs) and the prior bank is folded in at the end —
+    this is what makes checkpoint/resume under a mesh shard-count agnostic.
+
+    Returns the folded bank (Ball stacked on B), replicated on every device.
+    """
+    axes = _mesh_axes(axis)
+    n_shards = _n_shards(mesh, axes)
+    n, d = X.shape
+    b = Y.shape[0]
+    if Y.shape != (b, n):
+        raise ValueError(
+            f"Y must be (B, N) sign rows matching X: got Y.shape={Y.shape}, "
+            f"X.shape={X.shape}"
+        )
+    if n < 1:
+        raise ValueError(f"need at least one stream row: got X.shape={X.shape}")
+    cs = jnp.broadcast_to(jnp.asarray(cs, jnp.float32), (b,))
+    if isinstance(lookahead, list):  # static arg below: must be hashable
+        lookahead = tuple(lookahead)
+
+    shard_n = -(-n // n_shards)  # rows per shard, ceil
+    pad = shard_n * n_shards - n
+    if pad:
+        # Inert remainder rows: feature 0 AND sign 0 — the engine never lets
+        # them violate, absorb, or enter a lookahead window, so the padded
+        # run is bit-identical to fitting the ragged ranges directly.
+        X = jnp.pad(X, ((0, pad), (0, 0)))
+        Y = jnp.pad(Y, ((0, 0), (0, pad)))
+    if not isinstance(X, jax.core.Tracer):  # eager call: place shards up front
+        X = jax.device_put(X, NamedSharding(mesh, P(axes)))
+        Y = jax.device_put(Y, NamedSharding(mesh, P(None, axes)))
+    folded = _sharded_fold(
+        X, Y, cs,
+        mesh=mesh, axes=axes, n_shards=n_shards, shard_n=shard_n, n_rows=n,
+        variant=variant, lookahead=lookahead, block_n=block_n, b_tile=b_tile,
+        stream_dtype=stream_dtype, interpret=interpret,
+    )
+    if balls is not None:
+        # The prior bank saw a disjoint (earlier) slice of the stream, so it
+        # merges exactly like one more shard.
+        prior = Ball(
+            w=jnp.asarray(balls.w, jnp.float32),
+            r=jnp.broadcast_to(jnp.asarray(balls.r, jnp.float32), (b,)),
+            xi2=jnp.broadcast_to(jnp.asarray(balls.xi2, jnp.float32), (b,)),
+            m=jnp.broadcast_to(jnp.asarray(balls.m, jnp.int32), (b,)),
+        )
+        if not isinstance(prior.w, jax.core.Tracer):
+            # A checkpoint may come from a run on a DIFFERENT mesh (elastic
+            # reshard); re-place it on this mesh so the merge has one device
+            # set.
+            prior = jax.tree.map(
+                lambda v: jax.device_put(v, NamedSharding(mesh, P())), prior
+            )
+        folded = merge_banks(prior, folded)
+    return folded

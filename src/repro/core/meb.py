@@ -113,14 +113,47 @@ def merge_balls(b1: Ball, b2: Ball) -> Ball:
     return Ball(w=w, r=r, xi2=xi2, m=b1.m + b2.m)
 
 
-def fold_merge(balls: Ball) -> Ball:
-    """Deterministic left fold of a stacked Ball pytree (leading axis)."""
+def merge_banks(b1: Ball, b2: Ball) -> Ball:
+    """Sec-4.3 merge vmapped over a leading bank axis: B models at once.
+
+    Both arguments are Balls stacked on a leading B axis (w: (B, D), scalars
+    (B,)); model b of the result merges model b of each bank — the lanes
+    never interact.
+    """
+    return jax.vmap(merge_balls)(b1, b2)
+
+
+def fold_merge(balls: Ball, live: jax.Array | None = None) -> Ball:
+    """Deterministic left fold of a stacked Ball pytree (leading axis).
+
+    Accepts stacked single balls (w: (S, D)) or stacked BANKS (w: (S, B, D))
+    — the bank case folds every model lane independently via the vmapped
+    Sec-4.3 merge, which is how fit_bank_sharded combines per-shard banks.
+
+    ``live``: optional (S,) bool mask; entries with ``live[i] == False`` are
+    skipped exactly (the accumulator passes through), which is how fully
+    padded shards — shards whose whole contiguous range is remainder padding
+    — are excluded from the fold. The fold starts at the FIRST live entry
+    (so a dead entry 0 cannot contaminate the result); at least one entry
+    must be live.
+    """
     n = balls.w.shape[0]
+    merge = merge_balls if balls.w.ndim == 2 else merge_banks
 
     def take(i):
         return jax.tree.map(lambda x: x[i], balls)
 
-    def body(i, acc):
-        return merge_balls(acc, take(i))
+    if live is None:
+        def body(i, acc):
+            return merge(acc, take(i))
 
-    return jax.lax.fori_loop(1, n, body, take(0))
+        return jax.lax.fori_loop(1, n, body, take(0))
+
+    i0 = jnp.argmax(live)  # index of the first live entry
+
+    def body(i, acc):
+        new = merge(acc, take(i))
+        use = jnp.logical_and(live[i], i != i0)  # skip dead; don't self-merge
+        return jax.tree.map(lambda a, b: jnp.where(use, a, b), new, acc)
+
+    return jax.lax.fori_loop(0, n, body, take(i0))

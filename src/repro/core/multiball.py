@@ -155,6 +155,8 @@ def fit_bank(
     block_n: int = 256,
     b_tile: int | None = None,
     stream_dtype=None,
+    mesh=None,
+    shard_axis="data",
     interpret: bool | None = None,
 ) -> Ball:
     """One-pass fit of a bank of B models via the tiled multi-ball engine.
@@ -165,7 +167,21 @@ def fit_bank(
     one stream pass), ``stream_dtype="bf16"`` halves stream HBM traffic, and
     ``variant="lookahead"`` runs fused Algorithm 2 with per-model windows
     (``lookahead``: int or length-B tuple, static) — see kernels.ops.
+
+    ``mesh=`` additionally shards the STREAM over the ``shard_axis`` axes of
+    a device mesh: each shard runs the engine over its contiguous range and
+    the per-shard banks are folded with the Sec-4.3 merge (see
+    distributed.fit_bank_sharded — N need not divide the shard count).
     """
+    if mesh is not None:
+        from .distributed import fit_bank_sharded  # lazy: module cycle
+
+        return fit_bank_sharded(
+            X, Y, cs, mesh, balls,
+            axis=shard_axis, variant=variant, lookahead=lookahead,
+            block_n=block_n, b_tile=b_tile, stream_dtype=stream_dtype,
+            interpret=interpret,
+        )
     from repro.kernels.ops import streamsvm_fit_many  # lazy: avoids core<->kernels cycle
 
     return streamsvm_fit_many(

@@ -41,6 +41,7 @@ def ovr_signs(labels: jax.Array, n_classes: int, dtype=jnp.float32) -> jax.Array
     jax.jit,
     static_argnames=(
         "n_classes", "lookahead", "variant", "engine", "b_tile", "stream_dtype",
+        "mesh", "shard_axis",
     ),
 )
 def fit_ovr(
@@ -54,6 +55,8 @@ def fit_ovr(
     engine: str = "pallas",
     b_tile: int | None = None,
     stream_dtype=None,
+    mesh=None,
+    shard_axis="data",
 ) -> Ball:
     """labels: (N,) int in [0, n_classes). Returns Ball stacked over classes.
 
@@ -64,6 +67,10 @@ def fit_ovr(
     per-step VMEM working set and ``stream_dtype="bf16"`` halves stream HBM
     traffic. ``engine="scan"`` keeps the pre-engine vmap'd lax.scan path
     (Badoiu-Clarkson window solves for lookahead > 1).
+
+    ``mesh=`` (pallas engine only) shards the stream over ``shard_axis`` of
+    a device mesh and folds the per-shard banks with the Sec-4.3 merge:
+    classes x shards in one pass of each shard's range (fit_bank_sharded).
     """
     if engine not in ("pallas", "scan"):
         raise ValueError(f"unknown engine {engine!r}; expected 'pallas' or 'scan'")
@@ -71,12 +78,16 @@ def fit_ovr(
         raise ValueError(
             f"unknown variant {variant!r}; expected 'exact' or 'paper-listing'"
         )
+    if mesh is not None and engine != "pallas":
+        raise ValueError(
+            f"mesh= requires engine='pallas': got engine={engine!r}"
+        )
     ys = ovr_signs(labels, n_classes, X.dtype)
     if engine == "pallas":
         if lookahead <= 1:
             bank = fit_bank(
                 X, ys, c, variant=variant, b_tile=b_tile,
-                stream_dtype=stream_dtype,
+                stream_dtype=stream_dtype, mesh=mesh, shard_axis=shard_axis,
             )
         else:
             bank = fit_bank(
@@ -84,6 +95,7 @@ def fit_ovr(
                 variant="lookahead" if variant == "exact" else "lookahead-paper",
                 lookahead=int(lookahead),
                 b_tile=b_tile, stream_dtype=stream_dtype,
+                mesh=mesh, shard_axis=shard_axis,
             )
         return _cast_ball(bank, X.dtype)
     if lookahead <= 1:
@@ -98,7 +110,12 @@ def predict_ovr(balls: Ball, X: jax.Array) -> jax.Array:
     return jnp.argmax(scores, axis=-1)
 
 
-@partial(jax.jit, static_argnames=("variant", "engine", "b_tile", "stream_dtype"))
+@partial(
+    jax.jit,
+    static_argnames=(
+        "variant", "engine", "b_tile", "stream_dtype", "mesh", "shard_axis",
+    ),
+)
 def fit_c_grid(
     X: jax.Array,
     y: jax.Array,
@@ -108,14 +125,22 @@ def fit_c_grid(
     engine: str = "pallas",
     b_tile: int | None = None,
     stream_dtype=None,
+    mesh=None,
+    shard_axis="data",
 ) -> Ball:
     """Model-selection sweep over a grid of C values in ONE stream pass.
 
     Every grid point is a model in the engine's bank (c enters only through
     1/C, so the grid can be traced). Returns Ball stacked over the grid.
+    ``mesh=`` (pallas engine only) shards the stream over ``shard_axis`` and
+    folds the per-shard grid banks with the Sec-4.3 merge.
     """
     if engine not in ("pallas", "scan"):
         raise ValueError(f"unknown engine {engine!r}; expected 'pallas' or 'scan'")
+    if mesh is not None and engine != "pallas":
+        raise ValueError(
+            f"mesh= requires engine='pallas': got engine={engine!r}"
+        )
     c_grid = jnp.asarray(c_grid)
     b = c_grid.shape[0]
     if engine == "pallas":
@@ -123,7 +148,7 @@ def fit_c_grid(
         return _cast_ball(
             fit_bank(
                 X, Y, c_grid, variant=variant, b_tile=b_tile,
-                stream_dtype=stream_dtype,
+                stream_dtype=stream_dtype, mesh=mesh, shard_axis=shard_axis,
             ),
             X.dtype,
         )

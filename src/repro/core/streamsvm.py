@@ -224,6 +224,8 @@ def fit_chunked_many(
     block_n: int = 256,
     b_tile: Optional[int] = None,
     stream_dtype=None,
+    mesh=None,
+    shard_axis="data",
     resume: Optional[StreamCheckpoint] = None,
     checkpoint_every: int = 0,
     checkpoint_cb: Optional[Callable[[StreamCheckpoint], None]] = None,
@@ -236,6 +238,14 @@ def fit_chunked_many(
     (B, n) per-model sign rows (the one-vs-rest case). The checkpoint carries
     the whole bank — state stays O(B * D) — so preemption/resume keeps the
     stream single-pass for all B models at once.
+
+    ``mesh=`` shards every chunk over the ``shard_axis`` axes of a device
+    mesh (distributed.fit_bank_sharded): each shard fits its contiguous
+    slice of the chunk fresh and the per-shard banks are folded with the
+    Sec-4.3 merge, the prior bank folding in as one more disjoint summand.
+    Because the checkpoint still carries ONE folded bank, a run may resume
+    on a DIFFERENT shard count (elastic reshard) — chunk sizes need not
+    divide the shard count (inert-row padding).
     """
     from repro.core.multiball import fit_bank
 
@@ -254,6 +264,7 @@ def fit_chunked_many(
         bank = fit_bank(
             Xc, yc, cs, bank, variant=variant, block_n=block_n,
             b_tile=b_tile, stream_dtype=stream_dtype,
+            mesh=mesh, shard_axis=shard_axis,
         )
         pos += n_chunk
         since_ckpt += n_chunk

@@ -139,7 +139,15 @@ def streamsvm_fit_many(
     """One-pass Algorithm 1/2 for a bank of B models — ONE read of the stream.
 
     X: (N, D) shared stream; Y: (B, N) per-model label signs in {-1, +1}
-    (classes x C-grid x variants all flatten onto the B axis); cs: scalar or
+    (classes x C-grid x variants all flatten onto the B axis). A sign of 0
+    marks a STREAMED row inert *for that model* — no violation, no absorb,
+    no lookahead buffering — which is how core.fit_bank_sharded pads ragged
+    shard remainders without changing any model. Caveat: when ``balls`` is
+    None, row 0 is consumed as every model's init example BEFORE the
+    contract applies, so it must carry a real +-1 sign for every model
+    (``Y[b, 0] == 0`` would seed model b from the zero point w=0, m=1 —
+    pass an explicit ``balls`` or keep sign-0 rows off position 0).
+    cs: scalar or
     (B,) per-model C (traced — a C sweep reuses one compilation). Starts from
     ``balls`` (a Ball stacked on a leading B axis) if given, else initializes
     every model from the first example. Returns a stacked Ball; state stays

@@ -16,13 +16,14 @@ def streamsvm_scan_ref(X, y, w0, r0, xi20, c_inv, m0, *, gain=None, n_valid=None
     """Row-at-a-time Algorithm 1 from an arbitrary starting state.
 
     ``gain`` is the slack-recursion gain (defaults to ``c_inv`` — the "exact"
-    variant; pass 1.0 for the paper-listing variant).
+    variant; pass 1.0 for the paper-listing variant). Rows with label sign 0
+    are inert (the stream-padding contract), as are rows >= ``n_valid``.
     """
     n = X.shape[0]
     n_valid = n if n_valid is None else n_valid
     gain = c_inv if gain is None else gain
     yx = (y[:, None] * X).astype(jnp.float32)
-    valid = jnp.arange(n) < n_valid
+    valid = jnp.logical_and(jnp.arange(n) < n_valid, jnp.asarray(y) != 0)
 
     def body(carry, inp):
         w, r, xi2, m = carry
@@ -122,6 +123,8 @@ def streamsvm_scan_lookahead_ref(
             buf.pop(k)
 
     for i in range(min(n, nv)):
+        if y[i] == 0:  # sign-0 rows are inert (stream-padding contract)
+            continue
         p = y[i] * X[i]
         if dist(p) >= r:
             buf.append(p)

@@ -96,7 +96,13 @@ def _kernel(
 
     row_base = step * block_n
     row_ids = row_base + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
-    valid = (row_ids < n_valid).astype(jnp.float32)
+    # Rows past n_valid AND rows with label sign 0 are inert: sign-0 rows are
+    # the stream-padding contract (fit_bank_sharded pads ragged shard
+    # remainders with them), distinct from a genuine zero FEATURE row, which
+    # is a legitimate slack-only point.
+    valid = jnp.logical_and(
+        row_ids < n_valid, y_ref[...][:, 0] != 0.0
+    ).astype(jnp.float32)
 
     def body(j, carry):
         g, w, r, xi2, wsq, m = carry
@@ -253,6 +259,10 @@ def _kernel_many_tiled(
     row_ids = row_base + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
     valid = (row_ids < n_valid).astype(jnp.float32)
     col_ids = jax.lax.broadcasted_iota(jnp.int32, ys.shape, 1)  # (b_tile, block_n)
+    # Sign-0 inertness is PER MODEL LANE here: a row whose sign is 0 for
+    # model b never violates model b (the stream-padding contract used by
+    # fit_bank_sharded's ragged-remainder rows, and what keeps padded *bank*
+    # lanes from absorbing anything).
 
     if lookahead_max is None:
         # ----- Algorithm 1: immediate greedy acceptance (bit-exact with the
@@ -263,10 +273,12 @@ def _kernel_many_tiled(
             gjj = gram[jr, jr]
             d2 = wsq - 2.0 * gj + gjj + xi2 + c_inv
             d = jnp.sqrt(jnp.maximum(d2, 1e-12))
-            upd = jnp.logical_and(d >= r, valid[jr] > 0.0)
+            yj = ys[:, jr]  # (b_tile,)
+            upd = jnp.logical_and(
+                jnp.logical_and(d >= r, valid[jr] > 0.0), yj != 0.0
+            )
             s = jnp.where(upd, 0.5 * (1.0 - r / d), 0.0)  # (b_tile,)
             one_s = 1.0 - s
-            yj = ys[:, jr]  # (b_tile,)
             # rank-1 maintenance of g under w_b <- (1-s_b) w_b + s_b y_bj x_j:
             # <x_j, y_bk x_k> = y_bk G[j, k]
             g = one_s[:, None] * g + (s * yj)[:, None] * (ys * gram[jr][None, :])
@@ -313,7 +325,9 @@ def _kernel_many_tiled(
             gj = g[:, jr]
             d2 = wsq - 2.0 * gj + gram[jr, jr] + xi2 + c_inv
             d = jnp.sqrt(jnp.maximum(d2, 1e-12))
-            violate = jnp.logical_and(d >= r, valid[jr] > 0.0)
+            violate = jnp.logical_and(
+                jnp.logical_and(d >= r, valid[jr] > 0.0), ys[:, jr] != 0.0
+            )
             # push the signed row into each violated model's window
             p = ys[:, jr][:, None] * x[jr][None, :]  # (b_tile, D)
             slot = jax.lax.broadcasted_iota(
@@ -402,8 +416,8 @@ def streamsvm_scan_pallas(
     """Run Algorithm 1 from (w0, r0, xi20, m0) over the padded stream (X, y).
 
     X: (N, D) float32 — D should be padded to a multiple of 128 by ops.py,
-    N to a multiple of block_n; rows >= n_valid are ignored.
-    Returns (w, r, xi2, m).
+    N to a multiple of block_n; rows >= n_valid and rows with y == 0 are
+    ignored. Returns (w, r, xi2, m).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -468,7 +482,10 @@ def streamsvm_scan_many_pallas(
 
     X: (N, D) stream (raw rows, no label signs) — D padded to a multiple of
     128, N to a multiple of block_n; rows >= n_valid are ignored.
-    Y: (B, N) per-model label signs in {-1, +1} (0 on padded model rows).
+    Y: (B, N) per-model label signs in {-1, +1}. Sign 0 marks an inert row
+    for that model — padded model lanes, and padded stream rows (the ragged
+    shard remainders fit_bank_sharded appends) never violate, absorb or
+    buffer anything.
     W0/(r0, xi20, c_inv, m0): per-model starting state, shapes (B, D)/(B,).
     gain: per-model slack gain (defaults to c_inv — the "exact" variant).
     lookahead/lookahead_max: per-model (B,) int32 Algorithm-2 window sizes
