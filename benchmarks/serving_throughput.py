@@ -1,0 +1,313 @@
+"""Serving throughput harness: sweeps the predict engine, emits BENCH JSON.
+
+Sweeps (Q, D, B, q_block, b_tile, stream_dtype, epilogue) over the fused
+bank-inference kernel (kernels.ops.predict_bank) and over the end-to-end
+BankServer microbatching path, measures seconds/batch, queries/s and
+model-scores/s (Q * B margins evaluated per batch), derives achieved GB/s
+from the engine's modeled HBM byte traffic, and compares against the same
+bandwidth roofline as the training harness (TPU v5e 819 GB/s per chip; on
+the CPU interpret backend the roofline fraction is a trend number only).
+
+The modeled bytes encode the serving engine's movement claim, the mirror
+image of training's: the QUERY stream is the big term and is read ONCE per
+batch (data-major grid — ``query_passes`` stays 1.0 no matter how many bank
+tiles revisit each resident tile, and bf16 query tiles halve the term),
+while the tiny (B, D) bank is re-read once per resident query tile — the
+cheap term, because one-pass training left the model constant-storage.
+
+Writes ``BENCH_serving.json`` at the repo root (validated by CI's
+bench-smoke next to BENCH_engine.json) and prints one ``BENCH`` line per
+config. ``--smoke`` runs a seconds-scale sweep in interpret mode for CI and
+always includes an ``ovr``-epilogue row (CI asserts it).
+
+    PYTHONPATH=src python benchmarks/serving_throughput.py [--smoke]
+        [--out BENCH_serving.json] [--reps 3]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import predict_bank
+from repro.kernels.ops import bank_tiling, ovr_group_tiling
+from repro.serve import BankServer
+
+SCHEMA = "streamsvm-bench-serving/v1"
+HBM_PEAK_GBPS = 819.0  # TPU v5e, per chip — same roofline as BENCH_engine
+_DTYPE_BYTES = {"f32": 4, "bf16": 2}
+
+# Keys every result row must carry — CI validates the emitted JSON against
+# this (see .github/workflows/ci.yml bench-smoke).
+RESULT_KEYS = (
+    "name", "Q", "D", "B", "q_block", "b_tile", "n_bank_tiles", "epilogue",
+    "n_classes", "k", "stream_dtype", "path", "seconds_per_batch",
+    "queries_per_s", "model_scores_per_s", "bytes", "query_passes",
+    "naive_query_bytes", "achieved_gbps", "roofline_seconds",
+    "roofline_frac",
+)
+
+
+def out_bytes(Q, B, epilogue, n_classes, k):
+    """HBM bytes of the epilogue output per batch (f32 + int32 pairs)."""
+    if epilogue == "scores":
+        return Q * B * 4
+    if epilogue == "ovr":
+        return Q * (B // n_classes) * 8  # class ids + margins
+    return Q * k * 8  # topk values + ids
+
+
+def modeled_bytes(Q, D, B, q_block, epilogue, n_classes, k, stream_dtype):
+    """HBM bytes per batch under the predict engine's movement model.
+
+    queries: each (q_block, D) tile DMA'd once (data-major grid) — Q*D at
+    the stream dtype, NOT multiplied by the B/b_tile bank tiles revisiting
+    it. bank: (B, D) f32 re-read once per resident query tile — the paper's
+    constant-storage model makes this the small term. out: the epilogue's
+    emitted rows.
+    """
+    sz = _DTYPE_BYTES[stream_dtype]
+    n_q_blocks = -(-Q // q_block)
+    return {
+        "queries": Q * D * sz,
+        "bank": n_q_blocks * B * D * 4,
+        "out": out_bytes(Q, B, epilogue, n_classes, k),
+    }
+
+
+def bench_one(cfg, reps, interpret):
+    Q, D, B = cfg["Q"], cfg["D"], cfg["B"]
+    epilogue = cfg.get("epilogue", "scores")
+    n_classes = cfg.get("n_classes")
+    k = cfg.get("k")
+    path = cfg.get("path", "ops")
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(Q, D)).astype(np.float32)
+    W = rng.normal(size=(B, D)).astype(np.float32)
+    kw = dict(
+        epilogue=epilogue,
+        n_classes=n_classes,
+        k=k,
+        q_block=cfg["q_block"],
+        b_tile=cfg["b_tile"],
+        stream_dtype=cfg["stream_dtype"] if cfg["stream_dtype"] != "f32" else None,
+        interpret=interpret,
+    )
+    if path == "server":
+        # end-to-end: FIFO packing of ragged requests + the kernel — a new
+        # server per rep so admission/packing overhead is inside the clock
+        sizes = _ragged_sizes(Q)
+
+        def run():
+            server = BankServer(W, **kw)
+            reqs = [server.submit(X[lo:hi]) for lo, hi in sizes]
+            server.run()
+            return reqs[-1].result
+    else:
+        run = lambda: jax.block_until_ready(predict_bank(jnp.asarray(X), jnp.asarray(W), **kw))
+    run()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        run()
+    sec = (time.perf_counter() - t0) / reps
+
+    if epilogue == "ovr":
+        nc_pad, g_tile, gp = ovr_group_tiling(B, n_classes, cfg["b_tile"])
+        b_tile_eff, n_btiles = g_tile * nc_pad, gp // g_tile
+    else:
+        b_tile_eff, n_btiles = bank_tiling(B, cfg["b_tile"])
+    by = modeled_bytes(
+        Q, D, B, cfg["q_block"], epilogue, n_classes, k, cfg["stream_dtype"]
+    )
+    total = sum(by.values())
+    roofline_sec = total / (HBM_PEAK_GBPS * 1e9)
+    return {
+        "name": cfg["name"],
+        "Q": Q,
+        "D": D,
+        "B": B,
+        "q_block": cfg["q_block"],
+        "b_tile": b_tile_eff,
+        "n_bank_tiles": n_btiles,
+        "epilogue": epilogue,
+        "n_classes": n_classes,
+        "k": k,
+        "stream_dtype": cfg["stream_dtype"],
+        "path": path,
+        "seconds_per_batch": sec,
+        "queries_per_s": Q / sec,
+        "model_scores_per_s": Q * B / sec,  # margins evaluated / s
+        "bytes": {**by, "total": total},
+        "query_passes": 1.0,  # data-major grid: NOT B/b_tile
+        "naive_query_bytes": n_btiles * by["queries"],  # bank-major cost
+        "achieved_gbps": total / sec / 1e9,
+        "roofline_seconds": roofline_sec,
+        "roofline_frac": roofline_sec / sec,
+    }
+
+
+def _ragged_sizes(Q):
+    """Deterministic ragged request spans covering Q rows (server path)."""
+    spans, lo, step = [], 0, 0
+    while lo < Q:
+        n = [7, 33, 128, 15, 64][step % 5]
+        spans.append((lo, min(lo + n, Q)))
+        lo += n
+        step += 1
+    return spans
+
+
+def sweep(smoke: bool):
+    if smoke:
+        base = dict(Q=512, D=64, q_block=128)
+        return [
+            dict(name="smoke_scores_single_tile", **base, B=48, b_tile=None,
+                 stream_dtype="f32"),
+            dict(name="smoke_scores_tiled", **base, B=48, b_tile=8,
+                 stream_dtype="f32"),
+            dict(name="smoke_bf16", **base, B=48, b_tile=8,
+                 stream_dtype="bf16"),
+            # the acceptance row: fused per-C-grid-group argmax epilogue
+            dict(name="smoke_ovr", **base, B=48, b_tile=16, stream_dtype="f32",
+                 epilogue="ovr", n_classes=16),
+            dict(name="smoke_topk", **base, B=48, b_tile=8, stream_dtype="f32",
+                 epilogue="topk", k=4),
+            # end-to-end microbatching server (ragged FIFO packing included)
+            dict(name="smoke_server_ovr", **base, B=48, b_tile=16,
+                 stream_dtype="f32", epilogue="ovr", n_classes=16,
+                 path="server"),
+        ]
+    base = dict(D=128, q_block=256)
+    return [
+        # query-stream scaling at the quickstart bank shape (600 models)
+        dict(name="serve_q4096_b600", Q=4096, **base, B=600, b_tile=64,
+             stream_dtype="f32"),
+        dict(name="serve_q16384_b600", Q=16384, **base, B=600, b_tile=64,
+             stream_dtype="f32"),
+        # dtype policy: same shape, half the query bytes
+        dict(name="serve_q16384_b600_bf16", Q=16384, **base, B=600, b_tile=64,
+             stream_dtype="bf16"),
+        # bank scaling: one query pass for 1x..8x the bank
+        dict(name="serve_q4096_b64", Q=4096, **base, B=64, b_tile=64,
+             stream_dtype="f32"),
+        dict(name="serve_q4096_b512", Q=4096, **base, B=512, b_tile=64,
+             stream_dtype="f32"),
+        # fused epilogues at the quickstart layout (200 classes x 3 C points)
+        dict(name="serve_ovr_200c_x3", Q=4096, **base, B=600, b_tile=200,
+             stream_dtype="f32", epilogue="ovr", n_classes=200),
+        dict(name="serve_topk8_b600", Q=4096, **base, B=600, b_tile=64,
+             stream_dtype="f32", epilogue="topk", k=8),
+        # end-to-end server (packing overhead included)
+        dict(name="serve_server_ovr_200c_x3", Q=4096, **base, B=600,
+             b_tile=200, stream_dtype="f32", epilogue="ovr", n_classes=200,
+             path="server"),
+    ]
+
+
+def run(smoke: bool, reps: int, interpret, name_filter: str | None = None):
+    results = []
+    for cfg in sweep(smoke):
+        if name_filter is not None and name_filter not in cfg["name"]:
+            continue
+        results.append(bench_one(cfg, reps, interpret))
+    return {
+        "schema": SCHEMA,
+        "generated": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "backend": jax.default_backend(),
+        "interpret": (
+            jax.default_backend() != "tpu" if interpret is None else interpret
+        ),
+        "jax_version": jax.__version__,
+        "hbm_peak_gbps": HBM_PEAK_GBPS,
+        "smoke": smoke,
+        "reps": reps,
+        "results": results,
+    }
+
+
+def validate(report: dict):
+    """Schema check (used by the CI bench-smoke job).
+
+    Validates the report's SHAPE and that the measurements are sane numbers.
+    The one-pass query-movement property (query_passes == 1.0) is a design
+    invariant of the data-major grid, enforced by the kernel parity suite
+    (tests/test_predict_engine.py bit-exactness across b_tile); the field is
+    reported so downstream readers model bytes correctly.
+    """
+    for key in ("schema", "generated", "backend", "hbm_peak_gbps", "results"):
+        if key not in report:
+            raise ValueError(f"BENCH report missing key {key!r}")
+    if report["schema"] != SCHEMA:
+        raise ValueError(f"unexpected schema {report['schema']!r}")
+    if not report["results"]:
+        raise ValueError("BENCH report has no results")
+    for row in report["results"]:
+        missing = [k for k in RESULT_KEYS if k not in row]
+        if missing:
+            raise ValueError(f"result {row.get('name')!r} missing {missing}")
+        if not (row["seconds_per_batch"] > 0 and row["achieved_gbps"] > 0):
+            raise ValueError(f"{row['name']}: non-positive measurement")
+        if row["epilogue"] not in ("scores", "ovr", "topk"):
+            raise ValueError(
+                f"{row['name']}: unknown epilogue {row['epilogue']!r}"
+            )
+        if row["path"] not in ("ops", "server"):
+            raise ValueError(f"{row['name']}: unknown path {row['path']!r}")
+    return True
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="tiny CI sweep")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument(
+        "--out",
+        default=str(Path(__file__).resolve().parent.parent / "BENCH_serving.json"),
+    )
+    ap.add_argument(
+        "--interpret", default=None, choices=["true", "false"],
+        help="force interpret mode (default: auto — interpret off-TPU)",
+    )
+    ap.add_argument(
+        "--filter", default=None, metavar="SUBSTR",
+        help="bench only configs whose name contains SUBSTR",
+    )
+    ap.add_argument(
+        "--append", action="store_true",
+        help="merge results into an existing --out report (rows with the "
+        "same name are replaced)",
+    )
+    args = ap.parse_args(argv)
+    interpret = None if args.interpret is None else args.interpret == "true"
+
+    report = run(args.smoke, args.reps, interpret, name_filter=args.filter)
+    out_path = Path(args.out)
+    if args.append and out_path.exists():
+        prev = json.loads(out_path.read_text())
+        new_names = {r["name"] for r in report["results"]}
+        report["results"] = [
+            r for r in prev.get("results", []) if r["name"] not in new_names
+        ] + report["results"]
+    validate(report)
+    out_path.write_text(json.dumps(report, indent=2) + "\n")
+
+    hdr = ("name", "epilogue", "path", "queries/s", "model-scores/s", "GB/s",
+           "roofline%", "s/batch")
+    print(",".join(hdr))
+    for r in report["results"]:
+        print(
+            f'{r["name"]},{r["epilogue"]},{r["path"]},'
+            f'{r["queries_per_s"]:.0f},{r["model_scores_per_s"]:.0f},'
+            f'{r["achieved_gbps"]:.3f},{100 * r["roofline_frac"]:.2f},'
+            f'{r["seconds_per_batch"]:.4f}'
+        )
+    print(f"BENCH written: {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,8 @@
 """Quickstart: one-pass StreamSVM vs single-pass baselines on Synthetic-A,
 a whole C-grid trained in ONE pass via the multi-ball engine, then a
-200-class OVR x 3-point C-grid (600 models) in one pass of the TILED engine.
+200-class OVR x 3-point C-grid (600 models) in one pass of the TILED engine
+— and the trained bank SERVED back through the fused predict engine
+(serve.BankServer), bit-exact with the direct readout.
 
     PYTHONPATH=src python examples/quickstart.py
 
@@ -113,6 +115,37 @@ def main():
     print(f"bank state O(B*D) = {ovr.w.nbytes} bytes vs one stream read "
           f"of {Xm.nbytes} bytes; throughput harness: "
           "PYTHONPATH=src python benchmarks/streaming_throughput.py")
+
+    # --- serve it: the bank through the fused predict engine ----------------
+    # The trained bank is tiny and constant-storage, which is exactly the
+    # high-QPS deploy shape: serve.BankServer microbatches ragged query
+    # batches into fixed (q_block,) row slots and scores each microbatch with
+    # ONE fused Pallas kernel launch (per-C-grid-group argmax epilogue).
+    # Served f32 results are bit-exact with the direct jnp readout. From a
+    # fit_chunked_many checkpoint the same flow is
+    # BankServer.from_checkpoint(path, epilogue="ovr").score(queries) — see
+    # examples/serve_bank.py.
+    from repro.core import predict_c_grid
+    from repro.serve import BankServer
+
+    server = BankServer(ovr, epilogue="ovr", n_classes=n_classes,
+                        q_block=256, b_tile=200)
+    server.score(Xm[:1])  # warmup/compile (the kernel shape is (q_block, D))
+    steps0 = server.stats.steps
+    t0 = time.perf_counter()
+    cls, _ = server.score(Xm)
+    dt = time.perf_counter() - t0
+    direct_cls, _ = predict_c_grid(ovr, jnp.asarray(Xm), n_classes)
+    served = np.mean(cls == np.asarray(labels)[:, None], axis=0)
+    direct = np.mean(np.asarray(direct_cls) == np.asarray(labels)[:, None], axis=0)
+    print(f"\nserved the bank back over the {len(Xm)} training rows in "
+          f"{server.stats.steps - steps0} microbatches ({dt*1e3:.0f} ms, "
+          f"{len(Xm)/dt:.0f} queries/s, interpret mode):")
+    for ci, cval in enumerate(c_pts):
+        print(f"  C={cval:6.1f}  served acc={100*served[ci]:5.1f}%  "
+              f"direct acc={100*direct[ci]:5.1f}%")
+    exact = np.array_equal(cls, np.asarray(direct_cls))
+    print(f"served == direct predict_c_grid readout, bit for bit: {exact}")
 
 
 if __name__ == "__main__":

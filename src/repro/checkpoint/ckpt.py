@@ -54,9 +54,18 @@ def save(path: str, tree, *, meta: Optional[Dict[str, Any]] = None):
     os.replace(tmp, os.path.join(path, "manifest.json"))  # atomic commit
 
 
-def load_meta(path: str) -> Dict[str, Any]:
+def load_manifest(path: str) -> Dict[str, Any]:
+    """The full manifest: treedef repr, n_leaves, dtypes, shapes, meta.
+
+    The supported way to inspect a checkpoint's layout without a restore
+    target (serve.BankServer.from_checkpoint rebuilds its Ball target from
+    the shapes/dtypes here) — the on-disk format stays this module's."""
     with open(os.path.join(path, "manifest.json")) as f:
-        return json.load(f)["meta"]
+        return json.load(f)
+
+
+def load_meta(path: str) -> Dict[str, Any]:
+    return load_manifest(path)["meta"]
 
 
 def exists(path: str) -> bool:

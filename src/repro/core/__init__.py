@@ -32,7 +32,7 @@ from .multiball import (
     fit_multiball,
     to_single_ball,
 )
-from .multiclass import fit_ovr, ovr_signs, predict_ovr, fit_c_grid
+from .multiclass import fit_ovr, ovr_signs, predict_c_grid, predict_ovr, fit_c_grid
 
 __all__ = [
     "Ball",
@@ -65,6 +65,7 @@ __all__ = [
     "ovr_signs",
     "point_distance",
     "predict",
+    "predict_c_grid",
     "predict_ovr",
     "rbf_kernel",
     "solve_meb_ball_points",

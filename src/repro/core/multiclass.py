@@ -106,8 +106,39 @@ def fit_ovr(
 
 
 def predict_ovr(balls: Ball, X: jax.Array) -> jax.Array:
+    """Direct jnp OVR readout: argmax margin over the bank's model axis.
+
+    The serving fast path for this readout is kernels.ops.predict_bank /
+    serve.BankServer (fused tiled kernel, bit-exact with this matmul in
+    f32); this stays the one-liner oracle.
+    """
     scores = X @ balls.w.T  # (N, K)
     return jnp.argmax(scores, axis=-1)
+
+
+def predict_c_grid(balls: Ball, X: jax.Array, n_classes: int):
+    """Per-C-grid-group OVR readout of a (G * n_classes)-model bank.
+
+    ``balls`` is a stacked bank laid out class-major within each
+    hyper-parameter group (model = g * n_classes + class — exactly what
+    ``fit_ovr``/``fit_c_grid``/the quickstart's ``jnp.tile(signs, (G, 1))``
+    produce). Returns ``((N, G) int32 predicted class, (N, G) f32 margin)``:
+    each C-grid point's classifier answers independently, so one readout
+    scores the whole grid. Direct jnp path — the fused serving twin is
+    ``kernels.ops.predict_bank(..., epilogue="ovr")``, bit-exact in f32.
+    """
+    scores = X @ balls.w.T  # (N, B)
+    b = scores.shape[1]
+    if n_classes < 1 or b % n_classes:
+        raise ValueError(
+            f"n_classes must be >= 1 and divide the bank size: got "
+            f"n_classes={n_classes}, B={b}"
+        )
+    grouped = scores.reshape(X.shape[0], b // n_classes, n_classes)
+    return (
+        jnp.argmax(grouped, axis=-1).astype(jnp.int32),
+        jnp.max(grouped, axis=-1),
+    )
 
 
 @partial(

@@ -5,6 +5,9 @@ streamsvm_scan — blocked one-pass Algorithm 1 (ball state resident in VMEM):
                  data-major grid training B models per stream pass for
                  arbitrary B (bank tiled across VMEM scratch), with fused
                  Algorithm-2 lookahead windows and a bf16 stream-tile policy
+predict        — the serving twin: (Q, D) query tiles x (B, D) bank tiles on
+                 the same data-major grid, with fused scores / per-C-grid-
+                 group ovr-argmax / topk epilogues
 gram           — tiled kernel-matrix blocks (linear / RBF epilogues)
 
 ops.py carries the jit'd public wrappers (padding, bank tiling, dtype
@@ -12,6 +15,6 @@ policy); ref.py the pure-jnp/numpy oracles. Kernels validate in
 interpret=True mode on CPU and target TPU BlockSpec tiling (128-aligned
 lanes, f32 VMEM accumulators).
 """
-from .ops import gram, streamsvm_fit, streamsvm_fit_many
+from .ops import gram, predict_bank, streamsvm_fit, streamsvm_fit_many
 
-__all__ = ["gram", "streamsvm_fit", "streamsvm_fit_many"]
+__all__ = ["gram", "predict_bank", "streamsvm_fit", "streamsvm_fit_many"]

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 
 from repro.core.meb import Ball
 from .gram import gram_pallas
+from .predict import NEG_MASK, predict_bank_pallas
 from .streamsvm_scan import streamsvm_scan_many_pallas, streamsvm_scan_pallas
 
 _STREAM_DTYPES = {
@@ -65,6 +66,24 @@ def bank_tiling(b: int, b_tile: int | None):
     """
     bt = -(-b // 8) * 8 if b_tile is None else -(-b_tile // 8) * 8
     return bt, -(-b // bt)
+
+
+def ovr_group_tiling(b: int, n_classes: int, b_tile: int | None):
+    """Resolve the predict engine's ovr-epilogue bank tiling for B models.
+
+    Each group's ``n_classes`` class lanes are padded to the f32 sublane
+    multiple of 8 (``nc_pad``) and the bank is tiled in WHOLE groups so a
+    group's argmax never crosses a bank tile. Returns ``(nc_pad, g_tile,
+    padded_groups)``: lanes per padded group, groups per bank tile (derived
+    from the requested lane ``b_tile``; default one tile holding every
+    group), and the group count padded to a whole number of tiles. The
+    single source of truth for this policy — the serving throughput harness
+    derives its modeled tile counts from here too.
+    """
+    g = b // n_classes
+    nc_pad = -(-n_classes // 8) * 8
+    g_tile = g if b_tile is None else max(1, b_tile // nc_pad)
+    return nc_pad, g_tile, -(-g // g_tile) * g_tile
 
 
 def _pad_to(x, mult, axis):
@@ -289,3 +308,127 @@ def gram(
         interpret=interpret,
     )
     return out[:m, :n]
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "epilogue", "n_classes", "k", "q_block", "b_tile", "stream_dtype",
+        "interpret",
+    ),
+)
+def predict_bank(
+    X: jax.Array,
+    W: jax.Array,
+    *,
+    epilogue: str = "scores",
+    n_classes: int | None = None,
+    k: int | None = None,
+    q_block: int = 256,
+    b_tile: int | None = None,
+    stream_dtype=None,
+    interpret: bool | None = None,
+):
+    """Score (Q, D) queries against a (B, D) bank with a fused epilogue.
+
+    The serving twin of ``streamsvm_fit_many``: the kernel's 2-D grid is
+    data-major (query tiles outer), so each (q_block, D) query tile is DMA'd
+    from HBM once and revisited by every (b_tile, D) bank tile. ``W`` is the
+    trained bank's weight rows (``bank.w`` of a fit_bank/fit_ovr/fit_c_grid
+    result). Only shapes and the static epilogue parameters compile — serving
+    a NEW bank of the same shape never recompiles (regression-tested via the
+    jit cache in tests/test_predict_engine.py).
+
+    epilogue:
+      "scores"          -> (Q, B) f32 margins, bit-exact (f32 queries) with
+                           the jnp readout ``X @ W.T``
+      "ovr", n_classes= -> ((Q, G) int32, (Q, G) f32): winning class id and
+                           its margin per C-grid group, G = B // n_classes,
+                           bank laid out class-major within each group
+                           (model = g * n_classes + class — exactly the
+                           fit_ovr/fit_c_grid flattening). Groups are padded
+                           to whole bank tiles so the argmax fuses into the
+                           matmul step.
+      "topk", k=        -> ((Q, k) f32, (Q, k) int32) descending top-k model
+                           scores and ids per query.
+
+    q_block: query rows per tile (the microbatch slot count BankServer packs
+    into). b_tile: bank lanes per tile (rounded up to the f32 sublane
+    multiple of 8; for "ovr" rounded to whole padded groups; default: one
+    tile holding the whole bank). stream_dtype: None/"f32" or "bf16" — query
+    tiles DMA'd as bf16 (half the dominant HBM term; the bank, bias and
+    accumulators stay f32; see the module dtype policy).
+    """
+    q, d = X.shape
+    b, dw = W.shape
+    if dw != d:
+        raise ValueError(
+            f"queries and bank must share the feature axis: got X.shape="
+            f"{X.shape}, W.shape={W.shape}"
+        )
+    if epilogue not in ("scores", "ovr", "topk"):
+        raise ValueError(
+            f"unknown epilogue {epilogue!r}; expected 'scores', 'ovr' or "
+            "'topk'"
+        )
+    if epilogue != "ovr" and n_classes is not None:
+        raise ValueError(
+            f"n_classes={n_classes} requires epilogue='ovr' (got "
+            f"epilogue={epilogue!r})"
+        )
+    if epilogue != "topk" and k is not None:
+        raise ValueError(
+            f"k={k} requires epilogue='topk' (got epilogue={epilogue!r})"
+        )
+    stream_dtype = _resolve_stream_dtype(stream_dtype)
+    Xp = _pad_to(_pad_to(X.astype(jnp.float32), 128, 1), q_block, 0)
+    if stream_dtype is not None:
+        Xp = Xp.astype(stream_dtype)
+    Wf = W.astype(jnp.float32)
+
+    if epilogue == "ovr":
+        if n_classes is None or n_classes < 1 or b % n_classes:
+            raise ValueError(
+                f"epilogue='ovr' needs n_classes >= 1 dividing B: got "
+                f"n_classes={n_classes}, B={b}"
+            )
+        g = b // n_classes
+        # Pad each group's class lanes to the sublane multiple of 8, then
+        # tile the bank in whole GROUPS so a group's argmax never crosses a
+        # tile boundary (the cross-tile running state "scores" and "topk"
+        # need is unnecessary here).
+        nc_pad, g_tile, gp = ovr_group_tiling(b, n_classes, b_tile)
+        Wg = _pad_to(_pad_to(Wf.reshape(g, n_classes, d), nc_pad, 1), gp, 0)
+        Wp = _pad_to(Wg.reshape(gp * nc_pad, d), 128, 1)
+        lane = jnp.arange(gp * nc_pad)
+        live = jnp.logical_and(
+            lane % nc_pad < n_classes, lane // nc_pad < g
+        )
+        bias = jnp.where(live, 0.0, NEG_MASK)[:, None].astype(jnp.float32)
+        cls, margin = predict_bank_pallas(
+            Xp, Wp, bias, epilogue="ovr", q_block=q_block,
+            b_tile=g_tile * nc_pad, nc_pad=nc_pad, interpret=interpret,
+        )
+        return cls[:q, :g], margin[:q, :g]
+
+    bt, _ = bank_tiling(b, b_tile)
+    bp = -(-b // bt) * bt
+    Wp = _pad_to(_pad_to(Wf, 128, 1), bp, 0)
+    bias = jnp.where(jnp.arange(bp) < b, 0.0, NEG_MASK)[:, None].astype(
+        jnp.float32
+    )
+    if epilogue == "topk":
+        if k is None or not (1 <= k <= b):
+            raise ValueError(
+                f"epilogue='topk' needs 1 <= k <= B: got k={k}, B={b}"
+            )
+        vals, ids = predict_bank_pallas(
+            Xp, Wp, bias, epilogue="topk", q_block=q_block, b_tile=bt, k=k,
+            interpret=interpret,
+        )
+        return vals[:q], ids[:q]
+    scores = predict_bank_pallas(
+        Xp, Wp, bias, epilogue="scores", q_block=q_block, b_tile=bt,
+        interpret=interpret,
+    )
+    return scores[:q, :b]

@@ -166,6 +166,50 @@ def streamsvm_scan_lookahead_many_ref(
     )
 
 
+def predict_bank_ref(X, W, *, epilogue="scores", n_classes=None, k=None):
+    """Bank-inference oracle: one einsum + a jnp epilogue.
+
+    X: (Q, D) queries; W: (B, D) bank of model weight rows. Mirrors
+    ops.predict_bank's epilogue contract:
+
+      "scores" -> (Q, B) f32 margins
+      "ovr"    -> ((Q, G) int32, (Q, G) f32): per-C-grid-group argmax class
+                  and its margin, with the bank laid out class-major within
+                  each group (model = g * n_classes + class — the
+                  fit_ovr/fit_c_grid flattening) and G = B // n_classes
+      "topk"   -> ((Q, k) f32, (Q, k) int32) descending top-k model scores
+                  and ids per query (lax.top_k)
+    """
+    scores = jnp.einsum(
+        "qd,bd->qb", X.astype(jnp.float32), W.astype(jnp.float32)
+    )
+    if epilogue == "scores":
+        return scores
+    if epilogue == "ovr":
+        q, b = scores.shape
+        if n_classes is None or n_classes < 1 or b % n_classes:
+            raise ValueError(
+                f"epilogue='ovr' needs n_classes >= 1 dividing B: got "
+                f"n_classes={n_classes}, B={b}"
+            )
+        grouped = scores.reshape(q, b // n_classes, n_classes)
+        return (
+            jnp.argmax(grouped, axis=-1).astype(jnp.int32),
+            jnp.max(grouped, axis=-1),
+        )
+    if epilogue == "topk":
+        if k is None or not (1 <= k <= scores.shape[1]):
+            raise ValueError(
+                f"epilogue='topk' needs 1 <= k <= B: got k={k}, "
+                f"B={scores.shape[1]}"
+            )
+        vals, ids = jax.lax.top_k(scores, k)
+        return vals, ids.astype(jnp.int32)
+    raise ValueError(
+        f"unknown epilogue {epilogue!r}; expected 'scores', 'ovr' or 'topk'"
+    )
+
+
 def gram_ref(A, B, *, epilogue="linear", gamma=1.0, out_dtype=jnp.float32):
     acc = jnp.einsum("md,nd->mn", A.astype(jnp.float32), B.astype(jnp.float32))
     if epilogue == "rbf":

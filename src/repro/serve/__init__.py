@@ -1,3 +1,19 @@
-from .scheduler import ContinuousBatcher, Request, SchedulerStats
+"""serve/ — two schedulers over one slot/utilization discipline.
 
-__all__ = ["ContinuousBatcher", "Request", "SchedulerStats"]
+token_scheduler.py: continuous batching of LLM decode slots (Orca/vLLM
+style). bank_server.py: microbatched query scoring against a trained
+StreamSVM (B, D) bank via the fused Pallas predict kernel, with checkpoint
+loading and mid-stream bank hot-swap. scheduler.py is a compatibility shim
+for the token scheduler's old location.
+"""
+from .bank_server import BankServer, ScoreRequest, ServerStats
+from .token_scheduler import ContinuousBatcher, Request, SchedulerStats
+
+__all__ = [
+    "BankServer",
+    "ContinuousBatcher",
+    "Request",
+    "SchedulerStats",
+    "ScoreRequest",
+    "ServerStats",
+]

@@ -1,0 +1,303 @@
+"""Bank-serving engine: microbatched query scoring against a StreamSVM bank.
+
+The inference-side twin of the token scheduler (token_scheduler.py), built
+for the deploy shape the paper's one-pass training produces: a *tiny,
+constant-storage* (B, D) bank — classes x C-grid x variants — and a firehose
+of queries. Same slot/utilization discipline as continuous batching, applied
+to query ROWS instead of decode tokens:
+
+  - a fixed microbatch of ``q_block`` row slots (the Pallas predict kernel's
+    query-tile height, so every step is one fused kernel launch);
+  - ragged requests (any number of rows each) are packed FIFO into the free
+    slots of each step — a large request spans several steps, several small
+    requests share one — so slot waste is only the final partial batch;
+  - ``SchedulerStats``-style accounting: busy-row / idle-row utilization.
+
+Scoring runs through ``kernels.ops.predict_bank`` (data-major tiled grid,
+fused scores / per-C-grid-group ovr-argmax / topk epilogues, optional bf16
+query tiles). f32 served scores are bit-exact with the direct jnp readout
+``X @ bank.w.T`` (tests/test_bank_server.py pins this against
+core.predict_ovr).
+
+Train -> serve handoff: ``BankServer.from_checkpoint`` loads the stacked-Ball
+bank a ``fit_chunked_many`` checkpoint callback persisted via
+``repro.checkpoint.ckpt.save`` (manifest + npz), picking up ``n_classes``
+from the checkpoint meta when serving OVR.
+
+Hot swap: ``swap_bank`` replaces the bank between steps WITHOUT dropping
+queued requests — rows already scored keep their results, every row scored
+after the swap sees the new bank, and a same-shape swap never recompiles
+(only shapes and epilogue parameters are static to the kernel's jit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.meb import Ball
+from repro.kernels.ops import predict_bank
+
+
+@dataclasses.dataclass
+class ScoreRequest:
+    """One scoring request: a ragged block of query rows and its results.
+
+    ``result`` is filled in place as the server's microbatches cover the
+    request's rows: an (n, B) f32 array for the "scores" epilogue, an
+    ``((n, G) int32 class ids, (n, G) f32 margins)`` pair for "ovr", and an
+    ``((n, k) f32, (n, k) int32)`` pair for "topk".
+    """
+
+    rid: int
+    queries: np.ndarray  # (n, D) float32
+    result: Union[np.ndarray, Tuple[np.ndarray, ...], None] = None
+    rows_scored: int = 0
+    done: bool = False
+
+
+@dataclasses.dataclass
+class ServerStats:
+    """Row-slot accounting, mirroring token_scheduler.SchedulerStats."""
+
+    steps: int = 0
+    admitted: int = 0
+    finished: int = 0
+    slot_busy_rows: int = 0
+    slot_idle_rows: int = 0
+    bank_swaps: int = 0
+
+    @property
+    def utilization(self) -> float:
+        tot = self.slot_busy_rows + self.slot_idle_rows
+        return self.slot_busy_rows / tot if tot else 0.0
+
+
+class BankServer:
+    """Serve a trained (B, D) bank: microbatch, score, hot-swap.
+
+    bank: a stacked ``Ball`` (``fit_bank``/``fit_ovr``/``fit_c_grid`` result
+    or a restored checkpoint) or a plain (B, D) weight array.
+    epilogue/n_classes/k/q_block/b_tile/stream_dtype: the fused-kernel
+    serving configuration — see ``kernels.ops.predict_bank``. These are
+    static (fixed per server); the bank itself is traced, so ``swap_bank``
+    with a same-shape bank reuses the compiled kernel.
+    """
+
+    def __init__(
+        self,
+        bank,
+        *,
+        epilogue: str = "scores",
+        n_classes: Optional[int] = None,
+        k: Optional[int] = None,
+        q_block: int = 256,
+        b_tile: Optional[int] = None,
+        stream_dtype=None,
+        interpret: Optional[bool] = None,
+    ):
+        self._w = self._bank_weights(bank)
+        b, d = self._w.shape
+        if epilogue not in ("scores", "ovr", "topk"):
+            raise ValueError(
+                f"unknown epilogue {epilogue!r}; expected 'scores', 'ovr' "
+                "or 'topk'"
+            )
+        if epilogue == "ovr":
+            if n_classes is None or n_classes < 1 or b % n_classes:
+                raise ValueError(
+                    f"epilogue='ovr' needs n_classes >= 1 dividing B: got "
+                    f"n_classes={n_classes}, B={b}"
+                )
+        elif epilogue == "topk" and (k is None or not (1 <= k <= b)):
+            raise ValueError(
+                f"epilogue='topk' needs 1 <= k <= B: got k={k}, B={b}"
+            )
+        self.epilogue = epilogue
+        self.n_classes = n_classes
+        self.k = k
+        self.q_block = int(q_block)
+        self.b_tile = b_tile
+        self.stream_dtype = stream_dtype
+        self.interpret = interpret
+        self.stats = ServerStats()
+        self._queue: List[ScoreRequest] = []  # FIFO; head may be partial
+        self._next_rid = 0
+
+    # -- bank management ----------------------------------------------------
+
+    @staticmethod
+    def _bank_weights(bank) -> jnp.ndarray:
+        w = bank.w if hasattr(bank, "w") else bank
+        w = jnp.asarray(w, jnp.float32)
+        if w.ndim != 2:
+            raise ValueError(
+                f"bank must be a stacked Ball or a (B, D) weight array: got "
+                f"weights of shape {w.shape}"
+            )
+        return w
+
+    @property
+    def bank_shape(self) -> Tuple[int, int]:
+        return tuple(self._w.shape)
+
+    def swap_bank(self, bank) -> None:
+        """Replace the served bank between steps; queued requests survive.
+
+        Rows already scored keep their (old-bank) results; every row scored
+        from the next ``step()`` on sees the new bank. The new bank must
+        match the current (B, D) — same shape means the kernel's jit cache
+        is reused, so a swap never stalls serving on a recompile.
+        """
+        w = self._bank_weights(bank)
+        if w.shape != self._w.shape:
+            raise ValueError(
+                f"hot-swap bank shape {tuple(w.shape)} != served bank shape "
+                f"{tuple(self._w.shape)}; start a new BankServer to change "
+                "shape"
+            )
+        self._w = w
+        self.stats.bank_swaps += 1
+
+    @classmethod
+    def from_checkpoint(cls, path: str, **kwargs) -> "BankServer":
+        """Serve the bank a fit_chunked_many checkpoint persisted to disk.
+
+        ``path`` is a ``repro.checkpoint.ckpt.save`` directory whose tree is
+        the stacked Ball (the ``StreamCheckpoint.ball`` handed to the
+        checkpoint callback). The manifest's shapes/dtypes rebuild the Ball
+        target for restore; ``meta["n_classes"]`` (if the trainer recorded
+        it) fills in OVR serving unless overridden.
+        """
+        from repro.checkpoint import ckpt
+
+        manifest = ckpt.load_manifest(path)
+        shapes, dtypes = manifest["shapes"], manifest["dtypes"]
+        if len(shapes) != 4:
+            raise ValueError(
+                f"checkpoint at {path!r} has {len(shapes)} leaves; expected "
+                "the 4-leaf stacked Ball (w, r, xi2, m) a fit_chunked_many "
+                "checkpoint carries"
+            )
+        target = Ball(
+            *(jnp.zeros(s, dt) for s, dt in zip(shapes, dtypes))
+        )
+        bank = ckpt.restore(path, target)
+        meta = manifest.get("meta", {})
+        if (
+            kwargs.get("epilogue") == "ovr"
+            and "n_classes" not in kwargs
+            and "n_classes" in meta
+        ):
+            kwargs["n_classes"] = int(meta["n_classes"])
+        return cls(bank, **kwargs)
+
+    # -- request lifecycle --------------------------------------------------
+
+    def submit(self, queries) -> ScoreRequest:
+        """Queue a ragged block of query rows; returns its ScoreRequest."""
+        q = np.asarray(queries, np.float32)
+        if q.ndim != 2 or q.shape[1] != self._w.shape[1]:
+            raise ValueError(
+                f"queries must be (n, D={self._w.shape[1]}) rows: got shape "
+                f"{q.shape}"
+            )
+        n = q.shape[0]
+        b = self._w.shape[0]
+        if self.epilogue == "scores":
+            result = np.empty((n, b), np.float32)
+        elif self.epilogue == "ovr":
+            g = b // self.n_classes
+            result = (np.empty((n, g), np.int32), np.empty((n, g), np.float32))
+        else:
+            result = (
+                np.empty((n, self.k), np.float32),
+                np.empty((n, self.k), np.int32),
+            )
+        req = ScoreRequest(rid=self._next_rid, queries=q, result=result)
+        self._next_rid += 1
+        self.stats.admitted += 1
+        if n == 0:  # nothing to score — finished on arrival
+            req.done = True
+            self.stats.finished += 1
+        else:
+            self._queue.append(req)
+        return req
+
+    def pending_rows(self) -> int:
+        return sum(r.queries.shape[0] - r.rows_scored for r in self._queue)
+
+    def step(self) -> int:
+        """Pack up to q_block queued rows, run ONE fused kernel launch,
+        scatter results back. Returns the number of rows scored."""
+        if not self._queue:
+            return 0
+        d = self._w.shape[1]
+        buf = np.zeros((self.q_block, d), np.float32)
+        segments: List[Tuple[ScoreRequest, int, int, int]] = []
+        filled = 0
+        qi = 0
+        while qi < len(self._queue) and filled < self.q_block:
+            req = self._queue[qi]
+            off = req.rows_scored
+            take = min(req.queries.shape[0] - off, self.q_block - filled)
+            buf[filled : filled + take] = req.queries[off : off + take]
+            segments.append((req, off, take, filled))
+            filled += take
+            qi += 1
+        out = predict_bank(
+            jnp.asarray(buf),
+            self._w,
+            epilogue=self.epilogue,
+            n_classes=self.n_classes,
+            k=self.k,
+            q_block=self.q_block,
+            b_tile=self.b_tile,
+            stream_dtype=self.stream_dtype,
+            interpret=self.interpret,
+        )
+        parts = (out,) if self.epilogue == "scores" else out
+        parts = tuple(np.asarray(p) for p in parts)
+        finished = 0
+        for req, off, take, at in segments:
+            dests = (
+                (req.result,) if self.epilogue == "scores" else req.result
+            )
+            for dst, src in zip(dests, parts):
+                dst[off : off + take] = src[at : at + take]
+            req.rows_scored = off + take
+            if req.rows_scored == req.queries.shape[0]:
+                req.done = True
+                finished += 1
+        self._queue = [r for r in self._queue if not r.done]
+        self.stats.steps += 1
+        self.stats.slot_busy_rows += filled
+        self.stats.slot_idle_rows += self.q_block - filled
+        self.stats.finished += finished
+        return filled
+
+    def run(self, max_steps: int = 100_000) -> ServerStats:
+        """Drain the queue; raises if ``max_steps`` can't cover it.
+
+        Every step scores at least one row, so the queue always drains given
+        enough steps — ``max_steps`` is a runaway valve, and exhausting it
+        with rows still pending is an error (returning would leave requests
+        with uninitialized result rows)."""
+        for _ in range(max_steps):
+            if not self._queue:
+                return self.stats
+            self.step()
+        if self._queue:
+            raise RuntimeError(
+                f"run(max_steps={max_steps}) left {self.pending_rows()} rows "
+                f"pending in {len(self._queue)} request(s); raise max_steps"
+            )
+        return self.stats
+
+    def score(self, queries):
+        """Submit one request and drain: returns its epilogue result."""
+        req = self.submit(queries)
+        self.run()
+        return req.result

@@ -1,148 +1,20 @@
-"""Continuous-batching serving scheduler (slot-based state management).
+"""Compatibility shim — serve/ now holds TWO schedulers; import from them.
 
-The Orca/vLLM idea mapped to JAX with static shapes: a fixed pool of B
-slots; requests join as slots free (admission = single-request prefill whose
-state is scattered into the slot), every decode step advances all busy slots
-together, finished requests release their slot immediately — no
-head-of-line blocking on the longest request in the batch.
+The LLM continuous batcher that used to live here moved (unchanged) to
+``serve/token_scheduler.py``: a fixed pool of decode slots, requests admitted
+as slots free, every decode step advancing all busy slots together.
 
-Scope: exact for the *recurrent* families (xlstm, and zamba2's SSM/conv
-states), whose per-slot state is position-free — a fresh request's state
-drops into any slot at any time. Attention-family continuous batching
-additionally needs per-slot cache positions inside attention (per-slot RoPE
-offsets + scatter writes); that is an engine-level extension flagged in
-DESIGN.md §future. Recurrent models are precisely where the paper's
-constant-state philosophy makes continuous batching trivial.
+Its inference-side sibling is ``serve/bank_server.py``: the same
+slot/utilization discipline applied to StreamSVM bank serving — ragged
+request batches microbatched into fixed (q_block,) row slots and scored
+against a trained (B, D) bank by the fused Pallas predict kernel
+(kernels.ops.predict_bank), with checkpoint loading and mid-stream bank
+hot-swap.
 
-Throughput accounting: `SchedulerStats.utilization` = busy-slot-tokens /
-total-slot-tokens; static batching of mixed-length requests wastes the
-difference (measured in tests/test_serving.py).
+This module re-exports the token scheduler's public names so existing
+imports keep working; new code should import from the specific module (or
+from ``repro.serve``, which exports both).
 """
-from __future__ import annotations
+from .token_scheduler import ContinuousBatcher, Request, SchedulerStats
 
-import dataclasses
-from typing import Dict, List, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray  # (P,) int32
-    max_new: int = 32
-    eos_id: Optional[int] = None
-    generated: Optional[List[int]] = None
-    done: bool = False
-
-
-@dataclasses.dataclass
-class SchedulerStats:
-    steps: int = 0
-    admitted: int = 0
-    finished: int = 0
-    slot_busy_tokens: int = 0
-    slot_idle_tokens: int = 0
-
-    @property
-    def utilization(self) -> float:
-        tot = self.slot_busy_tokens + self.slot_idle_tokens
-        return self.slot_busy_tokens / tot if tot else 0.0
-
-
-def _scatter_slot(slot_state, one_state, slot: int):
-    """Copy a batch-1 request state into `slot` of the slot-batched state.
-
-    Leaf convention: any leaf whose dim-0 equals the slot batch in the big
-    tree and 1 in the small tree is a per-slot state; scalars pass through.
-    """
-
-    def one_leaf(big, small):
-        big = jnp.asarray(big)
-        small = jnp.asarray(small)
-        if big.ndim == 0 or big.shape == small.shape:
-            return big
-        if small.ndim == big.ndim and small.shape[0] == 1:
-            return jax.lax.dynamic_update_slice_in_dim(
-                big, small.astype(big.dtype), slot, axis=0
-            )
-        return big
-
-    return jax.tree.map(one_leaf, slot_state, one_state)
-
-
-class ContinuousBatcher:
-    def __init__(self, model, params, n_slots: int, max_len: int = 4096):
-        self.model = model
-        self.params = params
-        self.n_slots = n_slots
-        self.max_len = max_len
-        st = model.decode_state(n_slots, 1)
-        self.state = {**st, "pos": jnp.asarray(0, jnp.int32)}
-        self.active: Dict[int, Request] = {}
-        self.last_tok = np.zeros((n_slots, 1), np.int32)
-        self.stats = SchedulerStats()
-        self._decode = jax.jit(model.decode_step)
-        self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, {**b, "max_len": max_len})
-        )
-
-    def free_slots(self) -> List[int]:
-        return [s for s in range(self.n_slots) if s not in self.active]
-
-    def admit(self, req: Request) -> bool:
-        slots = self.free_slots()
-        if not slots:
-            return False
-        slot = slots[0]
-        logits, st = self._prefill(
-            self.params, {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
-        )
-        self.state = {
-            **_scatter_slot({k: v for k, v in self.state.items() if k != "pos"},
-                            {k: v for k, v in st.items() if k != "pos"}, slot),
-            "pos": self.state["pos"],
-        }
-        tok = int(jnp.argmax(logits[0]))
-        req.generated = [tok]
-        self.last_tok[slot, 0] = tok
-        self.active[slot] = req
-        self.stats.admitted += 1
-        return True
-
-    def _release(self, slot: int):
-        req = self.active.pop(slot)
-        req.done = True
-        self.stats.finished += 1
-
-    def step(self):
-        if not self.active:
-            return
-        logits, self.state = self._decode(
-            self.params, self.state, jnp.asarray(self.last_tok)
-        )
-        toks = np.array(jnp.argmax(logits, -1), np.int32)  # writable copy
-        self.stats.steps += 1
-        self.stats.slot_busy_tokens += len(self.active)
-        self.stats.slot_idle_tokens += self.n_slots - len(self.active)
-        for slot in list(self.active):
-            req = self.active[slot]
-            tok = int(toks[slot])
-            req.generated.append(tok)
-            if (req.eos_id is not None and tok == req.eos_id) or len(
-                req.generated
-            ) >= req.max_new:
-                self._release(slot)
-        self.last_tok = toks[:, None]
-
-    def run(self, requests: List[Request], max_steps: int = 10_000) -> SchedulerStats:
-        pending = list(requests)
-        for _ in range(max_steps):
-            while pending and self.admit(pending[0]):
-                pending.pop(0)
-            if not self.active and not pending:
-                break
-            self.step()
-        return self.stats
+__all__ = ["ContinuousBatcher", "Request", "SchedulerStats"]

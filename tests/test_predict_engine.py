@@ -1,0 +1,241 @@
+"""Fused predict kernel: tiling bit-exactness, epilogues, bf16, recompiles.
+
+The serving grid decomposition must not change a single bit of f32 output —
+tiled vs single-tile, ragged Q and B — and every fused epilogue must match
+the predict_bank_ref jnp oracle and the core.predict_ovr / predict_c_grid
+direct readouts exactly. bf16 query tiles trade bounded precision for half
+the query HBM traffic. Serving a NEW bank of the same shape never
+recompiles.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    fit_bank,
+    ovr_signs,
+    predict_c_grid,
+    predict_ovr,
+)
+from repro.core.meb import Ball
+from repro.kernels import predict_bank
+from repro.kernels.ref import predict_bank_ref
+
+
+def _qw(q, d, b, seed):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(q, d)).astype(np.float32))
+    W = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    return X, W
+
+
+# ---------------------------------------------------------------------------
+# Tiling (tentpole): grid decomposition == single tile, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("q,d,b,q_block,b_tile", [
+    (512, 64, 64, 128, 8),     # aligned everything, 8 bank tiles
+    (300, 33, 37, 128, 8),     # ragged Q and B, unaligned D
+    (100, 16, 11, 256, 3),     # Q < q_block; b_tile rounded up to 8
+    (257, 128, 48, 64, 16),
+])
+def test_tiled_scores_bit_exact_with_single_tile(q, d, b, q_block, b_tile):
+    X, W = _qw(q, d, b, seed=q + d + b)
+    one = predict_bank(X, W)
+    tiled = predict_bank(X, W, q_block=q_block, b_tile=b_tile)
+    np.testing.assert_array_equal(np.asarray(tiled), np.asarray(one))
+    assert tiled.shape == (q, b)
+
+
+def test_scores_bit_exact_with_direct_matmul():
+    """The serving acceptance bar: f32 kernel scores == X @ W.T, bitwise —
+    including on the quickstart bank shape (D=64, B=600)."""
+    for q, d, b, qb, bt in [(300, 64, 600, 128, 64), (129, 40, 21, 64, 8)]:
+        X, W = _qw(q, d, b, seed=d * b)
+        s = predict_bank(X, W, q_block=qb, b_tile=bt)
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(X @ W.T))
+        np.testing.assert_array_equal(
+            np.asarray(s), np.asarray(predict_bank_ref(X, W))
+        )
+
+
+def test_padded_lanes_and_rows_do_not_leak():
+    """Ragged Q % q_block and B % b_tile: outputs carry no padding values."""
+    X, W = _qw(70, 10, 13, seed=3)
+    s = predict_bank(X, W, q_block=64, b_tile=8)  # pads Q->128, B->16
+    assert s.shape == (70, 13)
+    assert np.isfinite(np.asarray(s)).all()
+    v, i = predict_bank(X, W, epilogue="topk", k=13, q_block=64, b_tile=8)
+    assert int(np.asarray(i).max()) <= 12  # padded model lanes never selected
+    assert np.isfinite(np.asarray(v)).all()
+
+
+# ---------------------------------------------------------------------------
+# Epilogues vs the oracle and the core readouts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_classes,g,b_tile", [
+    (5, 3, 8),       # nc_pad=8: one group per... b_tile//8=1 group per tile
+    (10, 4, 40),     # two padded groups (16 lanes) per tile
+    (3, 1, None),    # single group, single tile
+    (12, 5, 8),      # b_tile < nc_pad: clamps to one group per tile
+])
+def test_ovr_epilogue_matches_oracle(n_classes, g, b_tile):
+    X, W = _qw(150, 20, n_classes * g, seed=n_classes * g)
+    cls, margin = predict_bank(
+        X, W, epilogue="ovr", n_classes=n_classes, q_block=64, b_tile=b_tile
+    )
+    rcls, rmargin = predict_bank_ref(X, W, epilogue="ovr", n_classes=n_classes)
+    np.testing.assert_array_equal(np.asarray(cls), np.asarray(rcls))
+    np.testing.assert_array_equal(np.asarray(margin), np.asarray(rmargin))
+    assert cls.dtype == jnp.int32 and cls.shape == (150, g)
+
+
+def test_ovr_epilogue_parity_with_core_predict_ovr():
+    """On a single-group bank the fused ovr argmax IS core.predict_ovr."""
+    rng = np.random.default_rng(11)
+    proto = rng.normal(size=(7, 18)).astype(np.float32) * 3
+    labels = rng.integers(0, 7, size=500)
+    X = (rng.normal(size=(500, 18)) + proto[labels]).astype(np.float32)
+    X /= np.linalg.norm(X, axis=1, keepdims=True)
+    bank = fit_bank(
+        jnp.asarray(X), ovr_signs(jnp.asarray(labels), 7), 10.0, b_tile=8
+    )
+    cls, _ = predict_bank(
+        jnp.asarray(X), bank.w, epilogue="ovr", n_classes=7, q_block=128
+    )
+    np.testing.assert_array_equal(
+        np.asarray(cls[:, 0]), np.asarray(predict_ovr(bank, jnp.asarray(X)))
+    )
+
+
+def test_ovr_epilogue_parity_with_core_predict_c_grid():
+    """Multi-group bank: fused per-group argmax == core.predict_c_grid."""
+    X, W = _qw(200, 24, 30, seed=77)
+    bank = Ball(
+        w=W, r=jnp.zeros(30), xi2=jnp.zeros(30), m=jnp.ones(30, jnp.int32)
+    )
+    cls, margin = predict_bank(
+        X, W, epilogue="ovr", n_classes=10, q_block=64, b_tile=16
+    )
+    rcls, rmargin = predict_c_grid(bank, X, 10)
+    np.testing.assert_array_equal(np.asarray(cls), np.asarray(rcls))
+    np.testing.assert_array_equal(np.asarray(margin), np.asarray(rmargin))
+
+
+@pytest.mark.parametrize("k,b_tile", [(1, 8), (4, 8), (16, None), (37, 8)])
+def test_topk_epilogue_matches_lax_top_k(k, b_tile):
+    X, W = _qw(130, 12, 37, seed=k)
+    vals, ids = predict_bank(
+        X, W, epilogue="topk", k=k, q_block=64, b_tile=b_tile
+    )
+    rvals, rids = predict_bank_ref(X, W, epilogue="topk", k=k)
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(rvals))
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(rids))
+
+
+def test_topk_running_state_resets_between_query_tiles():
+    """Multiple query tiles share the VMEM running-top-k scratch; tile i+1
+    must not inherit tile i's ranking."""
+    X, W = _qw(256, 16, 24, seed=5)
+    vals, ids = predict_bank(X, W, epilogue="topk", k=3, q_block=64, b_tile=8)
+    rvals, rids = predict_bank_ref(X, W, epilogue="topk", k=3)
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(rvals))
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(rids))
+
+
+# ---------------------------------------------------------------------------
+# bf16 query tiles
+# ---------------------------------------------------------------------------
+
+
+def test_bf16_query_tolerance():
+    """bf16 query tiles halve query bytes; scores must stay within a few
+    bf16 eps of f32 (one rounding per feature, one matmul — no accumulation
+    across steps like training)."""
+    X, W = _qw(400, 48, 32, seed=9)
+    f32 = predict_bank(X, W, q_block=128, b_tile=8)
+    bf16 = predict_bank(X, W, q_block=128, b_tile=8, stream_dtype="bf16")
+    scale = np.abs(np.asarray(f32)).max()
+    rel = np.abs(np.asarray(bf16) - np.asarray(f32)).max() / scale
+    assert rel < 0.02, rel
+    # rankings must survive the rounding almost everywhere
+    agree = np.mean(
+        np.argmax(np.asarray(bf16), 1) == np.argmax(np.asarray(f32), 1)
+    )
+    assert agree > 0.95, agree
+
+
+def test_bf16_ovr_and_topk_run():
+    X, W = _qw(100, 16, 20, seed=4)
+    cls, margin = predict_bank(
+        X, W, epilogue="ovr", n_classes=5, stream_dtype="bf16", q_block=64
+    )
+    assert np.isfinite(np.asarray(margin)).all()
+    vals, _ = predict_bank(
+        X, W, epilogue="topk", k=4, stream_dtype="bf16", q_block=64
+    )
+    assert np.isfinite(np.asarray(vals)).all()
+
+
+# ---------------------------------------------------------------------------
+# Compile-cache regression: new bank, same shape -> no recompile
+# ---------------------------------------------------------------------------
+
+
+def test_no_recompile_across_banks_of_same_shape():
+    X, W = _qw(64, 16, 8, seed=1)
+    start = predict_bank._cache_size()
+    for seed in (2, 3, 4):
+        _, W2 = _qw(64, 16, 8, seed=seed)
+        predict_bank(X, W2, q_block=64, b_tile=8)
+    assert predict_bank._cache_size() == start + 1  # one entry, three banks
+    # a different epilogue is a new (static) entry, but again only ONE
+    for seed in (2, 3):
+        _, W2 = _qw(64, 16, 8, seed=seed)
+        predict_bank(X, W2, epilogue="topk", k=2, q_block=64, b_tile=8)
+    assert predict_bank._cache_size() == start + 2
+
+
+# ---------------------------------------------------------------------------
+# Shape/argument errors are ValueErrors carrying the shapes
+# ---------------------------------------------------------------------------
+
+
+def test_predict_errors_are_value_errors():
+    X, W = _qw(32, 8, 6, seed=0)
+    with pytest.raises(ValueError, match="feature axis"):
+        predict_bank(X, W[:, :4])
+    with pytest.raises(ValueError, match="epilogue"):
+        predict_bank(X, W, epilogue="softmax")
+    with pytest.raises(ValueError, match="n_classes"):
+        predict_bank(X, W, epilogue="ovr")  # missing n_classes
+    with pytest.raises(ValueError, match="n_classes"):
+        predict_bank(X, W, epilogue="ovr", n_classes=4)  # 6 % 4 != 0
+    with pytest.raises(ValueError, match="n_classes"):
+        predict_bank(X, W, n_classes=3)  # n_classes without ovr
+    with pytest.raises(ValueError, match="k="):
+        predict_bank(X, W, epilogue="topk", k=7)  # k > B
+    with pytest.raises(ValueError, match="k="):
+        predict_bank(X, W, k=2)  # k without topk
+    with pytest.raises(ValueError, match="stream_dtype"):
+        predict_bank(X, W, stream_dtype="int7")
+
+
+def test_predict_pallas_wrapper_validates_tiling():
+    from repro.kernels.predict import predict_bank_pallas
+
+    Q = jnp.zeros((128, 128), jnp.float32)
+    W = jnp.zeros((8, 128), jnp.float32)
+    bias = jnp.zeros((8, 1), jnp.float32)
+    with pytest.raises(ValueError, match="b_tile"):
+        predict_bank_pallas(Q, W, bias, q_block=128, b_tile=3)
+    with pytest.raises(ValueError, match="q_block"):
+        predict_bank_pallas(Q[:100], W, bias, q_block=64)
+    with pytest.raises(ValueError, match="bias"):
+        predict_bank_pallas(Q, W, bias[:4], q_block=128)
+    with pytest.raises(ValueError, match="nc_pad"):
+        predict_bank_pallas(Q, W, bias, epilogue="ovr", q_block=128)
