@@ -1,12 +1,22 @@
 """Serving throughput harness: sweeps the predict engine, emits BENCH JSON.
 
-Sweeps (Q, D, B, q_block, b_tile, stream_dtype, epilogue) over the fused
-bank-inference kernel (kernels.ops.predict_bank) and over the end-to-end
-BankServer microbatching path, measures seconds/batch, queries/s and
-model-scores/s (Q * B margins evaluated per batch), derives achieved GB/s
-from the engine's modeled HBM byte traffic, and compares against the same
-bandwidth roofline as the training harness (TPU v5e 819 GB/s per chip; on
-the CPU interpret backend the roofline fraction is a trend number only).
+Sweeps (Q, D, B, q_block, b_tile, stream_dtype, epilogue, bank_resident)
+over the fused bank-inference kernel (kernels.ops.predict_bank) and over the
+end-to-end BankServer microbatching path, measures seconds/batch, queries/s
+and model-scores/s (Q * B margins evaluated per batch), derives achieved
+GB/s from the engine's modeled HBM byte traffic, and compares against the
+same bandwidth roofline as the training harness (default TPU v5e 819 GB/s
+per chip — override with ``--hbm-peak-gbps`` or ``REPRO_HBM_PEAK_GBPS`` for
+TPU-measured runs; on the CPU interpret backend the roofline fraction is a
+trend number only). ``bank_resident="hbm"`` rows serve the bank out of
+ANY/HBM space through the kernel's 2-slot async-copy ring instead of the
+BlockSpec pipeline — same modeled bytes (the bank is re-read once per
+resident query tile either way), so the wall-time ratio against the
+equal-shape vmem baseline (``dma_overlap_efficiency`` =
+seconds(vmem)/seconds(hbm), which at equal modeled bytes IS the
+achieved-GB/s ratio) isolates how well the manual prefetch hides the bank
+fetch — 1.0 means it matches the BlockSpec pipeline. Rows record the per-config VMEM
+working-set estimate (``vmem_working_set_bytes``).
 
 The modeled bytes encode the serving engine's movement claim, the mirror
 image of training's: the QUERY stream is the big term and is read ONCE per
@@ -27,6 +37,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 from pathlib import Path
 
@@ -35,21 +46,32 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import predict_bank
-from repro.kernels.ops import bank_tiling, ovr_group_tiling
+from repro.kernels.ops import bank_tiling, ovr_group_tiling, predict_vmem_bytes
 from repro.serve import BankServer
 
 SCHEMA = "streamsvm-bench-serving/v1"
-HBM_PEAK_GBPS = 819.0  # TPU v5e, per chip — same roofline as BENCH_engine
+DEFAULT_HBM_PEAK_GBPS = 819.0  # TPU v5e, per chip — same as BENCH_engine
 _DTYPE_BYTES = {"f32": 4, "bf16": 2}
+
+
+def hbm_peak_gbps(override=None) -> float:
+    """Roofline peak: --hbm-peak-gbps flag > REPRO_HBM_PEAK_GBPS env >
+    the TPU v5e default — so TPU-measured runs never need a source edit."""
+    if override is not None:
+        return float(override)
+    env = os.environ.get("REPRO_HBM_PEAK_GBPS")
+    return float(env) if env else DEFAULT_HBM_PEAK_GBPS
+
 
 # Keys every result row must carry — CI validates the emitted JSON against
 # this (see .github/workflows/ci.yml bench-smoke).
 RESULT_KEYS = (
     "name", "Q", "D", "B", "q_block", "b_tile", "n_bank_tiles", "epilogue",
-    "n_classes", "k", "stream_dtype", "path", "seconds_per_batch",
+    "n_classes", "k", "stream_dtype", "path", "bank_resident",
+    "vmem_working_set_bytes", "seconds_per_batch",
     "queries_per_s", "model_scores_per_s", "bytes", "query_passes",
-    "naive_query_bytes", "achieved_gbps", "roofline_seconds",
-    "roofline_frac",
+    "naive_query_bytes", "achieved_gbps", "hbm_peak_gbps",
+    "roofline_seconds", "roofline_frac", "dma_overlap_efficiency",
 )
 
 
@@ -80,12 +102,13 @@ def modeled_bytes(Q, D, B, q_block, epilogue, n_classes, k, stream_dtype):
     }
 
 
-def bench_one(cfg, reps, interpret):
+def bench_one(cfg, reps, interpret, peak_gbps):
     Q, D, B = cfg["Q"], cfg["D"], cfg["B"]
     epilogue = cfg.get("epilogue", "scores")
     n_classes = cfg.get("n_classes")
     k = cfg.get("k")
     path = cfg.get("path", "ops")
+    bank_resident = cfg.get("bank_resident", "vmem")
     rng = np.random.default_rng(0)
     X = rng.normal(size=(Q, D)).astype(np.float32)
     W = rng.normal(size=(B, D)).astype(np.float32)
@@ -96,6 +119,7 @@ def bench_one(cfg, reps, interpret):
         q_block=cfg["q_block"],
         b_tile=cfg["b_tile"],
         stream_dtype=cfg["stream_dtype"] if cfg["stream_dtype"] != "f32" else None,
+        bank_resident=bank_resident,
         interpret=interpret,
     )
     if path == "server":
@@ -125,7 +149,17 @@ def bench_one(cfg, reps, interpret):
         Q, D, B, cfg["q_block"], epilogue, n_classes, k, cfg["stream_dtype"]
     )
     total = sum(by.values())
-    roofline_sec = total / (HBM_PEAK_GBPS * 1e9)
+    roofline_sec = total / (peak_gbps * 1e9)
+    working_set = sum(
+        predict_vmem_bytes(
+            B, D, q_block=cfg["q_block"], b_tile=cfg["b_tile"],
+            stream_dtype=(
+                cfg["stream_dtype"] if cfg["stream_dtype"] != "f32" else None
+            ),
+            epilogue=epilogue, n_classes=n_classes, k=k,
+            bank_resident=bank_resident,
+        ).values()
+    )
     return {
         "name": cfg["name"],
         "Q": Q,
@@ -139,6 +173,8 @@ def bench_one(cfg, reps, interpret):
         "k": k,
         "stream_dtype": cfg["stream_dtype"],
         "path": path,
+        "bank_resident": bank_resident,
+        "vmem_working_set_bytes": working_set,
         "seconds_per_batch": sec,
         "queries_per_s": Q / sec,
         "model_scores_per_s": Q * B / sec,  # margins evaluated / s
@@ -146,8 +182,11 @@ def bench_one(cfg, reps, interpret):
         "query_passes": 1.0,  # data-major grid: NOT B/b_tile
         "naive_query_bytes": n_btiles * by["queries"],  # bank-major cost
         "achieved_gbps": total / sec / 1e9,
+        "hbm_peak_gbps": peak_gbps,
         "roofline_seconds": roofline_sec,
         "roofline_frac": roofline_sec / sec,
+        # filled in post-sweep for hbm rows with a named vmem baseline
+        "dma_overlap_efficiency": None,
     }
 
 
@@ -177,6 +216,11 @@ def sweep(smoke: bool):
                  epilogue="ovr", n_classes=16),
             dict(name="smoke_topk", **base, B=48, b_tile=8, stream_dtype="f32",
                  epilogue="topk", k=4),
+            # HBM-resident bank served through the async-copy ring (CI
+            # asserts this row + its fields)
+            dict(name="smoke_hbm", **base, B=48, b_tile=8,
+                 stream_dtype="f32", bank_resident="hbm",
+                 overlap_baseline="smoke_scores_tiled"),
             # end-to-end microbatching server (ragged FIFO packing included)
             dict(name="smoke_server_ovr", **base, B=48, b_tile=16,
                  stream_dtype="f32", epilogue="ovr", n_classes=16,
@@ -202,6 +246,15 @@ def sweep(smoke: bool):
              stream_dtype="f32", epilogue="ovr", n_classes=200),
         dict(name="serve_topk8_b600", Q=4096, **base, B=600, b_tile=64,
              stream_dtype="f32", epilogue="topk", k=8),
+        # HBM-resident bank: equal-shape pair isolates the manual ring's
+        # prefetch overlap vs the BlockSpec pipeline
+        dict(name="serve_q4096_b512_hbm", Q=4096, **base, B=512, b_tile=64,
+             stream_dtype="f32", bank_resident="hbm",
+             overlap_baseline="serve_q4096_b512"),
+        # a bank beyond the default 16 MiB VMEM budget, served from HBM
+        dict(name="serve_b1536_d4096_hbm_beyond_vmem", Q=512, D=4096,
+             q_block=256, B=1536, b_tile=64, stream_dtype="f32",
+             bank_resident="hbm"),
         # end-to-end server (packing overhead included)
         dict(name="serve_server_ovr_200c_x3", Q=4096, **base, B=600,
              b_tile=200, stream_dtype="f32", epilogue="ovr", n_classes=200,
@@ -209,12 +262,32 @@ def sweep(smoke: bool):
     ]
 
 
-def run(smoke: bool, reps: int, interpret, name_filter: str | None = None):
+def run(smoke: bool, reps: int, interpret, name_filter: str | None = None,
+        peak_gbps: float | None = None):
+    peak = hbm_peak_gbps(peak_gbps)
     results = []
+    baselines = {}
     for cfg in sweep(smoke):
         if name_filter is not None and name_filter not in cfg["name"]:
             continue
-        results.append(bench_one(cfg, reps, interpret))
+        row = bench_one(cfg, reps, interpret, peak)
+        base = baselines.get(cfg.get("overlap_baseline"))
+        if base is not None:
+            # DMA-overlap efficiency: wall time vs the equal-shape vmem
+            # baseline (equal modeled bytes, so this is also the
+            # achieved-GB/s ratio); 1.0 = the ring matches the BlockSpec
+            # pipeline
+            row["dma_overlap_efficiency"] = (
+                base["seconds_per_batch"] / row["seconds_per_batch"]
+            )
+        elif cfg.get("overlap_baseline") is not None:
+            print(
+                f'NOTE {cfg["name"]}: overlap baseline '
+                f'{cfg["overlap_baseline"]!r} not measured in this run — '
+                "dma_overlap_efficiency stays null"
+            )
+        baselines[cfg["name"]] = row
+        results.append(row)
     return {
         "schema": SCHEMA,
         "generated": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
@@ -223,7 +296,7 @@ def run(smoke: bool, reps: int, interpret, name_filter: str | None = None):
             jax.default_backend() != "tpu" if interpret is None else interpret
         ),
         "jax_version": jax.__version__,
-        "hbm_peak_gbps": HBM_PEAK_GBPS,
+        "hbm_peak_gbps": peak,
         "smoke": smoke,
         "reps": reps,
         "results": results,
@@ -258,6 +331,30 @@ def validate(report: dict):
             )
         if row["path"] not in ("ops", "server"):
             raise ValueError(f"{row['name']}: unknown path {row['path']!r}")
+        if row["bank_resident"] not in ("vmem", "hbm"):
+            raise ValueError(
+                f"{row['name']}: unknown bank_resident "
+                f"{row['bank_resident']!r}"
+            )
+        if not (
+            isinstance(row["vmem_working_set_bytes"], int)
+            and row["vmem_working_set_bytes"] > 0
+        ):
+            raise ValueError(
+                f"{row['name']}: vmem_working_set_bytes must be a positive "
+                f"int, got {row['vmem_working_set_bytes']!r}"
+            )
+        if not row["hbm_peak_gbps"] > 0:
+            raise ValueError(
+                f"{row['name']}: hbm_peak_gbps must be positive, got "
+                f"{row['hbm_peak_gbps']!r}"
+            )
+        eff = row["dma_overlap_efficiency"]
+        if eff is not None and not eff > 0:
+            raise ValueError(
+                f"{row['name']}: dma_overlap_efficiency must be null or "
+                f"positive, got {eff!r}"
+            )
     return True
 
 
@@ -274,6 +371,11 @@ def main(argv=None):
         help="force interpret mode (default: auto — interpret off-TPU)",
     )
     ap.add_argument(
+        "--hbm-peak-gbps", type=float, default=None, metavar="GBPS",
+        help="HBM roofline peak in GB/s (default: REPRO_HBM_PEAK_GBPS env "
+        f"var, else {DEFAULT_HBM_PEAK_GBPS} — TPU v5e per chip)",
+    )
+    ap.add_argument(
         "--filter", default=None, metavar="SUBSTR",
         help="bench only configs whose name contains SUBSTR",
     )
@@ -285,7 +387,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     interpret = None if args.interpret is None else args.interpret == "true"
 
-    report = run(args.smoke, args.reps, interpret, name_filter=args.filter)
+    report = run(args.smoke, args.reps, interpret, name_filter=args.filter,
+                 peak_gbps=args.hbm_peak_gbps)
     out_path = Path(args.out)
     if args.append and out_path.exists():
         prev = json.loads(out_path.read_text())
@@ -296,14 +399,16 @@ def main(argv=None):
     validate(report)
     out_path.write_text(json.dumps(report, indent=2) + "\n")
 
-    hdr = ("name", "epilogue", "path", "queries/s", "model-scores/s", "GB/s",
-           "roofline%", "s/batch")
+    hdr = ("name", "epilogue", "path", "resident", "queries/s",
+           "model-scores/s", "GB/s", "roofline%", "overlap-eff", "s/batch")
     print(",".join(hdr))
     for r in report["results"]:
+        eff = r["dma_overlap_efficiency"]
         print(
-            f'{r["name"]},{r["epilogue"]},{r["path"]},'
+            f'{r["name"]},{r["epilogue"]},{r["path"]},{r["bank_resident"]},'
             f'{r["queries_per_s"]:.0f},{r["model_scores_per_s"]:.0f},'
             f'{r["achieved_gbps"]:.3f},{100 * r["roofline_frac"]:.2f},'
+            f'{"-" if eff is None else f"{eff:.3f}"},'
             f'{r["seconds_per_batch"]:.4f}'
         )
     print(f"BENCH written: {args.out}")

@@ -1,17 +1,30 @@
 """Engine throughput harness: sweeps the tiled bank engine, emits BENCH JSON.
 
-Sweeps (B, D, N, block_n, b_tile, stream_dtype, variant, n_shards) over the
-tiled multi-ball engine, measures seconds/pass, rows/s and model-rows/s,
-derives achieved GB/s from the engine's modeled HBM byte traffic, and
-compares against a bandwidth-roofline estimate (TPU v5e 819 GB/s per chip;
-on the CPU interpret backend the roofline fraction is reported for trend
-only).
+Sweeps (B, D, N, block_n, b_tile, stream_dtype, variant, n_shards,
+bank_resident) over the tiled multi-ball engine, measures seconds/pass,
+rows/s and model-rows/s, derives achieved GB/s from the engine's modeled HBM
+byte traffic, and compares against a bandwidth-roofline estimate (default
+TPU v5e 819 GB/s per chip — override with ``--hbm-peak-gbps`` or the
+``REPRO_HBM_PEAK_GBPS`` env var for TPU-measured runs; on the CPU interpret
+backend the roofline fraction is reported for trend only).
 
 The modeled bytes encode the engine's central claim: the stream is read ONCE
 per fit regardless of how many bank tiles revisit it (``stream_passes`` stays
 1.0 while ``naive_stream_bytes`` shows what B/b_tile passes would cost), and
-bf16 stream tiles halve the stream term. The bank round-trips HBM twice
-(in + out), independent of N.
+bf16 stream tiles halve the stream term. Under ``bank_resident="vmem"`` the
+bank round-trips HBM twice (in + out), independent of N; under "hbm" it
+round-trips once per DATA BLOCK (the 2-slot ring re-fetches and writes back
+every (b_tile, D) slice each time a stream block revisits it) — the traffic
+the ring's async prefetch/write-back is there to hide. Rows carry the
+per-config VMEM working-set estimate (``vmem_working_set_bytes``, from
+kernels.ops's residency byte model) and hbm rows carry
+``dma_overlap_efficiency`` — seconds(vmem baseline) / seconds(hbm) at equal
+shape. The two rows do the SAME fit, so this is the achieved-GB/s ratio at
+equal (the baseline's) modeled bytes: 1.0 = the added bank round-trips are
+fully hidden behind compute, below 1.0 = they cost wall time. (Each row's
+own ``achieved_gbps`` uses its own residency's byte model — the hbm row
+genuinely moves more HBM bytes — so the efficiency is NOT the ratio of the
+two ``achieved_gbps`` fields.)
 
 ``n_shards > 1`` rows run ``core.fit_bank_sharded`` over a ``(n_shards,)``
 device mesh — each shard reads 1/n_shards of the stream, so the per-device
@@ -33,6 +46,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 from pathlib import Path
 
@@ -41,23 +55,36 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import streamsvm_fit_many
-from repro.kernels.ops import bank_tiling
+from repro.kernels.ops import bank_tiling, engine_vmem_bytes
 
 SCHEMA = "streamsvm-bench-engine/v1"
-HBM_PEAK_GBPS = 819.0  # TPU v5e, per chip
+DEFAULT_HBM_PEAK_GBPS = 819.0  # TPU v5e, per chip
 _DTYPE_BYTES = {"f32": 4, "bf16": 2}
+
+
+def hbm_peak_gbps(override=None) -> float:
+    """Roofline peak: --hbm-peak-gbps flag > REPRO_HBM_PEAK_GBPS env >
+    the TPU v5e default — so TPU-measured runs never need a source edit."""
+    if override is not None:
+        return float(override)
+    env = os.environ.get("REPRO_HBM_PEAK_GBPS")
+    return float(env) if env else DEFAULT_HBM_PEAK_GBPS
+
 
 # Keys every result row must carry — CI validates the emitted JSON against
 # this (see .github/workflows/ci.yml bench-smoke).
 RESULT_KEYS = (
     "name", "B", "D", "N", "block_n", "b_tile", "n_bank_tiles", "n_shards",
-    "stream_dtype", "variant", "lookahead", "seconds_per_pass", "rows_per_s",
+    "stream_dtype", "variant", "lookahead", "bank_resident",
+    "vmem_working_set_bytes", "seconds_per_pass", "rows_per_s",
     "model_rows_per_s", "bytes", "stream_passes", "naive_stream_bytes",
-    "achieved_gbps", "roofline_seconds", "roofline_frac",
+    "achieved_gbps", "hbm_peak_gbps", "roofline_seconds", "roofline_frac",
+    "dma_overlap_efficiency",
 )
 
 
-def modeled_bytes(B, D, N, stream_dtype, n_shards=1):
+def modeled_bytes(B, D, N, stream_dtype, n_shards=1, *, block_n=256,
+                  b_tile=None, bank_resident="vmem", lookahead=None):
     """PER-DEVICE HBM bytes per pass under the tiled engine's movement model.
 
     stream: each (block_n, D) tile DMA'd once (data-major grid) — N*D at the
@@ -65,21 +92,39 @@ def modeled_bytes(B, D, N, stream_dtype, n_shards=1):
     Sharding splits the stream over devices: N/n_shards rows per device.
     signs:  each (b_tile, block_n) tile read once over the whole grid —
     B*N/n_shards per device.
-    bank:   (B, D) f32 in once + out once per device; the fold's all_gather
-    moves another (n_shards-1)*B*(D+3) floats over ICI (not HBM — excluded).
+    bank:   under bank_resident="vmem" the (B, D) f32 bank enters and leaves
+    HBM once per device (it persists in VMEM across the grid); under "hbm"
+    every (b_tile, D) slice round-trips once per DATA BLOCK — the ring
+    re-fetches and writes back the whole bank (and the B*L*D lookahead
+    windows) each of the ceil(N_shard/block_n) times the stream revisits it —
+    EXCEPT when the bank spans <= 2 tiles, where the kernel degenerates to
+    load-once/store-once (each tile owns a ring slot) and the traffic equals
+    the vmem layout's. The fold's all_gather moves another
+    (n_shards-1)*B*(D+3) floats over ICI (not HBM — excluded).
     """
     sz = _DTYPE_BYTES[stream_dtype]
     shard_n = -(-N // n_shards)
-    return {
+    _, n_btiles = bank_tiling(B, b_tile)
+    trips = (
+        -(-shard_n // block_n)
+        if bank_resident == "hbm" and n_btiles > 2
+        else 1
+    )
+    by = {
         "stream": shard_n * D * sz,
         "signs": B * shard_n * sz,
-        "bank": 2 * B * D * 4,
+        "bank": 2 * B * D * 4 * trips,
     }
+    if bank_resident == "hbm" and lookahead:
+        l_max = max(lookahead) if isinstance(lookahead, (tuple, list)) else lookahead
+        by["lookahead_windows"] = 2 * B * l_max * D * 4 * trips
+    return by
 
 
-def bench_one(cfg, reps, interpret):
+def bench_one(cfg, reps, interpret, peak_gbps):
     B, D, N = cfg["B"], cfg["D"], cfg["N"]
     n_shards = cfg.get("n_shards", 1)
+    bank_resident = cfg.get("bank_resident", "vmem")
     rng = np.random.default_rng(0)
     X = jnp.asarray(rng.normal(size=(N, D)).astype(np.float32))
     Y = jnp.asarray(np.sign(rng.normal(size=(B, N))).astype(np.float32))
@@ -92,6 +137,7 @@ def bench_one(cfg, reps, interpret):
         block_n=cfg["block_n"],
         b_tile=cfg["b_tile"],
         stream_dtype=cfg["stream_dtype"] if cfg["stream_dtype"] != "f32" else None,
+        bank_resident=bank_resident,
         interpret=interpret,
     )
     if n_shards > 1:
@@ -111,9 +157,25 @@ def bench_one(cfg, reps, interpret):
     sec = (time.perf_counter() - t0) / reps
 
     b_tile_eff, n_btiles = bank_tiling(B, cfg["b_tile"])
-    by = modeled_bytes(B, D, N, cfg["stream_dtype"], n_shards)
+    by = modeled_bytes(
+        B, D, N, cfg["stream_dtype"], n_shards, block_n=cfg["block_n"],
+        b_tile=cfg["b_tile"], bank_resident=bank_resident,
+        lookahead=lookahead,
+    )
     total = sum(by.values())
-    roofline_sec = total / (HBM_PEAK_GBPS * 1e9)
+    roofline_sec = total / (peak_gbps * 1e9)
+    l_max = (
+        max(lookahead) if isinstance(lookahead, (tuple, list)) else lookahead
+    )
+    working_set = sum(
+        engine_vmem_bytes(
+            B, D, block_n=cfg["block_n"], b_tile=cfg["b_tile"],
+            stream_dtype=(
+                cfg["stream_dtype"] if cfg["stream_dtype"] != "f32" else None
+            ),
+            lookahead_max=l_max, bank_resident=bank_resident,
+        ).values()
+    )
     return {
         "name": cfg["name"],
         "B": B,
@@ -126,6 +188,8 @@ def bench_one(cfg, reps, interpret):
         "stream_dtype": cfg["stream_dtype"],
         "variant": variant,
         "lookahead": lookahead,
+        "bank_resident": bank_resident,
+        "vmem_working_set_bytes": working_set,
         "seconds_per_pass": sec,
         "rows_per_s": N / sec,
         "model_rows_per_s": B * N / sec,  # conditional updates applied / s
@@ -133,8 +197,11 @@ def bench_one(cfg, reps, interpret):
         "stream_passes": 1.0,  # data-major grid: NOT B/b_tile
         "naive_stream_bytes": n_btiles * by["stream"],  # bank-major would pay this
         "achieved_gbps": total / sec / 1e9,
+        "hbm_peak_gbps": peak_gbps,
         "roofline_seconds": roofline_sec,
         "roofline_frac": roofline_sec / sec,
+        # filled in post-sweep for hbm rows with a named vmem baseline
+        "dma_overlap_efficiency": None,
     }
 
 
@@ -147,6 +214,11 @@ def sweep(smoke: bool):
             dict(name="smoke_bf16", **base, b_tile=8, stream_dtype="bf16"),
             dict(name="smoke_lookahead", **base, b_tile=8, stream_dtype="f32",
                  variant="lookahead", lookahead=4),
+            # HBM-resident bank: same shape as smoke_tiled, bank double-
+            # buffered through the ring — the ratio of achieved GB/s is the
+            # DMA-overlap efficiency (CI asserts this row + its fields)
+            dict(name="smoke_hbm", **base, b_tile=8, stream_dtype="f32",
+                 bank_resident="hbm", overlap_baseline="smoke_tiled"),
             # sharded bank engine (needs >= 8 devices; CI's bench-smoke job
             # forces 8 host devices via XLA_FLAGS so this row is measured)
             dict(name="smoke_sharded_s8", **base, b_tile=8, stream_dtype="f32",
@@ -168,6 +240,17 @@ def sweep(smoke: bool):
         # fused Algorithm-2 lookahead in the same single pass
         dict(name="lookahead_b64_t8_L8", B=64, **base, b_tile=8,
              stream_dtype="f32", variant="lookahead", lookahead=8),
+        # HBM-resident bank: equal-shape pair measures the DMA-overlap
+        # efficiency (how much of the per-block bank round-trip the ring's
+        # async prefetch/write-back hides behind the MXU work)
+        dict(name="bank_b256_t32_hbm", B=256, **base, b_tile=32,
+             stream_dtype="f32", bank_resident="hbm",
+             overlap_baseline="bank_b256_t32"),
+        # a bank whose (B, D) f32 footprint (25.2 MB) exceeds the default
+        # 16 MiB VMEM budget — impossible to hold VMEM-resident at all
+        dict(name="bank_b1536_d4096_hbm_beyond_vmem", B=1536, D=4096, N=1024,
+             block_n=256, b_tile=64, stream_dtype="f32",
+             bank_resident="hbm"),
         # block_n sensitivity
         dict(name="bank_b64_t8_n512", B=64, D=128, N=4096, block_n=512,
              b_tile=8, stream_dtype="f32"),
@@ -185,9 +268,12 @@ def sweep(smoke: bool):
     return cfgs
 
 
-def run(smoke: bool, reps: int, interpret, name_filter: str | None = None):
+def run(smoke: bool, reps: int, interpret, name_filter: str | None = None,
+        peak_gbps: float | None = None):
+    peak = hbm_peak_gbps(peak_gbps)
     n_dev = len(jax.devices())
     results = []
+    baselines = {}
     for cfg in sweep(smoke):
         if name_filter is not None and name_filter not in cfg["name"]:
             continue
@@ -201,7 +287,25 @@ def run(smoke: bool, reps: int, interpret, name_filter: str | None = None):
                 "mesh)"
             )
             continue
-        results.append(bench_one(cfg, reps, interpret))
+        row = bench_one(cfg, reps, interpret, peak)
+        base = baselines.get(cfg.get("overlap_baseline"))
+        if base is not None:
+            # DMA-overlap efficiency: wall time vs the equal-shape
+            # VMEM-resident baseline — same fit, so 1.0 = the hbm bank
+            # round-trips fully hidden behind compute (see module docstring;
+            # deliberately NOT the ratio of the rows' achieved_gbps, whose
+            # byte models differ)
+            row["dma_overlap_efficiency"] = (
+                base["seconds_per_pass"] / row["seconds_per_pass"]
+            )
+        elif cfg.get("overlap_baseline") is not None:
+            print(
+                f'NOTE {cfg["name"]}: overlap baseline '
+                f'{cfg["overlap_baseline"]!r} not measured in this run — '
+                "dma_overlap_efficiency stays null"
+            )
+        baselines[cfg["name"]] = row
+        results.append(row)
     return {
         "schema": SCHEMA,
         "generated": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
@@ -210,7 +314,7 @@ def run(smoke: bool, reps: int, interpret, name_filter: str | None = None):
             jax.default_backend() != "tpu" if interpret is None else interpret
         ),
         "jax_version": jax.__version__,
-        "hbm_peak_gbps": HBM_PEAK_GBPS,
+        "hbm_peak_gbps": peak,
         "smoke": smoke,
         "reps": reps,
         "results": results,
@@ -245,6 +349,30 @@ def validate(report: dict):
                 f"{row['name']}: n_shards must be an int >= 1, got "
                 f"{row['n_shards']!r}"
             )
+        if row["bank_resident"] not in ("vmem", "hbm"):
+            raise ValueError(
+                f"{row['name']}: unknown bank_resident "
+                f"{row['bank_resident']!r}"
+            )
+        if not (
+            isinstance(row["vmem_working_set_bytes"], int)
+            and row["vmem_working_set_bytes"] > 0
+        ):
+            raise ValueError(
+                f"{row['name']}: vmem_working_set_bytes must be a positive "
+                f"int, got {row['vmem_working_set_bytes']!r}"
+            )
+        if not row["hbm_peak_gbps"] > 0:
+            raise ValueError(
+                f"{row['name']}: hbm_peak_gbps must be positive, got "
+                f"{row['hbm_peak_gbps']!r}"
+            )
+        eff = row["dma_overlap_efficiency"]
+        if eff is not None and not eff > 0:
+            raise ValueError(
+                f"{row['name']}: dma_overlap_efficiency must be null or "
+                f"positive, got {eff!r}"
+            )
     return True
 
 
@@ -261,6 +389,11 @@ def main(argv=None):
         help="force interpret mode (default: auto — interpret off-TPU)",
     )
     ap.add_argument(
+        "--hbm-peak-gbps", type=float, default=None, metavar="GBPS",
+        help="HBM roofline peak in GB/s (default: REPRO_HBM_PEAK_GBPS env "
+        f"var, else {DEFAULT_HBM_PEAK_GBPS} — TPU v5e per chip)",
+    )
+    ap.add_argument(
         "--filter", default=None, metavar="SUBSTR",
         help="bench only configs whose name contains SUBSTR",
     )
@@ -275,7 +408,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     interpret = None if args.interpret is None else args.interpret == "true"
 
-    report = run(args.smoke, args.reps, interpret, name_filter=args.filter)
+    report = run(args.smoke, args.reps, interpret, name_filter=args.filter,
+                 peak_gbps=args.hbm_peak_gbps)
     out_path = Path(args.out)
     if args.append and out_path.exists():
         prev = json.loads(out_path.read_text())
@@ -286,14 +420,17 @@ def main(argv=None):
     validate(report)
     out_path.write_text(json.dumps(report, indent=2) + "\n")
 
-    hdr = ("name", "shards", "rows/s", "model-rows/s", "GB/s", "roofline%",
-           "s/pass")
+    hdr = ("name", "shards", "resident", "rows/s", "model-rows/s", "GB/s",
+           "roofline%", "overlap-eff", "s/pass")
     print(",".join(hdr))
     for r in report["results"]:
+        eff = r["dma_overlap_efficiency"]
         print(
-            f'{r["name"]},{r["n_shards"]},{r["rows_per_s"]:.0f},'
+            f'{r["name"]},{r["n_shards"]},{r["bank_resident"]},'
+            f'{r["rows_per_s"]:.0f},'
             f'{r["model_rows_per_s"]:.0f},'
             f'{r["achieved_gbps"]:.3f},{100 * r["roofline_frac"]:.2f},'
+            f'{"-" if eff is None else f"{eff:.3f}"},'
             f'{r["seconds_per_pass"]:.4f}'
         )
     print(f"BENCH written: {args.out}")

@@ -1,7 +1,9 @@
 """Quickstart: one-pass StreamSVM vs single-pass baselines on Synthetic-A,
 a whole C-grid trained in ONE pass via the multi-ball engine, then a
 200-class OVR x 3-point C-grid (600 models) in one pass of the TILED engine
-— and the trained bank SERVED back through the fused predict engine
+— re-trained HBM-resident (``bank_resident="hbm"`` — the double-buffered
+ring that lifts the VMEM cap on B*D, bit-exact with VMEM scratch) — and the
+trained bank SERVED back through the fused predict engine
 (serve.BankServer), bit-exact with the direct readout.
 
     PYTHONPATH=src python examples/quickstart.py
@@ -115,6 +117,21 @@ def main():
     print(f"bank state O(B*D) = {ovr.w.nbytes} bytes vs one stream read "
           f"of {Xm.nbytes} bytes; throughput harness: "
           "PYTHONPATH=src python benchmarks/streaming_throughput.py")
+
+    # --- the same bank, HBM-resident ----------------------------------------
+    # bank_resident="hbm" lifts the VMEM cap on B*D: the bank stays in HBM
+    # and (b_tile, D) slices double-buffer through a 2-slot VMEM ring (async
+    # prefetch + write-back overlapped with compute) — bit-exact with the
+    # VMEM-resident layout, so a 1000-class x C-grid bank at D=4096 (~49 MB,
+    # far beyond VMEM scratch) trains with the exact same call. The default
+    # "auto" switches over at the VMEM budget (REPRO_VMEM_BUDGET_BYTES).
+    ovr_hbm = jax.block_until_ready(
+        fit_bank(jnp.asarray(Xm), Y, cs, b_tile=64, stream_dtype="bf16",
+                 bank_resident="hbm")
+    )
+    assert np.array_equal(np.asarray(ovr_hbm.w), np.asarray(ovr.w))
+    print('bank_resident="hbm": HBM-resident ring-buffered bank is '
+          "bit-exact with VMEM-resident (lifts the VMEM cap on B*D)")
 
     # --- serve it: the bank through the fused predict engine ----------------
     # The trained bank is tiny and constant-storage, which is exactly the

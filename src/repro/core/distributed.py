@@ -115,13 +115,14 @@ def fit_sharded(
     jax.jit,
     static_argnames=(
         "mesh", "axes", "n_shards", "shard_n", "n_rows", "variant",
-        "lookahead", "block_n", "b_tile", "stream_dtype", "interpret",
+        "lookahead", "block_n", "b_tile", "stream_dtype", "bank_resident",
+        "interpret",
     ),
 )
 def _sharded_fold(
     X, Y, cs, *,
     mesh, axes, n_shards, shard_n, n_rows, variant, lookahead, block_n,
-    b_tile, stream_dtype, interpret,
+    b_tile, stream_dtype, bank_resident, interpret,
 ):
     """jit'd shard_map core of fit_bank_sharded.
 
@@ -140,7 +141,8 @@ def _sharded_fold(
         bank = streamsvm_fit_many(
             Xs, Ys, cs_, None,
             variant=variant, lookahead=lookahead, block_n=block_n,
-            b_tile=b_tile, stream_dtype=stream_dtype, interpret=interpret,
+            b_tile=b_tile, stream_dtype=stream_dtype,
+            bank_resident=bank_resident, interpret=interpret,
         )
         gather = lambda v: jax.lax.all_gather(v, axes, tiled=False)
         stacked = Ball(
@@ -172,6 +174,7 @@ def fit_bank_sharded(
     block_n: int = 256,
     b_tile: int | None = None,
     stream_dtype=None,
+    bank_resident: str = "auto",
     interpret: bool | None = None,
 ) -> Ball:
     """M stream shards x B models in one pass: the sharded bank engine.
@@ -179,7 +182,9 @@ def fit_bank_sharded(
     The stream is split into ``n_shards`` contiguous ranges over the ``axis``
     axes of ``mesh``; every shard runs the tiled multi-ball Pallas engine
     (``kernels.streamsvm_fit_many`` — ``b_tile``, fused ``lookahead``,
-    ``stream_dtype="bf16"`` all apply per shard) over its local range, the
+    ``stream_dtype="bf16"`` and ``bank_resident`` all apply per shard: each
+    device holds its own bank copy, so residency is a per-shard decision
+    and "auto" resolves identically on every shard) over its local range, the
     per-shard (B, D) banks are exchanged with one all_gather, and every
     model lane is folded with the Sec-4.3 merge (``meb.fold_merge`` over the
     (S, B, ...) stack). Total data movement: each stream row is read from
@@ -231,7 +236,8 @@ def fit_bank_sharded(
         X, Y, cs,
         mesh=mesh, axes=axes, n_shards=n_shards, shard_n=shard_n, n_rows=n,
         variant=variant, lookahead=lookahead, block_n=block_n, b_tile=b_tile,
-        stream_dtype=stream_dtype, interpret=interpret,
+        stream_dtype=stream_dtype, bank_resident=bank_resident,
+        interpret=interpret,
     )
     if balls is not None:
         # The prior bank saw a disjoint (earlier) slice of the stream, so it

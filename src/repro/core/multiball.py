@@ -155,6 +155,7 @@ def fit_bank(
     block_n: int = 256,
     b_tile: int | None = None,
     stream_dtype=None,
+    bank_resident: str = "auto",
     mesh=None,
     shard_axis="data",
     interpret: bool | None = None,
@@ -168,10 +169,17 @@ def fit_bank(
     ``variant="lookahead"`` runs fused Algorithm 2 with per-model windows
     (``lookahead``: int or length-B tuple, static) — see kernels.ops.
 
+    ``bank_resident``: "vmem" / "hbm" / "auto" — where the bank lives while
+    the grid runs. "hbm" double-buffers (b_tile, D) slices through a VMEM
+    ring so B*D is no longer capped by VMEM scratch (bit-exact f32 with
+    "vmem"); "auto" picks from the per-step byte model in kernels.ops.
+
     ``mesh=`` additionally shards the STREAM over the ``shard_axis`` axes of
     a device mesh: each shard runs the engine over its contiguous range and
     the per-shard banks are folded with the Sec-4.3 merge (see
     distributed.fit_bank_sharded — N need not divide the shard count).
+    Residency is resolved PER SHARD (each device runs its own engine pass
+    over an identical-size range, so every shard picks the same mode).
     """
     if mesh is not None:
         from .distributed import fit_bank_sharded  # lazy: module cycle
@@ -180,14 +188,15 @@ def fit_bank(
             X, Y, cs, mesh, balls,
             axis=shard_axis, variant=variant, lookahead=lookahead,
             block_n=block_n, b_tile=b_tile, stream_dtype=stream_dtype,
-            interpret=interpret,
+            bank_resident=bank_resident, interpret=interpret,
         )
     from repro.kernels.ops import streamsvm_fit_many  # lazy: avoids core<->kernels cycle
 
     return streamsvm_fit_many(
         X, Y, cs, balls,
         variant=variant, lookahead=lookahead, block_n=block_n,
-        b_tile=b_tile, stream_dtype=stream_dtype, interpret=interpret,
+        b_tile=b_tile, stream_dtype=stream_dtype,
+        bank_resident=bank_resident, interpret=interpret,
     )
 
 

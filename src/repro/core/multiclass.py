@@ -41,7 +41,7 @@ def ovr_signs(labels: jax.Array, n_classes: int, dtype=jnp.float32) -> jax.Array
     jax.jit,
     static_argnames=(
         "n_classes", "lookahead", "variant", "engine", "b_tile", "stream_dtype",
-        "mesh", "shard_axis",
+        "bank_resident", "mesh", "shard_axis",
     ),
 )
 def fit_ovr(
@@ -55,6 +55,7 @@ def fit_ovr(
     engine: str = "pallas",
     b_tile: int | None = None,
     stream_dtype=None,
+    bank_resident: str = "auto",
     mesh=None,
     shard_axis="data",
 ) -> Ball:
@@ -64,8 +65,10 @@ def fit_ovr(
     flattens all classes onto the bank axis of the tiled Pallas engine —
     including ``lookahead > 1``, which runs the fused in-kernel Algorithm 2 —
     so hundreds of classes train in ONE stream pass; ``b_tile`` bounds the
-    per-step VMEM working set and ``stream_dtype="bf16"`` halves stream HBM
-    traffic. ``engine="scan"`` keeps the pre-engine vmap'd lax.scan path
+    per-step VMEM working set, ``stream_dtype="bf16"`` halves stream HBM
+    traffic, and ``bank_resident="hbm"`` lifts the VMEM cap on the bank
+    (classes x C-grid banks beyond VMEM scratch double-buffer through HBM —
+    see kernels.ops). ``engine="scan"`` keeps the pre-engine vmap'd lax.scan path
     (Badoiu-Clarkson window solves for lookahead > 1).
 
     ``mesh=`` (pallas engine only) shards the stream over ``shard_axis`` of
@@ -87,7 +90,8 @@ def fit_ovr(
         if lookahead <= 1:
             bank = fit_bank(
                 X, ys, c, variant=variant, b_tile=b_tile,
-                stream_dtype=stream_dtype, mesh=mesh, shard_axis=shard_axis,
+                stream_dtype=stream_dtype, bank_resident=bank_resident,
+                mesh=mesh, shard_axis=shard_axis,
             )
         else:
             bank = fit_bank(
@@ -95,6 +99,7 @@ def fit_ovr(
                 variant="lookahead" if variant == "exact" else "lookahead-paper",
                 lookahead=int(lookahead),
                 b_tile=b_tile, stream_dtype=stream_dtype,
+                bank_resident=bank_resident,
                 mesh=mesh, shard_axis=shard_axis,
             )
         return _cast_ball(bank, X.dtype)
@@ -144,7 +149,8 @@ def predict_c_grid(balls: Ball, X: jax.Array, n_classes: int):
 @partial(
     jax.jit,
     static_argnames=(
-        "variant", "engine", "b_tile", "stream_dtype", "mesh", "shard_axis",
+        "variant", "engine", "b_tile", "stream_dtype", "bank_resident",
+        "mesh", "shard_axis",
     ),
 )
 def fit_c_grid(
@@ -156,6 +162,7 @@ def fit_c_grid(
     engine: str = "pallas",
     b_tile: int | None = None,
     stream_dtype=None,
+    bank_resident: str = "auto",
     mesh=None,
     shard_axis="data",
 ) -> Ball:
@@ -179,7 +186,8 @@ def fit_c_grid(
         return _cast_ball(
             fit_bank(
                 X, Y, c_grid, variant=variant, b_tile=b_tile,
-                stream_dtype=stream_dtype, mesh=mesh, shard_axis=shard_axis,
+                stream_dtype=stream_dtype, bank_resident=bank_resident,
+                mesh=mesh, shard_axis=shard_axis,
             ),
             X.dtype,
         )

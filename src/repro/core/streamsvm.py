@@ -119,6 +119,7 @@ def fit_lookahead(
     engine: str = "pallas",
     block_n: int = 256,
     stream_dtype=None,
+    bank_resident: str = "auto",
 ) -> Ball:
     """Algorithm 2. lookahead=1 ~ Algorithm 1 (exactly, for engine="pallas").
 
@@ -146,6 +147,7 @@ def fit_lookahead(
             variant="lookahead" if variant == "exact" else "lookahead-paper",
             lookahead=int(lookahead),
             block_n=block_n, stream_dtype=stream_dtype,
+            bank_resident=bank_resident,
         )
         return jax.tree.map(lambda v: v[0], bank)
     ball = init_ball(X[0], y[0], c, variant=variant)
@@ -224,6 +226,7 @@ def fit_chunked_many(
     block_n: int = 256,
     b_tile: Optional[int] = None,
     stream_dtype=None,
+    bank_resident: str = "auto",
     mesh=None,
     shard_axis="data",
     resume: Optional[StreamCheckpoint] = None,
@@ -237,7 +240,10 @@ def fit_chunked_many(
     (n,) shared +-1 labels (broadcast to every model — the C-grid case) or
     (B, n) per-model sign rows (the one-vs-rest case). The checkpoint carries
     the whole bank — state stays O(B * D) — so preemption/resume keeps the
-    stream single-pass for all B models at once.
+    stream single-pass for all B models at once. ``bank_resident`` passes
+    through to the engine per chunk ("hbm" double-buffers banks beyond VMEM
+    scratch through HBM; checkpoints are residency-agnostic — a run may
+    resume under a different residency, bit-exact in f32).
 
     ``mesh=`` shards every chunk over the ``shard_axis`` axes of a device
     mesh (distributed.fit_bank_sharded): each shard fits its contiguous
@@ -264,6 +270,7 @@ def fit_chunked_many(
         bank = fit_bank(
             Xc, yc, cs, bank, variant=variant, block_n=block_n,
             b_tile=b_tile, stream_dtype=stream_dtype,
+            bank_resident=bank_resident,
             mesh=mesh, shard_axis=shard_axis,
         )
         pos += n_chunk

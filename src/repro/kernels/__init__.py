@@ -1,13 +1,16 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
-streamsvm_scan — blocked one-pass Algorithm 1 (ball state resident in VMEM):
-                 single-ball, and the tiled multi-ball bank engine — a 2-D
-                 data-major grid training B models per stream pass for
-                 arbitrary B (bank tiled across VMEM scratch), with fused
-                 Algorithm-2 lookahead windows and a bf16 stream-tile policy
+streamsvm_scan — blocked one-pass Algorithm 1: single-ball, and the tiled
+                 multi-ball bank engine — a 2-D data-major grid training B
+                 models per stream pass for arbitrary B, with fused
+                 Algorithm-2 lookahead windows, a bf16 stream-tile policy,
+                 and two bank residencies sharing one compute core: VMEM
+                 scratch, or HBM/ANY double-buffered through a 2-slot
+                 async-copy ring (lifts the VMEM cap on B*D, bit-exact f32)
 predict        — the serving twin: (Q, D) query tiles x (B, D) bank tiles on
                  the same data-major grid, with fused scores / per-C-grid-
-                 group ovr-argmax / topk epilogues
+                 group ovr-argmax / topk epilogues and the same HBM-resident
+                 ring option for the bank
 gram           — tiled kernel-matrix blocks (linear / RBF epilogues)
 
 ops.py carries the jit'd public wrappers (padding, bank tiling, dtype

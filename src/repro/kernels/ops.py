@@ -19,11 +19,35 @@ Compile caching
 ---------------
 ``c`` / ``cs`` enter the kernels only through the traced ``1/C`` array, so
 sweeping C values NEVER recompiles — only shape, ``block_n``, ``b_tile``,
-``variant``, ``lookahead`` and dtype changes do (regression-tested via the
-jit cache in tests/test_tiled_engine.py).
+``variant``, ``lookahead``, ``bank_resident`` and dtype changes do
+(regression-tested via the jit cache in tests/test_tiled_engine.py and
+tests/test_hbm_bank.py).
+
+Bank residency policy
+---------------------
+``bank_resident`` picks where the engine keeps the (B, D) bank (plus state
+and lookahead windows) while the grid runs:
+
+  "vmem"  persistent VMEM scratch — the per-step working set contains the
+          WHOLE bank, so B*D is capped by the VMEM budget;
+  "hbm"   HBM/ANY-space buffers streamed through a 2-slot VMEM ring with
+          async DMA (prefetch overlapped with compute) — the per-step
+          working set is O(b_tile * D), independent of B;
+  "auto"  picks from the per-step VMEM byte model (``engine_vmem_bytes`` /
+          ``predict_vmem_bytes``) against a budget: the default
+          ``DEFAULT_VMEM_BUDGET_BYTES`` (16 MiB — the guide number for a
+          TPU core), overridable per call (``vmem_budget_bytes=``) or per
+          process (``REPRO_VMEM_BUDGET_BYTES``).
+
+Configs that fit NO residency (e.g. a single (b_tile, D) ring slot already
+beyond the budget) are rejected up front with a ValueError carrying the
+byte breakdown — including when ``bank_resident="vmem"`` is forced on an
+oversized bank, which previously died deep inside Pallas lowering with an
+opaque scratch-allocation error.
 """
 from __future__ import annotations
 
+import os
 from functools import partial
 
 import jax
@@ -86,6 +110,183 @@ def ovr_group_tiling(b: int, n_classes: int, b_tile: int | None):
     return nc_pad, g_tile, -(-g // g_tile) * g_tile
 
 
+# ---------------------------------------------------------------------------
+# Bank residency: per-step VMEM byte model + the "auto" policy
+# ---------------------------------------------------------------------------
+
+#: Default per-step VMEM budget for the "auto" residency policy (and the
+#: preflight check). ~16 MiB is the classic per-core figure; real parts vary,
+#: so it is overridable per call (``vmem_budget_bytes=``) and per process
+#: (``REPRO_VMEM_BUDGET_BYTES``).
+DEFAULT_VMEM_BUDGET_BYTES = 16 * 2**20
+
+_BANK_RESIDENCIES = ("vmem", "hbm", "auto")
+
+
+def vmem_budget_bytes(override: int | None = None) -> int:
+    """The VMEM budget the residency policy checks against, in bytes."""
+    if override is not None:
+        return int(override)
+    env = os.environ.get("REPRO_VMEM_BUDGET_BYTES")
+    return int(env) if env else DEFAULT_VMEM_BUDGET_BYTES
+
+
+def _stream_bytes(stream_dtype) -> int:
+    dt = _resolve_stream_dtype(stream_dtype)
+    return 2 if dt == jnp.bfloat16 else 4
+
+
+def engine_vmem_bytes(
+    b: int,
+    d: int,
+    *,
+    block_n: int = 256,
+    b_tile: int | None = None,
+    stream_dtype=None,
+    lookahead_max: int | None = None,
+    bank_resident: str = "vmem",
+) -> dict:
+    """Per-step VMEM working set of the training engine, bytes by term.
+
+    Models the padded shapes the kernel actually allocates (D to the lane
+    multiple of 128, B to whole bank tiles, tiles to the sublane multiple of
+    8). BlockSpec-delivered tiles count twice — Pallas double-buffers its
+    own pipeline — and so do the explicit 2-slot rings of the HBM-resident
+    layout. The "auto" policy and the preflight ValueError both read this;
+    the BENCH harnesses record its total per row as
+    ``vmem_working_set_bytes``.
+    """
+    sz = _stream_bytes(stream_dtype)
+    bt, n_tiles = bank_tiling(b, b_tile)
+    bp = bt * n_tiles
+    dp = -(-d // 128) * 128
+    L = lookahead_max
+    state_rows = 4 + 1 + (1 if L else 0)  # st rows + m + cnt (lanes x 4B)
+    out = {
+        "stream_tile": 2 * block_n * dp * sz,
+        "sign_tile": 2 * bt * block_n * sz,
+        # per-tile params in + outputs out (w0/w, scalars, m, gain, L), all
+        # staged through the BlockSpec pipeline (x2)
+        "params_io": 2 * (2 * bt * dp + 2 * bt * 4 + 3 * bt) * 4,
+    }
+    if bank_resident == "vmem":
+        out["bank"] = bp * dp * 4
+        out["state"] = state_rows * bp * 4
+        out["lookahead"] = bp * L * dp * 4 if L else 0
+    else:
+        out["bank"] = 2 * bt * dp * 4  # 2-slot ring
+        out["state"] = 2 * state_rows * bt * 4
+        out["lookahead"] = 2 * bt * L * dp * 4 if L else 0
+    return out
+
+
+def predict_vmem_bytes(
+    b: int,
+    d: int,
+    *,
+    q_block: int = 256,
+    b_tile: int | None = None,
+    stream_dtype=None,
+    epilogue: str = "scores",
+    n_classes: int | None = None,
+    k: int | None = None,
+    bank_resident: str = "vmem",
+) -> dict:
+    """Per-step VMEM working set of the predict engine, bytes by term.
+
+    The serving kernel holds no full-bank scratch in either residency — a
+    (b_tile, D) slice is staged per step by the BlockSpec pipeline ("vmem")
+    or the explicit 2-slot ring ("hbm"), so the two working sets coincide.
+    What "hbm" changes is WHERE the bank lives between steps (ANY/HBM, never
+    claiming VMEM residency) — the policy knob exists so a bank too big to
+    train VMEM-resident also serves HBM-resident (see
+    ``resolve_bank_resident``).
+    """
+    sz = _stream_bytes(stream_dtype)
+    dp = -(-d // 128) * 128
+    if epilogue == "ovr":
+        nc_pad, g_tile, gp = ovr_group_tiling(b, n_classes, b_tile)
+        bt = g_tile * nc_pad
+        out_cols = 2 * g_tile  # class ids + margins
+    else:
+        bt, _ = bank_tiling(b, b_tile)
+        out_cols = 2 * k if epilogue == "topk" else bt
+    out = {
+        "query_tile": 2 * q_block * dp * sz,
+        "bank": 2 * bt * dp * 4,  # BlockSpec pipeline or 2-slot ring: same
+        "bias": 2 * bt * 4,
+        "epilogue_state": (2 * q_block * k * 4 if epilogue == "topk" else 0),
+        "out_tiles": 2 * q_block * out_cols * 4,
+    }
+    return out
+
+
+def derive_hbm_b_tile(b: int, byte_model_at, *, vmem_budget: int):
+    """Pick a ring tile for an HBM-resident bank when the caller gave none.
+
+    The default ``b_tile=None`` means "one tile holding the whole bank" —
+    the right default VMEM-resident, but self-defeating HBM-resident (the
+    2-slot ring would be twice the bank). ``byte_model_at(b_tile)`` returns
+    the hbm working-set breakdown for a candidate tile; this returns the
+    largest power-of-two tile (512 down to 8) under the budget, or the
+    whole bank if even that fits, so ``bank_resident="auto"``/``"hbm"``
+    work on beyond-VMEM banks without the caller hand-picking a tile. A
+    caller-supplied ``b_tile`` is never overridden.
+    """
+    if sum(byte_model_at(None).values()) <= vmem_budget:
+        return None  # the whole bank rings within budget — keep one tile
+    for cand in (512, 256, 128, 64, 32, 16, 8):
+        if cand < b and sum(byte_model_at(cand).values()) <= vmem_budget:
+            return cand
+    return 8  # nothing fits: smallest tile, and let the preflight raise
+
+
+def resolve_bank_resident(
+    bank_resident: str,
+    byte_model,
+    *,
+    vmem_budget: int,
+    what: str,
+    shapes: str,
+) -> tuple[str, dict]:
+    """Resolve the residency policy against the per-step VMEM byte model.
+
+    ``byte_model(residency)`` returns the working-set breakdown for one
+    residency. "auto" picks "vmem" when its working set fits ``vmem_budget``
+    and "hbm" otherwise; a FORCED residency whose working set exceeds the
+    budget, and configs no residency can satisfy, raise a ValueError
+    carrying the shapes, the breakdown and the budget (this preflight is
+    what turns the old opaque Pallas scratch-allocation failure into an
+    actionable error). Returns ``(residency, breakdown)``.
+    """
+    if bank_resident not in _BANK_RESIDENCIES:
+        raise ValueError(
+            f"unknown bank_resident {bank_resident!r}; expected one of "
+            f"{_BANK_RESIDENCIES}"
+        )
+    if bank_resident == "auto":
+        by = byte_model("vmem")
+        if sum(by.values()) <= vmem_budget:
+            return "vmem", by
+        bank_resident = "hbm"
+    by = byte_model(bank_resident)
+    total = sum(by.values())
+    if total > vmem_budget:
+        hint = (
+            "shrink b_tile/block_n/lookahead or raise the budget"
+            if bank_resident == "hbm"
+            else 'use bank_resident="hbm" (or "auto"), or shrink the bank'
+        )
+        raise ValueError(
+            f"{what} with {shapes} needs a per-step VMEM working set of "
+            f"{total} bytes under bank_resident={bank_resident!r} "
+            f"(breakdown: {by}), exceeding the budget of {vmem_budget} "
+            f"bytes — {hint}. The budget follows vmem_budget_bytes(): "
+            "pass vmem_budget_bytes= or set REPRO_VMEM_BUDGET_BYTES."
+        )
+    return bank_resident, by
+
+
 def _pad_to(x, mult, axis):
     size = x.shape[axis]
     pad = (-size) % mult
@@ -136,10 +337,16 @@ def streamsvm_fit(
     return Ball(w=w[:d], r=r, xi2=xi2, m=m)
 
 
+# The residency helpers below shadow their module-level names inside the
+# jit'd wrappers (whose keyword arguments reuse the public names).
+_vmem_budget = vmem_budget_bytes
+
+
 @partial(
     jax.jit,
     static_argnames=(
-        "variant", "lookahead", "block_n", "b_tile", "stream_dtype", "interpret",
+        "variant", "lookahead", "block_n", "b_tile", "stream_dtype",
+        "bank_resident", "vmem_budget_bytes", "interpret",
     ),
 )
 def streamsvm_fit_many(
@@ -153,6 +360,8 @@ def streamsvm_fit_many(
     block_n: int = 256,
     b_tile: int | None = None,
     stream_dtype=None,
+    bank_resident: str = "auto",
+    vmem_budget_bytes: int | None = None,
     interpret: bool | None = None,
 ) -> Ball:
     """One-pass Algorithm 1/2 for a bank of B models — ONE read of the stream.
@@ -183,6 +392,12 @@ def streamsvm_fit_many(
     data-major, so any B runs in ONE stream pass — B/b_tile bank tiles
     revisit each resident stream tile instead of re-reading it.
     stream_dtype: None/"f32" or "bf16" — see the module dtype policy.
+    bank_resident: "vmem" / "hbm" / "auto" (default) — see the module
+    residency policy. "hbm" lifts the VMEM cap on B*D by keeping the bank,
+    state and lookahead windows in HBM/ANY space, double-buffered through a
+    2-slot VMEM ring (bit-exact f32 with "vmem"); impossible configs raise
+    a ValueError carrying the per-step byte breakdown and the budget
+    (``vmem_budget_bytes`` / REPRO_VMEM_BUDGET_BYTES).
     """
     b, n_y = Y.shape
     n, d = X.shape
@@ -220,6 +435,36 @@ def streamsvm_fit_many(
                 f"lookahead must be an int >= 1 or a length-B tuple of them: "
                 f"got {lookahead} for B={b}"
             )
+    l_max = max(lookahead) if is_lookahead else None
+    budget = _vmem_budget(vmem_budget_bytes)
+    engine_bytes_at = lambda bt_, res: engine_vmem_bytes(
+        b, d, block_n=block_n, b_tile=bt_, stream_dtype=stream_dtype,
+        lookahead_max=l_max, bank_resident=res,
+    )
+    # b_tile=None means "whole bank in one tile" — right VMEM-resident,
+    # self-defeating as a ring slot. When residency is (or may resolve to)
+    # hbm and the caller named no tile, derive one that fits the budget so
+    # "auto" genuinely rescues beyond-VMEM banks.
+    if b_tile is None and bank_resident in ("auto", "hbm"):
+        vmem_fits = sum(engine_bytes_at(None, "vmem").values()) <= budget
+        if bank_resident == "hbm" or not vmem_fits:
+            b_tile = derive_hbm_b_tile(
+                b, lambda bt_: engine_bytes_at(bt_, "hbm"),
+                vmem_budget=budget,
+            )
+    # Residency preflight: resolve "auto" and reject configs whose per-step
+    # VMEM working set cannot fit under ANY residency — BEFORE Pallas gets a
+    # chance to fail opaquely inside lowering (also guards forced "vmem").
+    residency, _ = resolve_bank_resident(
+        bank_resident,
+        lambda res: engine_bytes_at(b_tile, res),
+        vmem_budget=budget,
+        what="streamsvm_fit_many",
+        shapes=(
+            f"B={b}, D={d}, block_n={block_n}, b_tile={b_tile}, "
+            f"lookahead_max={l_max}, stream_dtype={stream_dtype!r}"
+        ),
+    )
     if balls is None:
         w0 = Y[:, 0:1] * X[0][None, :]
         r0 = jnp.zeros((b,), jnp.float32)
@@ -271,6 +516,7 @@ def streamsvm_fit_many(
         block_n=block_n,
         b_tile=bt,
         stream_dtype=stream_dtype,
+        bank_resident=residency,
         interpret=interpret,
     )
     return Ball(w=W[:b, :d], r=r[:b], xi2=xi2[:b], m=m[:b])
@@ -314,7 +560,7 @@ def gram(
     jax.jit,
     static_argnames=(
         "epilogue", "n_classes", "k", "q_block", "b_tile", "stream_dtype",
-        "interpret",
+        "bank_resident", "vmem_budget_bytes", "interpret",
     ),
 )
 def predict_bank(
@@ -327,6 +573,8 @@ def predict_bank(
     q_block: int = 256,
     b_tile: int | None = None,
     stream_dtype=None,
+    bank_resident: str = "auto",
+    vmem_budget_bytes: int | None = None,
     interpret: bool | None = None,
 ):
     """Score (Q, D) queries against a (B, D) bank with a fused epilogue.
@@ -358,6 +606,17 @@ def predict_bank(
     tile holding the whole bank). stream_dtype: None/"f32" or "bf16" — query
     tiles DMA'd as bf16 (half the dominant HBM term; the bank, bias and
     accumulators stay f32; see the module dtype policy).
+    bank_resident: "vmem" / "hbm" / "auto" (default). "hbm" keeps the bank
+    in ANY/HBM space and rings (b_tile, D) slices through a 2-slot VMEM
+    buffer with async-copy prefetch (bit-exact f32 with "vmem"); "auto"
+    serves HBM-resident exactly when the bank's full (B, D) f32 footprint
+    exceeds the VMEM budget — the dominant term of the training policy's
+    boundary, so train/serve residency decisions agree except in the
+    narrow window where training's extra per-step stream-tile terms tip
+    it over first (a bank clearly beyond VMEM trains AND serves
+    HBM-resident). Per-step working sets are preflighted against the
+    budget either way (ValueError with the byte breakdown on impossible
+    configs).
     """
     q, d = X.shape
     b, dw = W.shape
@@ -380,18 +639,53 @@ def predict_bank(
         raise ValueError(
             f"k={k} requires epilogue='topk' (got epilogue={epilogue!r})"
         )
+    if epilogue == "ovr" and (
+        n_classes is None or n_classes < 1 or b % n_classes
+    ):
+        raise ValueError(
+            f"epilogue='ovr' needs n_classes >= 1 dividing B: got "
+            f"n_classes={n_classes}, B={b}"
+        )
+    if epilogue == "topk" and (k is None or not (1 <= k <= b)):
+        raise ValueError(
+            f"epilogue='topk' needs 1 <= k <= B: got k={k}, B={b}"
+        )
     stream_dtype = _resolve_stream_dtype(stream_dtype)
+    # Residency: "auto" serves HBM-resident exactly when the full bank's f32
+    # footprint exceeds the VMEM budget — the dominant term of the training
+    # policy's boundary (which also counts per-step stream-tile terms), so
+    # train/serve decisions agree away from the boundary; the chosen
+    # residency's per-step working set is then preflighted either way.
+    budget = _vmem_budget(vmem_budget_bytes)
+    if bank_resident == "auto":  # unknown strings fall through to the
+        dp = -(-d // 128) * 128  # resolver's own membership ValueError
+        bank_resident = "hbm" if b * dp * 4 > budget else "vmem"
+    predict_bytes_at = lambda bt_, res: predict_vmem_bytes(
+        b, d, q_block=q_block, b_tile=bt_, stream_dtype=stream_dtype,
+        epilogue=epilogue, n_classes=n_classes, k=k, bank_resident=res,
+    )
+    if bank_resident == "hbm" and b_tile is None:
+        # default "whole bank per tile" is self-defeating as a ring slot —
+        # derive a budget-fitting tile (a caller's b_tile is never touched)
+        b_tile = derive_hbm_b_tile(
+            b, lambda bt_: predict_bytes_at(bt_, "hbm"), vmem_budget=budget
+        )
+    residency, _ = resolve_bank_resident(
+        bank_resident,
+        lambda res: predict_bytes_at(b_tile, res),
+        vmem_budget=budget,
+        what="predict_bank",
+        shapes=(
+            f"Q={q}, B={b}, D={d}, q_block={q_block}, b_tile={b_tile}, "
+            f"epilogue={epilogue!r}, stream_dtype={stream_dtype!r}"
+        ),
+    )
     Xp = _pad_to(_pad_to(X.astype(jnp.float32), 128, 1), q_block, 0)
     if stream_dtype is not None:
         Xp = Xp.astype(stream_dtype)
     Wf = W.astype(jnp.float32)
 
     if epilogue == "ovr":
-        if n_classes is None or n_classes < 1 or b % n_classes:
-            raise ValueError(
-                f"epilogue='ovr' needs n_classes >= 1 dividing B: got "
-                f"n_classes={n_classes}, B={b}"
-            )
         g = b // n_classes
         # Pad each group's class lanes to the sublane multiple of 8, then
         # tile the bank in whole GROUPS so a group's argmax never crosses a
@@ -407,7 +701,8 @@ def predict_bank(
         bias = jnp.where(live, 0.0, NEG_MASK)[:, None].astype(jnp.float32)
         cls, margin = predict_bank_pallas(
             Xp, Wp, bias, epilogue="ovr", q_block=q_block,
-            b_tile=g_tile * nc_pad, nc_pad=nc_pad, interpret=interpret,
+            b_tile=g_tile * nc_pad, nc_pad=nc_pad, bank_resident=residency,
+            interpret=interpret,
         )
         return cls[:q, :g], margin[:q, :g]
 
@@ -418,17 +713,13 @@ def predict_bank(
         jnp.float32
     )
     if epilogue == "topk":
-        if k is None or not (1 <= k <= b):
-            raise ValueError(
-                f"epilogue='topk' needs 1 <= k <= B: got k={k}, B={b}"
-            )
         vals, ids = predict_bank_pallas(
             Xp, Wp, bias, epilogue="topk", q_block=q_block, b_tile=bt, k=k,
-            interpret=interpret,
+            bank_resident=residency, interpret=interpret,
         )
         return vals[:q], ids[:q]
     scores = predict_bank_pallas(
         Xp, Wp, bias, epilogue="scores", q_block=q_block, b_tile=bt,
-        interpret=interpret,
+        bank_resident=residency, interpret=interpret,
     )
     return scores[:q, :b]

@@ -32,6 +32,21 @@ large negative additive bias so no epilogue can select them; padded query
 rows are sliced off by ops.py. Query tiles may be bf16 (ops.py's
 ``stream_dtype`` policy — halves the dominant HBM term); the bank, bias and
 every epilogue accumulator stay f32.
+
+Bank residency (``bank_resident``) mirrors the training engine's knob:
+
+  "vmem"  bank tiles are BlockSpec-delivered — Pallas's automatic pipeline
+          stages each (b_tile, D) slice into VMEM (the PR 4 layout).
+  "hbm"   the bank stays in an ANY/HBM-space ref and the kernel streams
+          (b_tile, D) slices through a 2-slot VMEM ring with
+          ``pltpu.make_async_copy`` — the prefetch of grid step t+1's tile
+          issued before compute on step t's slot, DMA semaphores in scratch.
+          Read-only, so there is no write-back leg; the epilogue compute is
+          shared op-for-op with "vmem" (bit-exact f32). This is the serving
+          twin of the training engine's HBM-resident mode: a bank whose
+          (B, D) footprint exceeds the VMEM budget serves without ever
+          claiming VMEM residency for it, and ops.py's ``auto`` policy keeps
+          train/serve residency decisions consistent.
 """
 from __future__ import annotations
 
@@ -63,20 +78,66 @@ def _first_argmax(vals: jax.Array) -> tuple[jax.Array, jax.Array]:
 
 def _kernel(
     q_ref,  # (q_block, D) query tile (f32 or bf16)
-    w_ref,  # (b_tile, D) bank tile (f32)
+    w_ref,  # (b_tile, D) bank tile (f32) — or the full ANY-space bank (hbm)
     bias_ref,  # (b_tile, 1) additive lane bias: 0 live, NEG_MASK padded
-    *refs,  # epilogue outputs, then scratch (topk only)
+    *refs,  # epilogue outputs, then scratch (topk adds 2; hbm adds ring+sem)
     epilogue: str,
     b_tile: int,
     nc_pad: int | None,
     k: int | None,
+    hbm: bool = False,
+    n_q_blocks: int | None = None,
 ):
     j = pl.program_id(1)  # bank tile (inner — revisits the resident queries)
     n_btiles = pl.num_programs(1)
 
+    if hbm:
+        # HBM-resident bank: stream (b_tile, D) slices through a 2-slot VMEM
+        # ring — prefetch of step t+1's tile issued before compute on step
+        # t's slot. Read-only, so no write-back leg; with <= 2 bank tiles
+        # each tile owns a slot and loads once, on the first query tile.
+        ring, sem = refs[-2], refs[-1]
+        refs = refs[:-2]
+        i = pl.program_id(0)
+        J = n_btiles
+        t = i * J + j
+        T = n_q_blocks * J
+
+        def din(tt):
+            tile = jax.lax.rem(tt, J)
+            slot = jax.lax.rem(tt, 2) if J > 2 else tile
+            return pltpu.make_async_copy(
+                w_ref.at[pl.ds(tile * b_tile, b_tile), :],
+                ring.at[slot],
+                sem.at[slot],
+            )
+
+        if J <= 2:
+            @pl.when(i == 0)
+            def _load():
+                d = din(t)
+                d.start()
+                d.wait()
+
+            slot = j
+        else:
+            @pl.when(t == 0)
+            def _warmup():
+                din(0).start()
+
+            @pl.when(t + 1 < T)
+            def _prefetch():  # overlaps the matmul + epilogue below
+                din(t + 1).start()
+
+            din(t).wait()
+            slot = jax.lax.rem(t, 2)
+        w_tile = ring[slot]
+    else:
+        w_tile = w_ref[...]
+
     q = q_ref[...].astype(jnp.float32)  # bf16 query tiles upcast here
     s = jax.lax.dot_general(
-        q, w_ref[...], (((1,), (1,)), ((), ())),
+        q, w_tile, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     )  # (q_block, b_tile) margins
 
@@ -142,6 +203,7 @@ def predict_bank_pallas(
     b_tile: int | None = None,
     nc_pad: int | None = None,
     k: int | None = None,
+    bank_resident: str = "vmem",
     interpret: bool | None = None,
 ):
     """Score padded queries against a padded bank with a fused epilogue.
@@ -158,9 +220,19 @@ def predict_bank_pallas(
                   both), so every group's argmax completes inside one step
       "topk"   -> ((Qn, k) f32, (Qn, k) int32) per-query top-k model scores
                   and ids, descending (running VMEM scratch across tiles)
+
+    ``bank_resident="hbm"`` keeps W in ANY/HBM memory and double-buffers
+    (b_tile, D) slices through a 2-slot VMEM ring (see module docstring);
+    bit-exact with the default BlockSpec-delivered layout.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if bank_resident not in ("vmem", "hbm"):
+        raise ValueError(
+            f"unknown bank_resident {bank_resident!r}; expected 'vmem' or "
+            "'hbm' (ops.predict_bank resolves 'auto' before calling the "
+            "kernel)"
+        )
     qn, d = Q.shape
     bp, dw = W.shape
     if dw != d:
@@ -201,10 +273,15 @@ def predict_bank_pallas(
         )
 
     grid = (qn // q_block, bp // b_tile)
+    hbm = bank_resident == "hbm"
     in_specs = [
         # query tile index ignores j -> DMA'd once, resident across the bank
         pl.BlockSpec((q_block, d), lambda i, j: (i, 0)),
-        pl.BlockSpec((b_tile, d), lambda i, j: (j, 0)),
+        # hbm: the bank never enters the BlockSpec pipeline — the kernel
+        # rings (b_tile, D) slices out of ANY space itself
+        pl.BlockSpec(memory_space=pltpu.ANY)
+        if hbm
+        else pl.BlockSpec((b_tile, d), lambda i, j: (j, 0)),
         pl.BlockSpec((b_tile, 1), lambda i, j: (j, 0)),
     ]
     scratch = []
@@ -236,9 +313,15 @@ def predict_bank_pallas(
             pltpu.VMEM((q_block, k), jnp.int32),
         ]
 
+    if hbm:
+        scratch = scratch + [
+            pltpu.VMEM((2, b_tile, d), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ]
     outs = pl.pallas_call(
         functools.partial(
-            _kernel, epilogue=epilogue, b_tile=b_tile, nc_pad=nc_pad, k=k
+            _kernel, epilogue=epilogue, b_tile=b_tile, nc_pad=nc_pad, k=k,
+            hbm=hbm, n_q_blocks=grid[0],
         ),
         grid=grid,
         in_specs=in_specs,

@@ -4,6 +4,14 @@ Deliberately written as straight-line jnp (row-at-a-time scan for the
 streaming kernel, one einsum for the Gram kernel) or plain-python numpy
 (the lookahead oracle, buffer as a python list) and independent of the
 kernel implementations.
+
+These oracles are RESIDENCY-AGNOSTIC: they model the algorithms' math, with
+no notion of where the bank lives (``bank_resident="vmem"`` vs ``"hbm"`` is
+a pure data-movement choice in the kernels). One oracle therefore anchors
+both layouts — and because the two kernel layouts share their compute core,
+the parity suites additionally pin them bit-exact (f32) against EACH OTHER
+(tests/test_hbm_bank.py, tests/test_predict_engine.py), a stronger
+statement than each being allclose to the reference.
 """
 from __future__ import annotations
 

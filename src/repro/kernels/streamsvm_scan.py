@@ -48,6 +48,34 @@ on the last grid step (same boundary-flush semantics as fit_chunked).
 Stream tiles may be bf16 (``X``/``Y`` dtype is whatever the caller DMAs in —
 see ops.py's ``stream_dtype`` policy); the bank, scalar state, and every
 accumulator stay f32 in scratch.
+
+Bank residency (``bank_resident``): the tiled kernel exists in two layouts
+sharing ONE compute core (``_block_update`` — identical arithmetic, so the
+two are bit-exact in f32):
+
+  "vmem"  the full (B, D) bank + (4, B) state + (B*L, D) lookahead windows
+          persist in VMEM scratch across the grid (the PR 2 layout). Fast,
+          but B*D is capped by VMEM.
+  "hbm"   the bank, state, and windows live in HBM/ANY-space buffers
+          (aliased pallas_call inputs→outputs, so the update is in place)
+          and the kernel streams (b_tile, D) slices through a 2-slot VMEM
+          ring buffer with ``pltpu.make_async_copy``: the prefetch of grid
+          step t+1's tile into ring slot (t+1) % 2 is issued BEFORE compute
+          on step t's slot t % 2, and the updated tile is written back
+          async — its wait deferred to step t+1 — so both DMA directions
+          overlap the MXU work of the (stream tile x bank tile) step. DMA
+          semaphores live in scratch (one in/out pair per slot per array).
+          Correctness of the ring: every step t >= 1 first waits the
+          writeback issued at t-1, so by the time step t prefetches tile
+          (t+1) % J, the last writeback of that tile (issued at step
+          t+1-J <= t-1) has already been waited — no RAW through HBM, and
+          the slot being prefetched into is never still draining (WAR).
+          With J = B/b_tile <= 2 tiles there is nothing to cycle: the bank
+          loads once on the first visit and writes back once on the last.
+
+ops.py's ``auto`` policy picks the residency from a per-step VMEM byte
+model; the per-step VMEM working set in "hbm" mode is O(ring slots + stream
+tile) no matter how large B*D grows.
 """
 from __future__ import annotations
 
@@ -193,6 +221,151 @@ def _bank_flush(w, r, xi2, g, cnt, buf, fmask, x, ys, c_inv, gain):
     return w, r, xi2, g, cnt
 
 
+def _block_update(
+    x,  # (block_n, D) f32 stream block (bf16 tiles already upcast)
+    ys,  # (b_tile, block_n) f32 per-model label signs
+    w_tile,  # (b_tile, D) f32 ball centers of the resident bank tile
+    r, xi2, wsq,  # (b_tile,) f32 per-model scalars
+    m,  # (b_tile,) int32 core-vector counts
+    cnt,  # (b_tile,) int32 lookahead fill counts (None for Algorithm 1)
+    buf,  # (b_tile, L_max, D) f32 lookahead windows (None for Algorithm 1)
+    c_inv,  # (b_tile,) f32
+    gain,  # (b_tile,) f32 slack gain
+    l_arr,  # (b_tile,) int32 per-model L (None for Algorithm 1)
+    valid,  # (block_n,) f32 row-validity mask (n_valid cutoff)
+    is_last_block,  # traced bool: final data block (lookahead boundary flush)
+    *,
+    block_n: int,
+    b_tile: int,
+    lookahead_max: int | None,
+):
+    """One (stream block x bank tile) update — the residency-agnostic core.
+
+    Shared op-for-op by the VMEM-resident and HBM-resident kernels, which is
+    what makes the two layouts bit-exact in f32: only WHERE the bank tile
+    came from differs, never the arithmetic applied to it. Returns
+    ``(w, r, xi2, wsq, m, cnt, buf)`` (cnt/buf None for Algorithm 1).
+    """
+    # One block Gram of the *unsigned* rows, shared by every model (signs are
+    # re-applied per model as rank-1 outer factors), plus the tile/block inner
+    # products — the only O(D) work in the block, all MXU.
+    gram = jax.lax.dot_general(
+        x, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (block_n, block_n)
+    h0 = jax.lax.dot_general(
+        w_tile, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (b_tile, block_n): <w_b, x_k>
+    g0 = ys * h0  # g[b, k] = <w_b, y_bk x_k>
+    col_ids = jax.lax.broadcasted_iota(jnp.int32, ys.shape, 1)  # (b_tile, block_n)
+    # Sign-0 inertness is PER MODEL LANE here: a row whose sign is 0 for
+    # model b never violates model b (the stream-padding contract used by
+    # fit_bank_sharded's ragged-remainder rows, and what keeps padded *bank*
+    # lanes from absorbing anything).
+
+    if lookahead_max is None:
+        # ----- Algorithm 1: immediate greedy acceptance (bit-exact with the
+        # single-tile PR 1 path — identical per-lane arithmetic). -----
+        def body(jr, carry):
+            g, alpha, decay, r, xi2, wsq, m = carry
+            gj = g[:, jr]  # (b_tile,) current <w_b, y_bj x_j>
+            gjj = gram[jr, jr]
+            d2 = wsq - 2.0 * gj + gjj + xi2 + c_inv
+            d = jnp.sqrt(jnp.maximum(d2, 1e-12))
+            yj = ys[:, jr]  # (b_tile,)
+            upd = jnp.logical_and(
+                jnp.logical_and(d >= r, valid[jr] > 0.0), yj != 0.0
+            )
+            s = jnp.where(upd, 0.5 * (1.0 - r / d), 0.0)  # (b_tile,)
+            one_s = 1.0 - s
+            # rank-1 maintenance of g under w_b <- (1-s_b) w_b + s_b y_bj x_j:
+            # <x_j, y_bk x_k> = y_bk G[j, k]
+            g = one_s[:, None] * g + (s * yj)[:, None] * (ys * gram[jr][None, :])
+            # Deferred bank update: w_end = decay * w_start + sum_j alpha_j
+            # y_bj x_j with alpha_j = s_j * prod_{k>j} (1 - s_k) — applied
+            # post-loop as ONE (b_tile, block_n) x (block_n, D) matmul.
+            alpha = one_s[:, None] * alpha + jnp.where(
+                col_ids == jr, s[:, None], 0.0
+            )
+            decay = decay * one_s
+            wsq = one_s**2 * wsq + 2.0 * s * one_s * gj + s**2 * gjj
+            r = jnp.where(upd, r + 0.5 * (d - r), r)
+            xi2 = xi2 * one_s**2 + s**2 * gain
+            m = m + upd.astype(jnp.int32)
+            return g, alpha, decay, r, xi2, wsq, m
+
+        init = (
+            g0,
+            jnp.zeros_like(g0),
+            jnp.ones((b_tile,), jnp.float32),
+            r, xi2, wsq, m,
+        )
+        g, alpha, decay, r, xi2, wsq, m = jax.lax.fori_loop(
+            0, block_n, body, init
+        )
+        w = decay[:, None] * w_tile + jax.lax.dot_general(
+            alpha * ys, x, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return w, r, xi2, wsq, m, None, None
+
+    # ----- Algorithm 2: deferred acceptance through per-model L-row
+    # lookahead windows, flushed farthest-point-first. -----
+    def body(jr, carry):
+        g, w, r, xi2, wsq, m, cnt, buf = carry
+        gj = g[:, jr]
+        d2 = wsq - 2.0 * gj + gram[jr, jr] + xi2 + c_inv
+        d = jnp.sqrt(jnp.maximum(d2, 1e-12))
+        violate = jnp.logical_and(
+            jnp.logical_and(d >= r, valid[jr] > 0.0), ys[:, jr] != 0.0
+        )
+        # push the signed row into each violated model's window
+        p = ys[:, jr][:, None] * x[jr][None, :]  # (b_tile, D)
+        slot = jax.lax.broadcasted_iota(
+            jnp.int32, (b_tile, lookahead_max), 1
+        )
+        put = jnp.logical_and(violate[:, None], slot == cnt[:, None])
+        buf = jnp.where(put[:, :, None], p[:, None, :], buf)
+        cnt = cnt + violate.astype(jnp.int32)
+        m = m + violate.astype(jnp.int32)  # counted at push (QP parity)
+        full = cnt >= l_arr
+
+        def flush(args):
+            g, w, r, xi2, wsq, cnt, buf = args
+            w, r, xi2, g, cnt = _bank_flush(
+                w, r, xi2, g, cnt, buf, full, x, ys, c_inv, gain
+            )
+            # w only changes here, so |w|^2 only needs refreshing here
+            return g, w, r, xi2, jnp.sum(w * w, axis=1), cnt, buf
+
+        g, w, r, xi2, wsq, cnt, buf = jax.lax.cond(
+            jnp.any(full), flush, lambda a: a,
+            (g, w, r, xi2, wsq, cnt, buf),
+        )
+        return g, w, r, xi2, wsq, m, cnt, buf
+
+    init = (g0, w_tile, r, xi2, wsq, m, cnt, buf)
+    g, w, r, xi2, wsq, m, cnt, buf = jax.lax.fori_loop(
+        0, block_n, body, init
+    )
+
+    # Final partial flush on the last data block (paper lines 12-14 /
+    # fit_chunked's boundary-flush semantics).
+    def final_flush(args):
+        w, r, xi2, g, wsq, cnt = args
+        w, r, xi2, g, cnt = _bank_flush(
+            w, r, xi2, g, cnt, buf, cnt > 0, x, ys, c_inv, gain
+        )
+        return w, r, xi2, g, jnp.sum(w * w, axis=1), cnt
+
+    w, r, xi2, g, wsq, cnt = jax.lax.cond(
+        jnp.logical_and(is_last_block, jnp.any(cnt > 0)),
+        final_flush,
+        lambda a: a,
+        (w, r, xi2, g, wsq, cnt),
+    )
+    return w, r, xi2, wsq, m, cnt, buf
+
+
 def _kernel_many_tiled(
     x_ref,  # (block_n, D) stream tile (raw rows; f32 or bf16)
     ys_ref,  # (b_tile, block_n) per-model label-sign tile
@@ -244,145 +417,29 @@ def _kernel_many_tiled(
     x = x_ref[...].astype(jnp.float32)  # (block_n, D) — bf16 tiles upcast here
     ys = ys_ref[...].astype(jnp.float32)  # (b_tile, block_n)
     w_tile = bank_ref[tile, :]  # (b_tile, D)
-    # One block Gram of the *unsigned* rows, shared by every model (signs are
-    # re-applied per model as rank-1 outer factors), plus the tile/block inner
-    # products — the only O(D) work in the block, all MXU.
-    gram = jax.lax.dot_general(
-        x, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )  # (block_n, block_n)
-    h0 = jax.lax.dot_general(
-        w_tile, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )  # (b_tile, block_n): <w_b, x_k>
-    g0 = ys * h0  # g[b, k] = <w_b, y_bk x_k>
 
     row_base = i * block_n
     row_ids = row_base + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
     valid = (row_ids < n_valid).astype(jnp.float32)
-    col_ids = jax.lax.broadcasted_iota(jnp.int32, ys.shape, 1)  # (b_tile, block_n)
-    # Sign-0 inertness is PER MODEL LANE here: a row whose sign is 0 for
-    # model b never violates model b (the stream-padding contract used by
-    # fit_bank_sharded's ragged-remainder rows, and what keeps padded *bank*
-    # lanes from absorbing anything).
 
     if lookahead_max is None:
-        # ----- Algorithm 1: immediate greedy acceptance (bit-exact with the
-        # single-tile PR 1 path — identical per-lane arithmetic). -----
-        def body(jr, carry):
-            g, alpha, decay, r, xi2, wsq, m = carry
-            gj = g[:, jr]  # (b_tile,) current <w_b, y_bj x_j>
-            gjj = gram[jr, jr]
-            d2 = wsq - 2.0 * gj + gjj + xi2 + c_inv
-            d = jnp.sqrt(jnp.maximum(d2, 1e-12))
-            yj = ys[:, jr]  # (b_tile,)
-            upd = jnp.logical_and(
-                jnp.logical_and(d >= r, valid[jr] > 0.0), yj != 0.0
-            )
-            s = jnp.where(upd, 0.5 * (1.0 - r / d), 0.0)  # (b_tile,)
-            one_s = 1.0 - s
-            # rank-1 maintenance of g under w_b <- (1-s_b) w_b + s_b y_bj x_j:
-            # <x_j, y_bk x_k> = y_bk G[j, k]
-            g = one_s[:, None] * g + (s * yj)[:, None] * (ys * gram[jr][None, :])
-            # Deferred bank update: w_end = decay * w_start + sum_j alpha_j
-            # y_bj x_j with alpha_j = s_j * prod_{k>j} (1 - s_k) — applied
-            # post-loop as ONE (b_tile, block_n) x (block_n, D) matmul.
-            alpha = one_s[:, None] * alpha + jnp.where(
-                col_ids == jr, s[:, None], 0.0
-            )
-            decay = decay * one_s
-            wsq = one_s**2 * wsq + 2.0 * s * one_s * gj + s**2 * gjj
-            r = jnp.where(upd, r + 0.5 * (d - r), r)
-            xi2 = xi2 * one_s**2 + s**2 * gain
-            m = m + upd.astype(jnp.int32)
-            return g, alpha, decay, r, xi2, wsq, m
-
-        init = (
-            g0,
-            jnp.zeros_like(g0),
-            jnp.ones((b_tile,), jnp.float32),
-            st_ref[0, tile],
-            st_ref[1, tile],
-            st_ref[2, tile],
-            m_ref[0, tile],
-        )
-        g, alpha, decay, r, xi2, wsq, m = jax.lax.fori_loop(
-            0, block_n, body, init
-        )
-        bank_ref[tile, :] = decay[:, None] * w_tile + jax.lax.dot_general(
-            alpha * ys, x, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
+        l_arr, cnt0, buf0 = None, None, None
     else:
-        # ----- Algorithm 2: deferred acceptance through per-model L-row
-        # lookahead windows, flushed farthest-point-first. -----
         l_arr = l_ref[:, 0]  # (b_tile,) per-model L
         btile_rows = pl.ds(j0 * lookahead_max, b_tile * lookahead_max)
+        cnt0 = cnt_ref[0, tile]
         buf0 = buf_ref[btile_rows, :].reshape(
             b_tile, lookahead_max, x.shape[1]
         )
 
-        def body(jr, carry):
-            g, w, r, xi2, wsq, m, cnt, buf = carry
-            gj = g[:, jr]
-            d2 = wsq - 2.0 * gj + gram[jr, jr] + xi2 + c_inv
-            d = jnp.sqrt(jnp.maximum(d2, 1e-12))
-            violate = jnp.logical_and(
-                jnp.logical_and(d >= r, valid[jr] > 0.0), ys[:, jr] != 0.0
-            )
-            # push the signed row into each violated model's window
-            p = ys[:, jr][:, None] * x[jr][None, :]  # (b_tile, D)
-            slot = jax.lax.broadcasted_iota(
-                jnp.int32, (b_tile, lookahead_max), 1
-            )
-            put = jnp.logical_and(violate[:, None], slot == cnt[:, None])
-            buf = jnp.where(put[:, :, None], p[:, None, :], buf)
-            cnt = cnt + violate.astype(jnp.int32)
-            m = m + violate.astype(jnp.int32)  # counted at push (QP parity)
-            full = cnt >= l_arr
-
-            def flush(args):
-                g, w, r, xi2, wsq, cnt, buf = args
-                w, r, xi2, g, cnt = _bank_flush(
-                    w, r, xi2, g, cnt, buf, full, x, ys, c_inv, gain
-                )
-                # w only changes here, so |w|^2 only needs refreshing here
-                return g, w, r, xi2, jnp.sum(w * w, axis=1), cnt, buf
-
-            g, w, r, xi2, wsq, cnt, buf = jax.lax.cond(
-                jnp.any(full), flush, lambda a: a,
-                (g, w, r, xi2, wsq, cnt, buf),
-            )
-            return g, w, r, xi2, wsq, m, cnt, buf
-
-        init = (
-            g0,
-            w_tile,
-            st_ref[0, tile],
-            st_ref[1, tile],
-            st_ref[2, tile],
-            m_ref[0, tile],
-            cnt_ref[0, tile],
-            buf0,
-        )
-        g, w, r, xi2, wsq, m, cnt, buf = jax.lax.fori_loop(
-            0, block_n, body, init
-        )
-
-        # Final partial flush on the last data block (paper lines 12-14 /
-        # fit_chunked's boundary-flush semantics).
-        def final_flush(args):
-            w, r, xi2, g, wsq, cnt = args
-            w, r, xi2, g, cnt = _bank_flush(
-                w, r, xi2, g, cnt, buf, cnt > 0, x, ys, c_inv, gain
-            )
-            return w, r, xi2, g, jnp.sum(w * w, axis=1), cnt
-
-        w, r, xi2, g, wsq, cnt = jax.lax.cond(
-            jnp.logical_and(i == n_blocks - 1, jnp.any(cnt > 0)),
-            final_flush,
-            lambda a: a,
-            (w, r, xi2, g, wsq, cnt),
-        )
-        bank_ref[tile, :] = w
+    w, r, xi2, wsq, m, cnt, buf = _block_update(
+        x, ys, w_tile,
+        st_ref[0, tile], st_ref[1, tile], st_ref[2, tile], m_ref[0, tile],
+        cnt0, buf0, c_inv, gain, l_arr, valid, i == n_blocks - 1,
+        block_n=block_n, b_tile=b_tile, lookahead_max=lookahead_max,
+    )
+    bank_ref[tile, :] = w
+    if lookahead_max is not None:
         cnt_ref[0, tile] = cnt
         buf_ref[btile_rows, :] = buf.reshape(
             b_tile * lookahead_max, x.shape[1]
@@ -398,6 +455,152 @@ def _kernel_many_tiled(
             (st_ref[0, tile], st_ref[1, tile], c_inv, st_ref[3, tile]), axis=-1
         )
         m_out_ref[...] = m_ref[0, tile][:, None]
+
+
+def _kernel_many_hbm(
+    x_ref,  # (block_n, D) stream tile (raw rows; f32 or bf16)
+    ys_ref,  # (b_tile, block_n) per-model label-sign tile
+    s0_ref,  # (b_tile, 4) per-model scalars — only column 2 (c_inv) is read
+    gain_ref,  # (b_tile, 1) per-model slack gain
+    l_ref,  # (b_tile, 1) per-model lookahead window (int32; 1 == greedy)
+    nv_ref,  # (1, 1) number of valid rows (N before padding)
+    *refs,  # aliased ANY inputs, ANY outputs, VMEM ring slots, DMA sems
+    block_n: int,
+    b_tile: int,
+    lookahead_max: int | None,
+    n_blocks: int,
+    n_btiles: int,
+):
+    """HBM-resident layout: bank/state/windows in ANY memory, 2-slot ring.
+
+    ``refs`` unpacks as ``n_arrays`` aliased input refs (unused — the
+    aliased OUTPUT refs address the same buffers and carry the initial
+    state), then ``n_arrays`` ANY-space output refs [bank (B, D) f32,
+    st (4, B) f32 rows (r, xi2, wsq, unused), m (1, B) i32, and with
+    lookahead cnt (1, B) i32 + buf (B * L_max, D) f32], then ``n_arrays``
+    2-slot VMEM ring buffers, then one DMA-semaphore array of shape
+    (n_arrays, 2, 2) = (array, in/out, slot).
+
+    Grid step t = i * n_btiles + j works on ring slot t % 2; the schedule
+    (prefetch t+1 before compute on t, async write-back of t waited at t+1)
+    and its hazard argument are in the module docstring. With <= 2 bank
+    tiles nothing ever cycles, so tiles load on first visit and write back
+    on the last — degenerating to the VMEM-resident data movement.
+    """
+    n_arrays = 3 if lookahead_max is None else 5
+    hbm = refs[n_arrays : 2 * n_arrays]  # aliased outputs == the live state
+    rings = refs[2 * n_arrays : 3 * n_arrays]
+    sems = refs[3 * n_arrays]
+
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    J = n_btiles
+    T = n_blocks * J
+    t = i * J + j
+
+    def _dmas(tt, direction):
+        """The ring transfers of grid step tt (0 = HBM->ring, 1 = ring->HBM).
+
+        Reconstructing the same (src, dst, semaphore) triple is how a copy
+        started at one grid step is waited at a later one.
+        """
+        tile = jax.lax.rem(tt, J)
+        # Cycling tiles alternate slots by STEP parity; with <= 2 tiles each
+        # tile owns the slot with its own index for the whole pass.
+        slot = jax.lax.rem(tt, 2) if J > 2 else tile
+        row = lambda ref, n: ref.at[pl.ds(tile * n, n), :]  # row-major slab
+        col = lambda ref, n: ref.at[:, pl.ds(tile * n, n)]  # lane slice
+        slices = [row(hbm[0], b_tile), col(hbm[1], b_tile), col(hbm[2], b_tile)]
+        if lookahead_max is not None:
+            slices += [
+                col(hbm[3], b_tile),
+                row(hbm[4], b_tile * lookahead_max),
+            ]
+        out = []
+        for a, (hslice, ring) in enumerate(zip(slices, rings)):
+            pair = (hslice, ring.at[slot])
+            src, dst = pair if direction == 0 else pair[::-1]
+            out.append(
+                pltpu.make_async_copy(src, dst, sems.at[a, direction, slot])
+            )
+        return out
+
+    start_in = lambda tt: [d.start() for d in _dmas(tt, 0)]
+    wait_in = lambda tt: [d.wait() for d in _dmas(tt, 0)]
+    start_out = lambda tt: [d.start() for d in _dmas(tt, 1)]
+    wait_out = lambda tt: [d.wait() for d in _dmas(tt, 1)]
+
+    if J <= 2:
+        # Nothing cycles: each tile owns a ring slot for the whole pass.
+        @pl.when(i == 0)
+        def _load():
+            start_in(t)
+            wait_in(t)
+    else:
+        @pl.when(t == 0)
+        def _warmup():
+            start_in(0)
+
+        @pl.when(t >= 1)
+        def _drain_writeback():  # the async write-back issued at step t-1
+            wait_out(t - 1)
+
+        @pl.when(t + 1 < T)
+        def _prefetch():  # overlap tile t+1's fetch with compute on tile t
+            start_in(t + 1)
+
+        wait_in(t)
+
+    slot = jax.lax.rem(t, 2) if J > 2 else j  # J <= 2: tile j owns slot j
+    bank_ring, st_ring, m_ring = rings[0], rings[1], rings[2]
+
+    w_tile = bank_ring[slot]  # (b_tile, D)
+
+    @pl.when(i == 0)
+    def _init_wsq():  # first visit: |w_b|^2 from the seeded centers,
+        st_ring[slot, 2] = jnp.sum(w_tile**2, axis=1)  # as the VMEM init does
+
+    c_inv = s0_ref[:, 2]  # (b_tile,)
+    gain = gain_ref[:, 0]
+    n_valid = nv_ref[0, 0]
+    x = x_ref[...].astype(jnp.float32)
+    ys = ys_ref[...].astype(jnp.float32)
+
+    row_base = i * block_n
+    row_ids = row_base + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
+    valid = (row_ids < n_valid).astype(jnp.float32)
+
+    if lookahead_max is None:
+        l_arr, cnt0, buf0 = None, None, None
+    else:
+        l_arr = l_ref[:, 0]
+        cnt0 = rings[3][slot, 0]
+        buf0 = rings[4][slot].reshape(b_tile, lookahead_max, x.shape[1])
+
+    w, r, xi2, wsq, m, cnt, buf = _block_update(
+        x, ys, w_tile,
+        st_ring[slot, 0], st_ring[slot, 1], st_ring[slot, 2], m_ring[slot, 0],
+        cnt0, buf0, c_inv, gain, l_arr, valid, i == n_blocks - 1,
+        block_n=block_n, b_tile=b_tile, lookahead_max=lookahead_max,
+    )
+    bank_ring[slot] = w
+    st_ring[slot, 0], st_ring[slot, 1], st_ring[slot, 2] = r, xi2, wsq
+    m_ring[slot, 0] = m
+    if lookahead_max is not None:
+        rings[3][slot, 0] = cnt
+        rings[4][slot] = buf.reshape(b_tile * lookahead_max, x.shape[1])
+
+    if J <= 2:
+        @pl.when(i == n_blocks - 1)
+        def _store():
+            start_out(t)
+            wait_out(t)
+    else:
+        start_out(t)  # waited at step t+1 (or just below on the last step)
+
+        @pl.when(t == T - 1)
+        def _drain_last():
+            wait_out(t)
 
 
 def streamsvm_scan_pallas(
@@ -476,6 +679,7 @@ def streamsvm_scan_many_pallas(
     block_n: int = 256,
     b_tile: int | None = None,
     stream_dtype=None,
+    bank_resident: str = "vmem",
     interpret: bool | None = None,
 ):
     """One data pass updating a bank of B balls (the tiled multi-ball engine).
@@ -498,6 +702,11 @@ def streamsvm_scan_many_pallas(
     stream_dtype: dtype the (block_n, D) stream and (b_tile, block_n) sign
     tiles are DMA'd as (e.g. jnp.bfloat16 halves stream HBM traffic); bank,
     scalar state, and accumulators stay f32.
+    bank_resident: "vmem" keeps bank/state/windows in persistent VMEM
+    scratch; "hbm" keeps them in HBM/ANY and double-buffers (b_tile, D)
+    slices through a 2-slot VMEM ring (see the module docstring) — bit-exact
+    (f32) with "vmem", per-step VMEM working set O(ring + stream tile).
+    ops.py resolves the "auto" policy before calling here.
 
     Returns (W, r, xi2, m) with leading axis B.
     """
@@ -527,6 +736,12 @@ def streamsvm_scan_many_pallas(
             "lookahead (per-model array) and lookahead_max (static int) must "
             f"be passed together: got {lookahead=}, {lookahead_max=}"
         )
+    if bank_resident not in ("vmem", "hbm"):
+        raise ValueError(
+            f"unknown bank_resident {bank_resident!r}; expected 'vmem' or "
+            "'hbm' (ops.streamsvm_fit_many resolves 'auto' before calling "
+            "the kernel)"
+        )
     n_blocks = n // block_n
     n_btiles = b // b_tile
     grid = (n_blocks, n_btiles)
@@ -553,6 +768,15 @@ def streamsvm_scan_many_pallas(
         else jnp.broadcast_to(jnp.asarray(lookahead, jnp.int32), (b,))
     ).reshape(b, 1)
     nv = jnp.array([[n if n_valid is None else n_valid]], jnp.int32)
+
+    if bank_resident == "hbm":
+        return _call_many_hbm(
+            X.astype(stream_dtype),
+            Y.astype(stream_dtype),
+            W0, s0, m0, gain, l_arr, nv,
+            block_n=block_n, b_tile=b_tile, lookahead_max=lookahead_max,
+            n_blocks=n_blocks, n_btiles=n_btiles, interpret=interpret,
+        )
 
     # Index maps. The stream tile ignores the (inner) bank axis, so Pallas
     # keeps it resident across all bank tiles of a data block — that is the
@@ -614,3 +838,89 @@ def streamsvm_scan_many_pallas(
         nv,
     )
     return w_out, s_out[:, 0], s_out[:, 1], m_out[:, 0]
+
+
+def _call_many_hbm(
+    X, Y, W0, s0, m0, gain, l_arr, nv,
+    *,
+    block_n: int,
+    b_tile: int,
+    lookahead_max: int | None,
+    n_blocks: int,
+    n_btiles: int,
+    interpret: bool,
+):
+    """Build the HBM-resident pallas_call: aliased ANY-space state + rings.
+
+    The bank / scalar state / lookahead windows enter as ANY-memory-space
+    inputs ALIASED to the outputs, so they are pre-initialized outside the
+    kernel (wsq is re-derived in-kernel on the first visit so the arithmetic
+    stays identical to the VMEM init) and updated in place by the ring's
+    write-backs. Per-step VMEM cost: the stream/sign tiles plus TWO
+    (b_tile, D) bank slots, two (4, b_tile) state slots and, with lookahead,
+    two (b_tile * L_max, D) window slots — independent of B.
+    """
+    b, d = W0.shape
+    # st rows: [r, xi2, wsq (computed in-kernel at i == 0), unused]
+    st0 = jnp.stack(
+        [s0[:, 0], s0[:, 1], jnp.zeros((b,), jnp.float32),
+         jnp.zeros((b,), jnp.float32)],
+        axis=0,
+    )  # (4, B)
+    m0_row = m0.reshape(1, b)
+    hbm_inputs = [W0, st0, m0_row]
+    rings = [
+        pltpu.VMEM((2, b_tile, d), jnp.float32),
+        pltpu.VMEM((2, 4, b_tile), jnp.float32),
+        pltpu.VMEM((2, 1, b_tile), jnp.int32),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, d), jnp.float32),
+        jax.ShapeDtypeStruct((4, b), jnp.float32),
+        jax.ShapeDtypeStruct((1, b), jnp.int32),
+    ]
+    if lookahead_max is not None:
+        hbm_inputs += [
+            jnp.zeros((1, b), jnp.int32),
+            jnp.zeros((b * lookahead_max, d), jnp.float32),
+        ]
+        rings += [
+            pltpu.VMEM((2, 1, b_tile), jnp.int32),
+            pltpu.VMEM((2, b_tile * lookahead_max, d), jnp.float32),
+        ]
+        out_shape += [
+            jax.ShapeDtypeStruct((1, b), jnp.int32),
+            jax.ShapeDtypeStruct((b * lookahead_max, d), jnp.float32),
+        ]
+    n_arrays = len(hbm_inputs)
+    n_small = 6  # x, ys, s0, gain, l, nv precede the ANY-space state arrays
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+
+    outs = pl.pallas_call(
+        functools.partial(
+            _kernel_many_hbm,
+            block_n=block_n,
+            b_tile=b_tile,
+            lookahead_max=lookahead_max,
+            n_blocks=n_blocks,
+            n_btiles=n_btiles,
+        ),
+        grid=(n_blocks, n_btiles),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((b_tile, block_n), lambda i, j: (j, i)),
+            pl.BlockSpec((b_tile, 4), lambda i, j: (j, 0)),
+            pl.BlockSpec((b_tile, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((b_tile, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ] + [any_spec] * n_arrays,
+        out_specs=[any_spec] * n_arrays,
+        out_shape=out_shape,
+        scratch_shapes=rings + [pltpu.SemaphoreType.DMA((n_arrays, 2, 2))],
+        input_output_aliases={n_small + a: a for a in range(n_arrays)},
+        interpret=interpret,
+    )(
+        X, Y, s0, gain.reshape(b, 1), l_arr, nv, *hbm_inputs
+    )
+    w_out, st_out, m_out = outs[0], outs[1], outs[2]
+    return w_out, st_out[0], st_out[1], m_out[0]

@@ -80,10 +80,14 @@ class BankServer:
 
     bank: a stacked ``Ball`` (``fit_bank``/``fit_ovr``/``fit_c_grid`` result
     or a restored checkpoint) or a plain (B, D) weight array.
-    epilogue/n_classes/k/q_block/b_tile/stream_dtype: the fused-kernel
-    serving configuration — see ``kernels.ops.predict_bank``. These are
-    static (fixed per server); the bank itself is traced, so ``swap_bank``
-    with a same-shape bank reuses the compiled kernel.
+    epilogue/n_classes/k/q_block/b_tile/stream_dtype/bank_resident: the
+    fused-kernel serving configuration — see ``kernels.ops.predict_bank``
+    (``bank_resident="hbm"`` serves the bank straight out of ANY/HBM space
+    through the kernel's 2-slot ring — the deploy shape for banks whose
+    (B, D) footprint exceeds the VMEM budget; "auto" picks that exactly
+    when it does). These are static (fixed per server); the bank itself is
+    traced, so ``swap_bank`` with a same-shape bank reuses the compiled
+    kernel — in any residency.
     """
 
     def __init__(
@@ -96,6 +100,7 @@ class BankServer:
         q_block: int = 256,
         b_tile: Optional[int] = None,
         stream_dtype=None,
+        bank_resident: str = "auto",
         interpret: Optional[bool] = None,
     ):
         self._w = self._bank_weights(bank)
@@ -121,6 +126,7 @@ class BankServer:
         self.q_block = int(q_block)
         self.b_tile = b_tile
         self.stream_dtype = stream_dtype
+        self.bank_resident = bank_resident
         self.interpret = interpret
         self.stats = ServerStats()
         self._queue: List[ScoreRequest] = []  # FIFO; head may be partial
@@ -256,6 +262,7 @@ class BankServer:
             q_block=self.q_block,
             b_tile=self.b_tile,
             stream_dtype=self.stream_dtype,
+            bank_resident=self.bank_resident,
             interpret=self.interpret,
         )
         parts = (out,) if self.epilogue == "scores" else out

@@ -182,6 +182,95 @@ def test_bf16_ovr_and_topk_run():
 
 
 # ---------------------------------------------------------------------------
+# HBM-resident bank: the serving twin of the training engine's ring layout
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("q,d,b,q_block,b_tile", [
+    (256, 64, 8, 128, 8),      # J=1: tile loads once, stays resident
+    (256, 64, 16, 128, 8),     # J=2: slot-pinned
+    (384, 33, 24, 128, 8),     # J=3: odd tile count cycling through 2 slots
+    (128, 64, 40, 128, 8),     # J=5, single query tile (prefetch chain only)
+    (300, 20, 37, 64, 8),      # ragged Q and B
+])
+def test_hbm_scores_bit_exact_with_vmem(q, d, b, q_block, b_tile):
+    """Serving the bank out of ANY/HBM space through the async-copy ring
+    must not change a single bit of f32 output."""
+    X, W = _qw(q, d, b, seed=q + d + b)
+    kw = dict(q_block=q_block, b_tile=b_tile)
+    vmem = predict_bank(X, W, bank_resident="vmem", **kw)
+    hbm = predict_bank(X, W, bank_resident="hbm", **kw)
+    np.testing.assert_array_equal(np.asarray(hbm), np.asarray(vmem))
+    np.testing.assert_array_equal(np.asarray(hbm), np.asarray(X @ W.T))
+
+
+def test_hbm_ovr_and_topk_bit_exact_with_vmem():
+    X, W = _qw(200, 24, 30, seed=77)
+    for kw in (
+        dict(epilogue="ovr", n_classes=10, q_block=64, b_tile=16),
+        dict(epilogue="topk", k=7, q_block=64, b_tile=8),
+    ):
+        v = predict_bank(X, W, bank_resident="vmem", **kw)
+        h = predict_bank(X, W, bank_resident="hbm", **kw)
+        for a, c in zip(v, h):
+            np.testing.assert_array_equal(np.asarray(c), np.asarray(a))
+
+
+def test_hbm_bf16_query_tiles_bit_exact_with_vmem():
+    """bf16 rounds the queries identically in both residencies (the ring
+    carries the f32 bank)."""
+    X, W = _qw(256, 48, 24, seed=9)
+    v = predict_bank(X, W, q_block=128, b_tile=8, stream_dtype="bf16",
+                     bank_resident="vmem")
+    h = predict_bank(X, W, q_block=128, b_tile=8, stream_dtype="bf16",
+                     bank_resident="hbm")
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(v))
+
+
+def test_predict_auto_residency_follows_bank_footprint():
+    """auto serves hbm exactly when the full (B, D) f32 bank footprint
+    exceeds the budget — the dominant term of the training policy's
+    boundary — and the routing never changes the scores."""
+    X, W = _qw(100, 64, 512, seed=4)
+    base = predict_bank(X, W, q_block=64, b_tile=8)
+    dp = 128  # D=64 pads to the 128-lane multiple
+    footprint = W.shape[0] * dp * 4  # 256 KiB — dwarfs the per-step set
+    from repro.kernels.ops import predict_vmem_bytes
+
+    working = sum(
+        predict_vmem_bytes(512, 64, q_block=64, b_tile=8).values()
+    )
+    assert working < footprint  # the budget window below exists
+    over = predict_bank(X, W, q_block=64, b_tile=8,
+                        vmem_budget_bytes=footprint - 1)  # -> hbm
+    at = predict_bank(X, W, q_block=64, b_tile=8,
+                      vmem_budget_bytes=footprint)  # -> vmem
+    np.testing.assert_array_equal(np.asarray(over), np.asarray(base))
+    np.testing.assert_array_equal(np.asarray(at), np.asarray(base))
+
+
+def test_predict_preflight_and_residency_errors():
+    X, W = _qw(32, 8, 6, seed=0)
+    with pytest.raises(ValueError, match="bank_resident"):
+        predict_bank(X, W, bank_resident="sram")
+    with pytest.raises(ValueError, match="breakdown"):
+        predict_bank(X, W, q_block=256, vmem_budget_bytes=1_000)
+
+
+def test_bank_server_hbm_serves_bit_exact():
+    """End-to-end serving twin: an HBM-resident BankServer microbatches to
+    the same bits as the vmem one (and as the direct readout)."""
+    from repro.serve import BankServer
+
+    X, W = _qw(150, 20, 30, seed=15)
+    kw = dict(epilogue="ovr", n_classes=10, q_block=64, b_tile=16)
+    h = BankServer(W, bank_resident="hbm", **kw).score(np.asarray(X))
+    v = BankServer(W, bank_resident="vmem", **kw).score(np.asarray(X))
+    for a, c in zip(v, h):
+        np.testing.assert_array_equal(c, a)
+
+
+# ---------------------------------------------------------------------------
 # Compile-cache regression: new bank, same shape -> no recompile
 # ---------------------------------------------------------------------------
 
@@ -198,6 +287,12 @@ def test_no_recompile_across_banks_of_same_shape():
         _, W2 = _qw(64, 16, 8, seed=seed)
         predict_bank(X, W2, epilogue="topk", k=2, q_block=64, b_tile=8)
     assert predict_bank._cache_size() == start + 2
+    # a residency switch is a new (static) entry; swapping banks within the
+    # hbm residency is not — hot-swap never stalls on a recompile there either
+    for seed in (2, 3):
+        _, W2 = _qw(64, 16, 8, seed=seed)
+        predict_bank(X, W2, q_block=64, b_tile=8, bank_resident="hbm")
+    assert predict_bank._cache_size() == start + 3
 
 
 # ---------------------------------------------------------------------------
