@@ -45,11 +45,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import predict_bank
-from repro.kernels.ops import bank_tiling, ovr_group_tiling, predict_vmem_bytes
+from repro.kernels import predict_bank, predict_kernel_bank
+from repro.kernels.ops import (
+    bank_tiling,
+    gram_tiling,
+    ovr_group_tiling,
+    predict_vmem_bytes,
+)
 from repro.serve import BankServer
 
-SCHEMA = "streamsvm-bench-serving/v1"
+SCHEMA = "streamsvm-bench-serving/v2"
 DEFAULT_HBM_PEAK_GBPS = 819.0  # TPU v5e, per chip — same as BENCH_engine
 _DTYPE_BYTES = {"f32": 4, "bf16": 2}
 
@@ -67,8 +72,8 @@ def hbm_peak_gbps(override=None) -> float:
 # this (see .github/workflows/ci.yml bench-smoke).
 RESULT_KEYS = (
     "name", "Q", "D", "B", "q_block", "b_tile", "n_bank_tiles", "epilogue",
-    "n_classes", "k", "stream_dtype", "path", "bank_resident",
-    "vmem_working_set_bytes", "seconds_per_batch",
+    "n_classes", "k", "stream_dtype", "path", "bank_resident", "kernel",
+    "coreset_size", "vmem_working_set_bytes", "seconds_per_batch",
     "queries_per_s", "model_scores_per_s", "bytes", "query_passes",
     "naive_query_bytes", "achieved_gbps", "hbm_peak_gbps",
     "roofline_seconds", "roofline_frac", "dma_overlap_efficiency",
@@ -84,7 +89,8 @@ def out_bytes(Q, B, epilogue, n_classes, k):
     return Q * k * 8  # topk values + ids
 
 
-def modeled_bytes(Q, D, B, q_block, epilogue, n_classes, k, stream_dtype):
+def modeled_bytes(Q, D, B, q_block, epilogue, n_classes, k, stream_dtype,
+                  kernel=None, coreset_size=None):
     """HBM bytes per batch under the predict engine's movement model.
 
     queries: each (q_block, D) tile DMA'd once (data-major grid) — Q*D at
@@ -95,6 +101,19 @@ def modeled_bytes(Q, D, B, q_block, epilogue, n_classes, k, stream_dtype):
     """
     sz = _DTYPE_BYTES[stream_dtype]
     n_q_blocks = -(-Q // q_block)
+    if kernel is not None:
+        # Kernelized bank: the (B*S, D) core-set operand replaces the (B, D)
+        # weight rows in the Gram launch (re-fetched once per resident query
+        # tile, like the linear bank), the (Q, B*S) kernel block round-trips
+        # once between the Gram launch and the coefficient contraction, and
+        # the (B, S) coefficients are read once per query tile.
+        return {
+            "queries": Q * D * sz,
+            "bank": n_q_blocks * B * coreset_size * D * 4,
+            "kernel_block": 2 * Q * B * coreset_size * 4,
+            "coef": n_q_blocks * B * coreset_size * 4,
+            "out": out_bytes(Q, B, epilogue, n_classes, k),
+        }
     return {
         "queries": Q * D * sz,
         "bank": n_q_blocks * B * D * 4,
@@ -109,57 +128,112 @@ def bench_one(cfg, reps, interpret, peak_gbps):
     k = cfg.get("k")
     path = cfg.get("path", "ops")
     bank_resident = cfg.get("bank_resident", "vmem")
+    kernel = cfg.get("kernel")
+    coreset_size = cfg.get("coreset_size")
+    sdt = cfg["stream_dtype"] if cfg["stream_dtype"] != "f32" else None
     rng = np.random.default_rng(0)
     X = rng.normal(size=(Q, D)).astype(np.float32)
     W = rng.normal(size=(B, D)).astype(np.float32)
-    kw = dict(
-        epilogue=epilogue,
-        n_classes=n_classes,
-        k=k,
-        q_block=cfg["q_block"],
-        b_tile=cfg["b_tile"],
-        stream_dtype=cfg["stream_dtype"] if cfg["stream_dtype"] != "f32" else None,
-        bank_resident=bank_resident,
-        interpret=interpret,
-    )
-    if path == "server":
-        # end-to-end: FIFO packing of ragged requests + the kernel — a new
-        # server per rep so admission/packing overhead is inside the clock
-        sizes = _ragged_sizes(Q)
+    if kernel is not None:
+        # Kernelized bank: a synthetic core-set buffer of the benchmarked
+        # shape (serving cost depends only on (B, S, D), not the fit).
+        from repro.core import KernelBank
 
-        def run():
-            server = BankServer(W, **kw)
-            reqs = [server.submit(X[lo:hi]) for lo, hi in sizes]
-            server.run()
-            return reqs[-1].result
+        S = coreset_size
+        points = jnp.asarray(rng.normal(size=(B, S, D)).astype(np.float32))
+        coef = jnp.asarray(
+            rng.normal(size=(B, S)).astype(np.float32) / np.sqrt(S)
+        )
+        kkw = dict(
+            kernel=kernel, gamma=0.5, epilogue=epilogue, n_classes=n_classes,
+            k=k, q_block=cfg["q_block"], stream_dtype=sdt,
+            interpret=interpret,
+        )
+        if path == "server":
+            kb = KernelBank(
+                idx=jnp.zeros((B, S), jnp.int32), coef=coef, points=points,
+                q=jnp.ones((B,)), r=jnp.ones((B,)), xi2=jnp.ones((B,)),
+                m=jnp.full((B,), S, jnp.int32),
+            )
+            sizes = _ragged_sizes(Q)
+            skw = dict(kkw)
+            skw.pop("kernel"), skw.pop("gamma")
+
+            def run():
+                server = BankServer(kb, kernel=kernel, gamma=0.5, **skw)
+                reqs = [server.submit(X[lo:hi]) for lo, hi in sizes]
+                server.run()
+                return reqs[-1].result
+        else:
+            run = lambda: jax.block_until_ready(
+                predict_kernel_bank(jnp.asarray(X), points, coef, **kkw)
+            )
     else:
-        run = lambda: jax.block_until_ready(predict_bank(jnp.asarray(X), jnp.asarray(W), **kw))
+        kw = dict(
+            epilogue=epilogue,
+            n_classes=n_classes,
+            k=k,
+            q_block=cfg["q_block"],
+            b_tile=cfg["b_tile"],
+            stream_dtype=sdt,
+            bank_resident=bank_resident,
+            interpret=interpret,
+        )
+        if path == "server":
+            # end-to-end: FIFO packing of ragged requests + the kernel — a
+            # new server per rep so admission/packing overhead is inside the
+            # clock
+            sizes = _ragged_sizes(Q)
+
+            def run():
+                server = BankServer(W, **kw)
+                reqs = [server.submit(X[lo:hi]) for lo, hi in sizes]
+                server.run()
+                return reqs[-1].result
+        else:
+            run = lambda: jax.block_until_ready(
+                predict_bank(jnp.asarray(X), jnp.asarray(W), **kw)
+            )
     run()  # compile
     t0 = time.perf_counter()
     for _ in range(reps):
         run()
     sec = (time.perf_counter() - t0) / reps
 
-    if epilogue == "ovr":
+    if kernel is not None:
+        b_tile_eff, n_btiles = None, 1
+        bank_resident = "vmem"
+        # Working-set estimate: the Gram launch's operand tiles + f32
+        # accumulator, plus the coefficient contraction's inputs.
+        bm_, bn_ = gram_tiling(Q, B * coreset_size, cfg["q_block"], 256)
+        bk = 512
+        working_set = (
+            (bm_ * bk + bn_ * bk + bm_ * bn_) * 4
+            + B * coreset_size * 4
+        )
+    elif epilogue == "ovr":
         nc_pad, g_tile, gp = ovr_group_tiling(B, n_classes, cfg["b_tile"])
         b_tile_eff, n_btiles = g_tile * nc_pad, gp // g_tile
     else:
         b_tile_eff, n_btiles = bank_tiling(B, cfg["b_tile"])
     by = modeled_bytes(
-        Q, D, B, cfg["q_block"], epilogue, n_classes, k, cfg["stream_dtype"]
+        Q, D, B, cfg["q_block"], epilogue, n_classes, k, cfg["stream_dtype"],
+        kernel=kernel, coreset_size=coreset_size,
     )
     total = sum(by.values())
     roofline_sec = total / (peak_gbps * 1e9)
-    working_set = sum(
-        predict_vmem_bytes(
-            B, D, q_block=cfg["q_block"], b_tile=cfg["b_tile"],
-            stream_dtype=(
-                cfg["stream_dtype"] if cfg["stream_dtype"] != "f32" else None
-            ),
-            epilogue=epilogue, n_classes=n_classes, k=k,
-            bank_resident=bank_resident,
-        ).values()
-    )
+    if kernel is None:
+        working_set = sum(
+            predict_vmem_bytes(
+                B, D, q_block=cfg["q_block"], b_tile=cfg["b_tile"],
+                stream_dtype=(
+                    cfg["stream_dtype"] if cfg["stream_dtype"] != "f32"
+                    else None
+                ),
+                epilogue=epilogue, n_classes=n_classes, k=k,
+                bank_resident=bank_resident,
+            ).values()
+        )
     return {
         "name": cfg["name"],
         "Q": Q,
@@ -174,6 +248,8 @@ def bench_one(cfg, reps, interpret, peak_gbps):
         "stream_dtype": cfg["stream_dtype"],
         "path": path,
         "bank_resident": bank_resident,
+        "kernel": kernel,
+        "coreset_size": coreset_size,
         "vmem_working_set_bytes": working_set,
         "seconds_per_batch": sec,
         "queries_per_s": Q / sec,
@@ -225,6 +301,13 @@ def sweep(smoke: bool):
             dict(name="smoke_server_ovr", **base, B=48, b_tile=16,
                  stream_dtype="f32", epilogue="ovr", n_classes=16,
                  path="server"),
+            # kernelized bank served through the fused Gram epilogue (CI
+            # asserts this row + its fields)
+            dict(name="smoke_kernel_rbf", **base, B=48, b_tile=None,
+                 stream_dtype="f32", kernel="rbf", coreset_size=16),
+            dict(name="smoke_server_kernel_rbf", **base, B=48, b_tile=None,
+                 stream_dtype="f32", kernel="rbf", coreset_size=16,
+                 path="server"),
         ]
     base = dict(D=128, q_block=256)
     return [
@@ -258,6 +341,15 @@ def sweep(smoke: bool):
         # end-to-end server (packing overhead included)
         dict(name="serve_server_ovr_200c_x3", Q=4096, **base, B=600,
              b_tile=200, stream_dtype="f32", epilogue="ovr", n_classes=200,
+             path="server"),
+        # kernelized core-set bank through the fused Gram epilogues
+        dict(name="serve_kernel_rbf_b64_s64", Q=4096, **base, B=64,
+             b_tile=None, stream_dtype="f32", kernel="rbf", coreset_size=64),
+        dict(name="serve_kernel_linear_b64_s64", Q=4096, **base, B=64,
+             b_tile=None, stream_dtype="f32", kernel="linear",
+             coreset_size=64),
+        dict(name="serve_server_kernel_rbf_b64_s64", Q=4096, **base, B=64,
+             b_tile=None, stream_dtype="f32", kernel="rbf", coreset_size=64,
              path="server"),
     ]
 
@@ -335,6 +427,22 @@ def validate(report: dict):
             raise ValueError(
                 f"{row['name']}: unknown bank_resident "
                 f"{row['bank_resident']!r}"
+            )
+        if row["kernel"] not in (None, "linear", "rbf"):
+            raise ValueError(
+                f"{row['name']}: unknown kernel {row['kernel']!r}"
+            )
+        if row["kernel"] is not None and not (
+            isinstance(row["coreset_size"], int) and row["coreset_size"] >= 1
+        ):
+            raise ValueError(
+                f"{row['name']}: kernelized rows need coreset_size >= 1, "
+                f"got {row['coreset_size']!r}"
+            )
+        if row["kernel"] is None and row["coreset_size"] is not None:
+            raise ValueError(
+                f"{row['name']}: coreset_size={row['coreset_size']!r} "
+                "without a kernel"
             )
         if not (
             isinstance(row["vmem_working_set_bytes"], int)

@@ -55,9 +55,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import streamsvm_fit_many
-from repro.kernels.ops import bank_tiling, engine_vmem_bytes
+from repro.kernels.ops import bank_tiling, engine_vmem_bytes, gram_tiling
 
-SCHEMA = "streamsvm-bench-engine/v1"
+SCHEMA = "streamsvm-bench-engine/v2"
 DEFAULT_HBM_PEAK_GBPS = 819.0  # TPU v5e, per chip
 _DTYPE_BYTES = {"f32": 4, "bf16": 2}
 
@@ -75,16 +75,17 @@ def hbm_peak_gbps(override=None) -> float:
 # this (see .github/workflows/ci.yml bench-smoke).
 RESULT_KEYS = (
     "name", "B", "D", "N", "block_n", "b_tile", "n_bank_tiles", "n_shards",
-    "stream_dtype", "variant", "lookahead", "bank_resident",
-    "vmem_working_set_bytes", "seconds_per_pass", "rows_per_s",
-    "model_rows_per_s", "bytes", "stream_passes", "naive_stream_bytes",
-    "achieved_gbps", "hbm_peak_gbps", "roofline_seconds", "roofline_frac",
-    "dma_overlap_efficiency",
+    "stream_dtype", "variant", "lookahead", "bank_resident", "kernel",
+    "coreset_size", "vmem_working_set_bytes", "seconds_per_pass",
+    "rows_per_s", "model_rows_per_s", "bytes", "stream_passes",
+    "naive_stream_bytes", "achieved_gbps", "hbm_peak_gbps",
+    "roofline_seconds", "roofline_frac", "dma_overlap_efficiency",
 )
 
 
 def modeled_bytes(B, D, N, stream_dtype, n_shards=1, *, block_n=256,
-                  b_tile=None, bank_resident="vmem", lookahead=None):
+                  b_tile=None, bank_resident="vmem", lookahead=None,
+                  kernel=None, coreset_size=None):
     """PER-DEVICE HBM bytes per pass under the tiled engine's movement model.
 
     stream: each (block_n, D) tile DMA'd once (data-major grid) — N*D at the
@@ -104,6 +105,21 @@ def modeled_bytes(B, D, N, stream_dtype, n_shards=1, *, block_n=256,
     """
     sz = _DTYPE_BYTES[stream_dtype]
     shard_n = -(-N // n_shards)
+    if kernel is not None:
+        # Kernelized bank: the stream is still read once (data-major tiles);
+        # every tile additionally gathers each model's (S, D) core set back
+        # from HBM (the buffer indices change as slots fill/evict, so the
+        # gather cannot persist across tiles) and writes the two Gram blocks
+        # the recursion reads. State out is the (B, S, D) core-set buffer.
+        n_tiles = -(-shard_n // block_n)
+        return {
+            "stream": shard_n * D * sz,
+            "signs": B * shard_n * sz,
+            "coreset_gather": n_tiles * B * coreset_size * D * 4,
+            "gram_blocks": n_tiles
+            * (block_n * B * coreset_size + block_n * block_n) * 4,
+            "bank": B * coreset_size * (D + 1) * 4,
+        }
     _, n_btiles = bank_tiling(B, b_tile)
     trips = (
         -(-shard_n // block_n)
@@ -131,12 +147,73 @@ def bench_one(cfg, reps, interpret, peak_gbps):
     cs = jnp.asarray(np.full(B, 10.0, np.float32))
     variant = cfg.get("variant", "exact")
     lookahead = cfg.get("lookahead")
+    kernel = cfg.get("kernel")
+    coreset_size = cfg.get("coreset_size")
+    sdt = cfg["stream_dtype"] if cfg["stream_dtype"] != "f32" else None
+    if kernel is not None:
+        from repro.core import fit_kernel_bank
+
+        fit = lambda X_, Y_, cs_: fit_kernel_bank(
+            X_, Y_, cs_, kernel=kernel, gamma=0.5,
+            coreset_size=coreset_size, variant=variant,
+            block_n=cfg["block_n"], stream_dtype=sdt, interpret=interpret,
+        )
+        run = lambda: jax.block_until_ready(fit(X, Y, cs))
+        run()  # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            run()
+        sec = (time.perf_counter() - t0) / reps
+        by = modeled_bytes(
+            B, D, N, cfg["stream_dtype"], block_n=cfg["block_n"],
+            kernel=kernel, coreset_size=coreset_size,
+        )
+        total = sum(by.values())
+        roofline_sec = total / (peak_gbps * 1e9)
+        # Working-set estimate: the dominant resident blocks are the two
+        # fused Gram launches' tiles (A/B operand tiles + f32 accumulator)
+        # plus the streamed data tile itself.
+        bm_, bn_ = gram_tiling(cfg["block_n"], B * coreset_size, 256, 256)
+        bk = 512
+        working_set = (
+            (bm_ * bk + bn_ * bk + bm_ * bn_) * 4 + cfg["block_n"] * D * 4
+        )
+        return {
+            "name": cfg["name"],
+            "B": B,
+            "D": D,
+            "N": N,
+            "block_n": cfg["block_n"],
+            "b_tile": None,
+            "n_bank_tiles": 1,
+            "n_shards": 1,
+            "stream_dtype": cfg["stream_dtype"],
+            "variant": variant,
+            "lookahead": None,
+            "bank_resident": "vmem",
+            "kernel": kernel,
+            "coreset_size": coreset_size,
+            "vmem_working_set_bytes": working_set,
+            "seconds_per_pass": sec,
+            "rows_per_s": N / sec,
+            "model_rows_per_s": B * N / sec,
+            "bytes": {**by, "total": total},
+            "stream_passes": 1.0,
+            # a per-model dense kernelized fit would re-read the stream B
+            # times (and carry O(N) coefficients); the bank reads it once
+            "naive_stream_bytes": B * by["stream"],
+            "achieved_gbps": total / sec / 1e9,
+            "hbm_peak_gbps": peak_gbps,
+            "roofline_seconds": roofline_sec,
+            "roofline_frac": roofline_sec / sec,
+            "dma_overlap_efficiency": None,
+        }
     kw = dict(
         variant=variant,
         lookahead=lookahead,
         block_n=cfg["block_n"],
         b_tile=cfg["b_tile"],
-        stream_dtype=cfg["stream_dtype"] if cfg["stream_dtype"] != "f32" else None,
+        stream_dtype=sdt,
         bank_resident=bank_resident,
         interpret=interpret,
     )
@@ -189,6 +266,8 @@ def bench_one(cfg, reps, interpret, peak_gbps):
         "variant": variant,
         "lookahead": lookahead,
         "bank_resident": bank_resident,
+        "kernel": None,
+        "coreset_size": None,
         "vmem_working_set_bytes": working_set,
         "seconds_per_pass": sec,
         "rows_per_s": N / sec,
@@ -223,6 +302,10 @@ def sweep(smoke: bool):
             # forces 8 host devices via XLA_FLAGS so this row is measured)
             dict(name="smoke_sharded_s8", **base, b_tile=8, stream_dtype="f32",
                  n_shards=8),
+            # kernelized core-set bank: same one-pass read, RBF Gram blocks
+            # through the fused epilogue (CI asserts this row + its fields)
+            dict(name="smoke_kernel_rbf", **base, b_tile=None,
+                 stream_dtype="f32", kernel="rbf", coreset_size=32),
         ]
     base = dict(D=128, N=4096, block_n=256)
     cfgs = [
@@ -264,6 +347,16 @@ def sweep(smoke: bool):
              stream_dtype="f32", n_shards=8),
         dict(name="sharded_b256_t32_s8_bf16", B=256, **base, b_tile=32,
              stream_dtype="bf16", n_shards=8),
+        # kernelized core-set bank: bounded O(B*S*D) state, per-tile RBF /
+        # linear Gram blocks through the fused epilogue, one stream pass
+        dict(name="kernel_rbf_b16_s64", B=16, **base, b_tile=None,
+             stream_dtype="f32", kernel="rbf", coreset_size=64),
+        dict(name="kernel_rbf_b64_s64", B=64, **base, b_tile=None,
+             stream_dtype="f32", kernel="rbf", coreset_size=64),
+        dict(name="kernel_linear_b16_s64", B=16, **base, b_tile=None,
+             stream_dtype="f32", kernel="linear", coreset_size=64),
+        dict(name="kernel_rbf_b16_s64_bf16", B=16, **base, b_tile=None,
+             stream_dtype="bf16", kernel="rbf", coreset_size=64),
     ]
     return cfgs
 
@@ -353,6 +446,22 @@ def validate(report: dict):
             raise ValueError(
                 f"{row['name']}: unknown bank_resident "
                 f"{row['bank_resident']!r}"
+            )
+        if row["kernel"] not in (None, "linear", "rbf"):
+            raise ValueError(
+                f"{row['name']}: unknown kernel {row['kernel']!r}"
+            )
+        if row["kernel"] is not None and not (
+            isinstance(row["coreset_size"], int) and row["coreset_size"] >= 1
+        ):
+            raise ValueError(
+                f"{row['name']}: kernelized rows need coreset_size >= 1, "
+                f"got {row['coreset_size']!r}"
+            )
+        if row["kernel"] is None and row["coreset_size"] is not None:
+            raise ValueError(
+                f"{row['name']}: coreset_size={row['coreset_size']!r} "
+                "without a kernel"
             )
         if not (
             isinstance(row["vmem_working_set_bytes"], int)

@@ -23,6 +23,12 @@ from .streamsvm import (
 )
 from .qp import solve_meb_ball_points
 from .kernelized import KernelBall, fit_kernelized, linear_kernel, rbf_kernel, linear_weights
+from .kernel_bank import (
+    KernelBank,
+    fit_kernel_bank,
+    kernel_bank_decision,
+    save_kernel_bank,
+)
 from .distributed import fit_bank_sharded, fit_sharded
 from .multiball import (
     MultiBall,
@@ -37,6 +43,7 @@ from .multiclass import fit_ovr, ovr_signs, predict_c_grid, predict_ovr, fit_c_g
 __all__ = [
     "Ball",
     "KernelBall",
+    "KernelBank",
     "StreamCheckpoint",
     "accuracy",
     "bank_stack",
@@ -50,6 +57,7 @@ __all__ = [
     "fit_c_grid",
     "fit_chunked",
     "fit_chunked_many",
+    "fit_kernel_bank",
     "fit_kernelized",
     "fit_lookahead",
     "fit_lookahead_ball",
@@ -57,6 +65,7 @@ __all__ = [
     "fit_sharded",
     "fold_merge",
     "init_ball",
+    "kernel_bank_decision",
     "linear_kernel",
     "linear_weights",
     "make_ball",
@@ -68,5 +77,6 @@ __all__ = [
     "predict_c_grid",
     "predict_ovr",
     "rbf_kernel",
+    "save_kernel_bank",
     "solve_meb_ball_points",
 ]

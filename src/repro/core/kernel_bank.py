@@ -1,0 +1,312 @@
+"""One-pass kernelized bank: B core-set CVMs per stream read (paper Sec 4.2).
+
+The dense kernelized StreamSVM (``kernelized.fit_kernelized``) keeps the full
+N-vector of Lagrange coefficients — O(N) memory and O(N) kernel rows per
+step, which forfeits the paper's constant-storage claim. This module is the
+bank engine's kernel-space twin with BOUNDED memory: every model of a B-model
+bank keeps a fixed-size **core-set buffer** of at most ``coreset_size`` (S)
+stream rows,
+
+  idx:  (B, S) int32  — stream indices of the buffered core vectors (-1 free)
+  coef: (B, S) f32    — their signed Lagrange coefficients,
+
+so state is O(B * S * D) no matter how long the stream, and the stream is
+read ONCE for all B models (classes x C-grid flatten onto the bank axis,
+exactly like ``fit_bank``).
+
+Per stream tile the engine computes two kernel blocks through the tiled
+Pallas Gram kernel (``kernels.ops.gram``, fused linear/RBF epilogues):
+
+  K_cs = k(tile, core sets)   (block_n, B, S)  — one gram call for ALL models
+  K_tt = k(tile, tile)        (block_n, block_n)
+
+and then runs the O(block_n * B * S) coefficient recursion (a lax.scan of
+cheap elementwise work — the MXU-shaped O(block_n * B * S * D) kernel
+evaluations all live in the gram calls). A row inserted mid-tile reads its
+kernel values against later rows from K_tt, so the recursion is exactly
+row-at-a-time despite the tiled evaluation.
+
+When a model's buffer is full, the incoming core vector **evicts the
+smallest-|coef| slot** — the bounded-buffer compression step ("On Coresets
+for SVMs", PAPERS.md): the recursion scales every coefficient by (1 - s) at
+each absorb, so the smallest |coef| is the slot contributing least to the
+center. The running center norm q keeps the dense recursion (it needs only
+g and k(x, x)), so with ``coreset_size >= N`` nothing is ever evicted and
+the engine reproduces ``fit_kernelized`` exactly — property-tested, per
+model, in tests/test_kernel_bank.py.
+
+Kernels must satisfy K(x, x) ~ kappa (constant diagonal); the RBF epilogue
+clamps d^2 at 0 so duplicates cannot push K above kappa (the bug fixed in
+``kernelized.rbf_kernel`` this PR).
+
+Serving rides ``kernels.ops.predict_kernel_bank`` (same fused Gram
+epilogues against the stored core-set points) and ``serve.BankServer``
+(kernel-bank checkpoints carry ``meta={"bank_kind": "kernel", ...}``).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_KERNELS = ("linear", "rbf")
+
+
+class KernelBank(NamedTuple):
+    """Streaming state / result of the kernelized bank engine.
+
+    idx:    (B, S) int32 — stream index of each buffered core vector, -1 for
+            a free slot.
+    coef:   (B, S) f32 — signed Lagrange coefficients (exactly 0 in free
+            slots, so free slots never contribute to any readout).
+    points: (B, S, D) f32 — the buffered core vectors themselves (zeros in
+            free slots), gathered once at the end of the fit so checkpoints
+            are self-contained (serving never needs the stream back).
+    q:      (B,) running |center|^2 (dense recursion — see module docstring).
+    r:      (B,) radius.
+    xi2:    (B,) slack-block squared norm.
+    m:      (B,) int32 core-vector absorb count (the paper's M).
+    """
+
+    idx: jax.Array
+    coef: jax.Array
+    points: jax.Array
+    q: jax.Array
+    r: jax.Array
+    xi2: jax.Array
+    m: jax.Array
+
+
+def _kdiag(X, kernel: str, gamma: float):
+    """k(x, x) per row, matching the Gram epilogue's arithmetic."""
+    x2 = jnp.sum(X.astype(jnp.float32) ** 2, axis=-1)
+    if kernel == "rbf":
+        return jnp.exp(-gamma * jnp.maximum(x2 + x2 - 2.0 * x2, 0.0))
+    return x2
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "kernel", "gamma", "coreset_size", "variant", "block_n",
+        "stream_dtype", "interpret",
+    ),
+)
+def fit_kernel_bank(
+    X: jax.Array,
+    Y: jax.Array,
+    cs,
+    *,
+    kernel: str = "rbf",
+    gamma: float = 1.0,
+    coreset_size: int = 64,
+    variant: str = "exact",
+    block_n: int = 256,
+    stream_dtype=None,
+    interpret: bool | None = None,
+) -> KernelBank:
+    """One-pass kernelized Algorithm 1 for a bank of B models.
+
+    X: (N, D) shared stream; Y: (B, N) per-model label signs in {-1, 0, +1}
+    (0 marks a row inert for that model — the same padding contract as the
+    linear engine; row 0 seeds every model, so ``Y[:, 0]`` must be +-1).
+    cs: scalar or (B,) per-model C (traced — a C sweep reuses one
+    compilation; ``kernel``/``gamma``/``coreset_size`` are static, so those
+    sweeps recompile).
+
+    kernel: "rbf" (K = exp(-gamma d^2), d^2 clamped at 0) or "linear".
+    coreset_size: S — the per-model buffer bound. With S >= N the buffer
+    never evicts and the fit equals the dense ``fit_kernelized`` per model;
+    smaller S trades accuracy for O(B*S*D) state via smallest-|coef|
+    eviction.
+    variant: "exact" / "paper-listing" — Algorithm 1's slack gain.
+    block_n / stream_dtype / interpret: the tiling and dtype knobs of the
+    linear engine. ``stream_dtype="bf16"`` rounds the streamed tiles (the
+    Gram operand) to bf16; buffered core-set points and all state stay f32.
+    """
+    n, d = X.shape
+    b, n_y = Y.shape
+    if n_y != n:
+        raise ValueError(
+            f"Y must be (B, N) sign rows matching X: got Y.shape={Y.shape}, "
+            f"X.shape={X.shape}"
+        )
+    if kernel not in _KERNELS:
+        raise ValueError(
+            f"unknown kernel {kernel!r}; expected one of {_KERNELS}"
+        )
+    if variant not in ("exact", "paper-listing"):
+        raise ValueError(
+            f"unknown variant {variant!r}; expected 'exact' or "
+            "'paper-listing'"
+        )
+    s_size = int(coreset_size)
+    if s_size < 1:
+        raise ValueError(f"coreset_size must be >= 1, got {coreset_size}")
+    from repro.kernels.ops import _resolve_stream_dtype, gram
+
+    sdt = _resolve_stream_dtype(stream_dtype)
+    Xf = X.astype(jnp.float32)
+    cs = jnp.broadcast_to(jnp.asarray(cs, jnp.float32), (b,))
+    c_inv = 1.0 / cs
+    gain = c_inv if variant == "exact" else jnp.ones_like(c_inv)
+
+    # Init (paper line 3) from row 0, per model: one core vector, coef y0.
+    idx0 = jnp.full((b, s_size), -1, jnp.int32).at[:, 0].set(0)
+    coef0 = jnp.zeros((b, s_size), jnp.float32).at[:, 0].set(
+        Y[:, 0].astype(jnp.float32)
+    )
+    q0 = jnp.broadcast_to(_kdiag(Xf[0], kernel, gamma), (b,))
+    state0 = (
+        idx0, coef0, q0,
+        jnp.zeros((b,), jnp.float32),  # r
+        gain,                          # xi2 = 1/C (exact) or 1
+        jnp.ones((b,), jnp.int32),     # m
+    )
+    ns = n - 1
+    if ns == 0:
+        return _finish(Xf, state0)
+
+    # Tile rows 1..N-1; padded rows are masked invalid.
+    n_tiles = -(-ns // block_n)
+    pad = n_tiles * block_n - ns
+    Xt = jnp.pad(Xf[1:], ((0, pad), (0, 0))).reshape(n_tiles, block_n, d)
+    # Y was (B, N); drop the consumed row 0 before padding.
+    Yt = (
+        jnp.pad(Y[:, 1:].astype(jnp.float32), ((0, 0), (0, pad)))
+        .reshape(b, n_tiles, block_n)
+        .transpose(1, 0, 2)
+    )
+    valid = (jnp.arange(n_tiles * block_n) < ns).reshape(n_tiles, block_n)
+    base = (1 + jnp.arange(n_tiles * block_n, dtype=jnp.int32)).reshape(
+        n_tiles, block_n
+    )
+
+    def tile_body(carry, xs):
+        idx, coef, q, r, xi2, m = carry
+        x_tile, y_tile, base_t, valid_t = xs
+        x_stream = x_tile if sdt is None else x_tile.astype(sdt)
+        # Core-set rows at tile entry, gathered once; free slots read row 0
+        # but are zeroed (their coef is 0 anyway — this keeps the gather
+        # deterministic).
+        xc = jnp.where(
+            (idx >= 0)[..., None], Xf[jnp.clip(idx, 0)], 0.0
+        )  # (B, S, D)
+        # ONE fused Gram launch covers every model's core set...
+        k_cs = gram(
+            x_stream, xc.reshape(b * s_size, d),
+            epilogue=kernel, gamma=gamma, interpret=interpret,
+        ).reshape(block_n, b, s_size)
+        # ...and one more covers rows inserted mid-tile.
+        k_tt = gram(
+            x_stream, x_stream, epilogue=kernel, gamma=gamma,
+            interpret=interpret,
+        )
+        kdiag_t = jnp.diagonal(k_tt)
+
+        def row_body(rcarry, i):
+            idx, coef, q, r, xi2, m, intile = rcarry
+            # Kernel row of each buffered core vector against stream row i:
+            # from K_tt if the slot was filled earlier in this tile, else
+            # from the tile-entry K_cs block.
+            kv = jnp.where(
+                intile >= 0, k_tt[jnp.clip(intile, 0), i], k_cs[i]
+            )  # (B, S)
+            g = jnp.sum(coef * kv, axis=1)
+            yn = y_tile[:, i]
+            d2 = q - 2.0 * yn * g + kdiag_t[i] + xi2 + c_inv
+            dist = jnp.sqrt(jnp.maximum(d2, 1e-12))
+            upd = jnp.logical_and(
+                dist >= r, jnp.logical_and(valid_t[i], yn != 0)
+            )
+            s = jnp.where(upd, 0.5 * (1.0 - r / dist), 0.0)
+            # Slot choice: free slots carry coef == 0 so argmin|coef| finds
+            # them first; with a full buffer this IS the coreset-compression
+            # eviction (the uniform (1-s) scaling preserves the ordering).
+            slot = jnp.argmin(jnp.abs(coef), axis=1)
+            hit = jnp.logical_and(
+                jnp.arange(s_size)[None, :] == slot[:, None], upd[:, None]
+            )
+            coef = coef * (1.0 - s)[:, None]
+            coef = jnp.where(hit, (s * yn)[:, None], coef)
+            idx = jnp.where(hit, base_t[i], idx)
+            intile = jnp.where(hit, i, intile)
+            # s == 0 when not updating, so the recursions are no-ops there.
+            q_new = (
+                (1.0 - s) ** 2 * q
+                + 2.0 * s * (1.0 - s) * yn * g
+                + s**2 * kdiag_t[i]
+            )
+            r_new = r + jnp.where(upd, 0.5 * (dist - r), 0.0)
+            xi2_new = xi2 * (1.0 - s) ** 2 + s**2 * gain
+            m_new = m + upd.astype(jnp.int32)
+            return (idx, coef, q_new, r_new, xi2_new, m_new, intile), None
+
+        intile0 = jnp.full((b, s_size), -1, jnp.int32)
+        (idx, coef, q, r, xi2, m, _), _ = jax.lax.scan(
+            row_body, (idx, coef, q, r, xi2, m, intile0),
+            jnp.arange(block_n),
+        )
+        return (idx, coef, q, r, xi2, m), None
+
+    state, _ = jax.lax.scan(tile_body, state0, (Xt, Yt, base, valid))
+    return _finish(Xf, state)
+
+
+def _finish(Xf, state) -> KernelBank:
+    idx, coef, q, r, xi2, m = state
+    points = jnp.where((idx >= 0)[..., None], Xf[jnp.clip(idx, 0)], 0.0)
+    return KernelBank(
+        idx=idx, coef=coef, points=points, q=q, r=r, xi2=xi2, m=m
+    )
+
+
+def kernel_bank_decision(
+    bank: KernelBank,
+    X: jax.Array,
+    *,
+    kernel: str = "rbf",
+    gamma: float = 1.0,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(Q, B) decision margins of every model against the stored core sets.
+
+    Routes through the fused serving kernel (``ops.predict_kernel_bank``,
+    "scores" epilogue) — the same path ``BankServer`` serves, so served
+    scores are bit-exact with this readout.
+    """
+    from repro.kernels.ops import predict_kernel_bank
+
+    return predict_kernel_bank(
+        X, bank.points, bank.coef, kernel=kernel, gamma=gamma,
+        interpret=interpret,
+    )
+
+
+def save_kernel_bank(
+    path: str,
+    bank: KernelBank,
+    *,
+    kernel: str,
+    gamma: float = 1.0,
+    meta: dict | None = None,
+) -> None:
+    """Checkpoint a KernelBank so ``BankServer.from_checkpoint`` can serve it.
+
+    Persists the 7-leaf bank pytree via ``repro.checkpoint.ckpt.save`` with
+    ``meta["bank_kind"] = "kernel"`` plus the (static) kernel config the fit
+    used — the serve side needs them to rebuild the decision function.
+    """
+    from repro.checkpoint import ckpt
+
+    if kernel not in _KERNELS:
+        raise ValueError(
+            f"unknown kernel {kernel!r}; expected one of {_KERNELS}"
+        )
+    full_meta = dict(meta or {})
+    full_meta.update(
+        {"bank_kind": "kernel", "kernel": kernel, "gamma": float(gamma)}
+    )
+    ckpt.save(path, bank, meta=full_meta)

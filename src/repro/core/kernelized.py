@@ -34,7 +34,13 @@ def rbf_kernel(gamma):
     def k(A, B):
         a2 = jnp.sum(A * A, -1)[:, None]
         b2 = jnp.sum(B * B, -1)[None, :]
-        return jnp.exp(-gamma * (a2 + b2 - 2.0 * A @ B.T))
+        # Clamp the squared distance at 0: near-duplicate rows make the
+        # expansion a2 + b2 - 2<a, b> go (slightly) negative in f32, which
+        # would yield K(x, x') > kappa and break the constant-diagonal
+        # assumption the MEB update relies on. Matches the Pallas Gram
+        # epilogue (kernels/gram.py) exactly.
+        d2 = jnp.maximum(a2 + b2 - 2.0 * A @ B.T, 0.0)
+        return jnp.exp(-gamma * d2)
 
     return k
 

@@ -214,7 +214,12 @@ def fit_chunked(
         if checkpoint_every and checkpoint_cb and since_ckpt >= checkpoint_every:
             checkpoint_cb(StreamCheckpoint(ball=jax.tree.map(jnp.asarray, ball), position=pos))
             since_ckpt = 0
-    assert ball is not None, "empty stream"
+    if ball is None:
+        raise ValueError(
+            "fit_chunked got an empty stream: the chunk iterator yielded no "
+            f"examples (resume={resume!r}) — at least one (X, y) chunk with "
+            "one row is required to initialize the ball"
+        )
     return StreamCheckpoint(ball=ball, position=pos)
 
 
@@ -280,7 +285,13 @@ def fit_chunked_many(
                 StreamCheckpoint(ball=jax.tree.map(jnp.asarray, bank), position=pos)
             )
             since_ckpt = 0
-    assert bank is not None, "empty stream"
+    if bank is None:
+        raise ValueError(
+            "fit_chunked_many got an empty stream: the chunk iterator "
+            f"yielded no examples for the {n_models}-model bank "
+            f"(resume={resume!r}) — at least one (X, Y) chunk with one row "
+            "is required to initialize the bank"
+        )
     return StreamCheckpoint(ball=bank, position=pos)
 
 

@@ -18,6 +18,18 @@ policy); ref.py the pure-jnp/numpy oracles. Kernels validate in
 interpret=True mode on CPU and target TPU BlockSpec tiling (128-aligned
 lanes, f32 VMEM accumulators).
 """
-from .ops import gram, predict_bank, streamsvm_fit, streamsvm_fit_many
+from .ops import (
+    gram,
+    predict_bank,
+    predict_kernel_bank,
+    streamsvm_fit,
+    streamsvm_fit_many,
+)
 
-__all__ = ["gram", "predict_bank", "streamsvm_fit", "streamsvm_fit_many"]
+__all__ = [
+    "gram",
+    "predict_bank",
+    "predict_kernel_bank",
+    "streamsvm_fit",
+    "streamsvm_fit_many",
+]

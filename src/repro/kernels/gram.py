@@ -60,7 +60,13 @@ def gram_pallas(
         interpret = jax.default_backend() != "tpu"
     m, d = A.shape
     n, d2 = B.shape
-    assert d == d2 and m % bm == 0 and n % bn == 0 and d % bk == 0, (A.shape, B.shape, bm, bn, bk)
+    if d != d2 or m % bm or n % bn or d % bk:
+        raise ValueError(
+            f"gram_pallas needs pre-padded operands sharing the feature "
+            f"axis with M % bm == 0, N % bn == 0, D % bk == 0: got "
+            f"A.shape={A.shape}, B.shape={B.shape}, bm={bm}, bn={bn}, "
+            f"bk={bk} (use kernels.ops.gram for arbitrary shapes)"
+        )
 
     an = jnp.sum(A.astype(jnp.float32) ** 2, axis=1, keepdims=True)  # (M,1)
     bn_ = jnp.sum(B.astype(jnp.float32) ** 2, axis=1, keepdims=True)  # (N,1)

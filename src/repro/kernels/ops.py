@@ -92,6 +92,21 @@ def bank_tiling(b: int, b_tile: int | None):
     return bt, -(-b // bt)
 
 
+def gram_tiling(m: int, n: int, bm: int, bn: int):
+    """Resolve the Gram kernel's derived (bm_, bn_) block shapes.
+
+    Shrinks the requested tiles to the data but keeps the f32 sublane/lane
+    alignment Mosaic requires — bm_ a multiple of 8, bn_ a multiple of 128.
+    (The old ``min(bm, max(8, m))`` produced misaligned blocks for odd M/N,
+    e.g. m=100 -> bm_=100, which only survived in interpret mode.) The
+    single source of truth for this policy; regression-tested on odd shapes
+    in tests/test_kernel_bank.py.
+    """
+    bm_ = -(-min(bm, max(8, m)) // 8) * 8
+    bn_ = -(-min(bn, max(128, n)) // 128) * 128
+    return bm_, bn_
+
+
 def ovr_group_tiling(b: int, n_classes: int, b_tile: int | None):
     """Resolve the predict engine's ovr-epilogue bank tiling for B models.
 
@@ -545,8 +560,7 @@ def gram(
             f"A and B must share the feature axis: got A.shape={A.shape}, "
             f"B.shape={B.shape}"
         )
-    bm_ = min(bm, max(8, m))
-    bn_ = min(bn, max(128, n))
+    bm_, bn_ = gram_tiling(m, n, bm, bn)
     Ap = _pad_to(_pad_to(A.astype(jnp.float32), bk, 1), bm_, 0)
     Bp = _pad_to(_pad_to(B.astype(jnp.float32), bk, 1), bn_, 0)
     out = gram_pallas(
@@ -723,3 +737,116 @@ def predict_bank(
         bank_resident=residency, interpret=interpret,
     )
     return scores[:q, :b]
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "kernel", "gamma", "epilogue", "n_classes", "k", "q_block",
+        "stream_dtype", "interpret",
+    ),
+)
+def predict_kernel_bank(
+    X: jax.Array,
+    points: jax.Array,
+    coef: jax.Array,
+    *,
+    kernel: str = "rbf",
+    gamma: float = 1.0,
+    epilogue: str = "scores",
+    n_classes: int | None = None,
+    k: int | None = None,
+    q_block: int = 256,
+    stream_dtype=None,
+    interpret: bool | None = None,
+):
+    """Score (Q, D) queries against a kernelized bank's stored core sets.
+
+    The serving twin of ``core.fit_kernel_bank``: ``points`` is the bank's
+    (B, S, D) core-set buffer and ``coef`` its (B, S) signed coefficients
+    (free slots hold coef == 0, so they contribute exactly nothing). One
+    fused Gram launch (``gram``, the same linear/RBF epilogue the trainer
+    used) evaluates k(query tile, EVERY model's core set) as a
+    (Q, B*S) block; the per-model readout is then the contraction
+
+        scores[qi, bi] = sum_s coef[bi, s] * k(x_qi, points[bi, s])
+
+    which is bit-exact (f32) with ``ref.predict_kernel_bank_ref`` /
+    ``kernelized.decision_function`` against the stored core set — the
+    train->serve parity contract of the linear ``predict_bank``, carried to
+    kernel space. Epilogues mirror ``predict_bank``:
+
+      "scores"          -> (Q, B) f32 margins
+      "ovr", n_classes= -> ((Q, G) int32, (Q, G) f32) per C-grid group,
+                           G = B // n_classes, class-major flattening
+      "topk", k=        -> ((Q, k) f32, (Q, k) int32) descending
+
+    q_block: query rows per Gram tile (BankServer's microbatch slot count).
+    stream_dtype: "bf16" rounds the query tiles before the Gram launch; the
+    core-set points and coefficients stay f32. The (B, S) state is small by
+    construction (that is the point of the core-set bound), so there is no
+    bank_resident knob here — the Gram operand is (B*S, D) and already
+    streams through the tiled kernel's own block pipeline.
+    """
+    q, d = X.shape
+    b, s, dp = points.shape
+    if dp != d:
+        raise ValueError(
+            f"queries and core-set points must share the feature axis: got "
+            f"X.shape={X.shape}, points.shape={points.shape}"
+        )
+    if coef.shape != (b, s):
+        raise ValueError(
+            f"coef must be (B, S) matching points: got coef.shape="
+            f"{coef.shape}, points.shape={points.shape}"
+        )
+    if kernel not in ("linear", "rbf"):
+        raise ValueError(
+            f"unknown kernel {kernel!r}; expected 'linear' or 'rbf'"
+        )
+    if epilogue not in ("scores", "ovr", "topk"):
+        raise ValueError(
+            f"unknown epilogue {epilogue!r}; expected 'scores', 'ovr' or "
+            "'topk'"
+        )
+    if epilogue != "ovr" and n_classes is not None:
+        raise ValueError(
+            f"n_classes={n_classes} requires epilogue='ovr' (got "
+            f"epilogue={epilogue!r})"
+        )
+    if epilogue != "topk" and k is not None:
+        raise ValueError(
+            f"k={k} requires epilogue='topk' (got epilogue={epilogue!r})"
+        )
+    if epilogue == "ovr" and (
+        n_classes is None or n_classes < 1 or b % n_classes
+    ):
+        raise ValueError(
+            f"epilogue='ovr' needs n_classes >= 1 dividing B: got "
+            f"n_classes={n_classes}, B={b}"
+        )
+    if epilogue == "topk" and (k is None or not (1 <= k <= b)):
+        raise ValueError(
+            f"epilogue='topk' needs 1 <= k <= B: got k={k}, B={b}"
+        )
+    sdt = _resolve_stream_dtype(stream_dtype)
+    Xq = X.astype(jnp.float32)
+    if sdt is not None:
+        Xq = Xq.astype(sdt)
+    K = gram(
+        Xq, points.reshape(b * s, d).astype(jnp.float32),
+        epilogue=kernel, gamma=gamma, bm=q_block, interpret=interpret,
+    )
+    scores = jnp.einsum(
+        "qbs,bs->qb", K.reshape(q, b, s), coef.astype(jnp.float32)
+    )
+    if epilogue == "scores":
+        return scores
+    if epilogue == "ovr":
+        g = b // n_classes
+        grouped = scores.reshape(q, g, n_classes)
+        cls = jnp.argmax(grouped, axis=-1).astype(jnp.int32)
+        margin = jnp.max(grouped, axis=-1)
+        return cls, margin
+    vals, ids = jax.lax.top_k(scores, k)
+    return vals, ids.astype(jnp.int32)

@@ -225,3 +225,122 @@ def gram_ref(A, B, *, epilogue="linear", gamma=1.0, out_dtype=jnp.float32):
         bn = jnp.sum(B.astype(jnp.float32) ** 2, 1)[None, :]
         return jnp.exp(-gamma * jnp.maximum(an + bn - 2 * acc, 0.0)).astype(out_dtype)
     return acc.astype(out_dtype)
+
+
+def _kernel_ref(A, B, *, kernel, gamma):
+    A = np.asarray(A, np.float32)
+    B = np.asarray(B, np.float32)
+    acc = A @ B.T
+    if kernel == "rbf":
+        an = np.sum(A * A, 1)[:, None]
+        bn = np.sum(B * B, 1)[None, :]
+        return np.exp(-gamma * np.maximum(an + bn - 2.0 * acc, 0.0))
+    return acc
+
+
+def fit_kernel_bank_ref(
+    X, Y, cs, *, kernel="rbf", gamma=1.0, coreset_size=64, variant="exact"
+):
+    """Core-set kernel-bank oracle: per-model, row-at-a-time, plain numpy.
+
+    Mirrors core.fit_kernel_bank's contract exactly — per-model bounded
+    buffer of ``coreset_size`` (index, coefficient) pairs, uniform (1 - s)
+    coefficient decay on each absorb, and smallest-|coef| eviction (first
+    minimum on ties, free slots carry coef 0 so they are always preferred) —
+    but with an explicit python buffer per model and no tiling, so it is the
+    slow, obviously-correct target the fused engine is swept against.
+    Returns (idx, coef, points, q, r, xi2, m) matching KernelBank's arrays.
+    """
+    X = np.asarray(X, np.float32)
+    Y = np.asarray(Y)
+    n, d = X.shape
+    b, _ = Y.shape
+    S = int(coreset_size)
+    cs = np.broadcast_to(np.asarray(cs, np.float32), (b,))
+    kd = np.ones(n, np.float32) if kernel == "rbf" else np.sum(X * X, 1)
+
+    idx = np.full((b, S), -1, np.int32)
+    coef = np.zeros((b, S), np.float32)
+    q = np.empty(b, np.float32)
+    r = np.zeros(b, np.float32)
+    xi2 = np.empty(b, np.float32)
+    m = np.ones(b, np.int32)
+    for bi in range(b):
+        c_inv = np.float32(1.0 / cs[bi])
+        gain = c_inv if variant == "exact" else np.float32(1.0)
+        idx[bi, 0] = 0
+        coef[bi, 0] = np.float32(Y[bi, 0])
+        q[bi] = kd[0]
+        xi2[bi] = gain
+        for i in range(1, n):
+            yn = np.float32(Y[bi, i])
+            if yn == 0:
+                continue
+            live = idx[bi] >= 0
+            kv = np.zeros(S, np.float32)
+            kv[live] = _kernel_ref(
+                X[i][None], X[idx[bi, live]], kernel=kernel, gamma=gamma
+            )[0]
+            g = np.float32(np.sum(coef[bi] * kv))
+            d2 = q[bi] - 2.0 * yn * g + kd[i] + xi2[bi] + c_inv
+            dist = np.sqrt(np.maximum(d2, np.float32(1e-12)))
+            if not dist >= r[bi]:
+                continue
+            s = np.float32(0.5) * (np.float32(1.0) - r[bi] / dist)
+            slot = int(np.argmin(np.abs(coef[bi])))
+            coef[bi] *= np.float32(1.0) - s
+            coef[bi, slot] = s * yn
+            idx[bi, slot] = i
+            q[bi] = (
+                (np.float32(1.0) - s) ** 2 * q[bi]
+                + np.float32(2.0) * s * (np.float32(1.0) - s) * yn * g
+                + s**2 * kd[i]
+            )
+            r[bi] = r[bi] + np.float32(0.5) * (dist - r[bi])
+            xi2[bi] = xi2[bi] * (np.float32(1.0) - s) ** 2 + s**2 * gain
+            m[bi] += 1
+    points = np.where((idx >= 0)[..., None], X[np.clip(idx, 0, n - 1)], 0.0)
+    return idx, coef, points.astype(np.float32), q, r, xi2, m
+
+
+def predict_kernel_bank_ref(
+    X, points, coef, *, kernel="rbf", gamma=1.0, epilogue="scores",
+    n_classes=None, k=None,
+):
+    """Kernel-bank inference oracle: gram_ref + the coefficient contraction.
+
+    X: (Q, D) queries; points: (B, S, D) core sets; coef: (B, S). Epilogue
+    contract identical to predict_bank_ref (scores / ovr / topk).
+    """
+    q, d = jnp.asarray(X).shape
+    b, s, _ = jnp.asarray(points).shape
+    K = gram_ref(
+        jnp.asarray(X), jnp.asarray(points).reshape(b * s, d),
+        epilogue=kernel, gamma=gamma,
+    )
+    scores = jnp.einsum(
+        "qbs,bs->qb", K.reshape(q, b, s), jnp.asarray(coef, jnp.float32)
+    )
+    if epilogue == "scores":
+        return scores
+    if epilogue == "ovr":
+        if n_classes is None or n_classes < 1 or b % n_classes:
+            raise ValueError(
+                f"epilogue='ovr' needs n_classes >= 1 dividing B: got "
+                f"n_classes={n_classes}, B={b}"
+            )
+        grouped = scores.reshape(q, b // n_classes, n_classes)
+        return (
+            jnp.argmax(grouped, axis=-1).astype(jnp.int32),
+            jnp.max(grouped, axis=-1),
+        )
+    if epilogue == "topk":
+        if k is None or not (1 <= k <= b):
+            raise ValueError(
+                f"epilogue='topk' needs 1 <= k <= B: got k={k}, B={b}"
+            )
+        vals, ids = jax.lax.top_k(scores, k)
+        return vals, ids.astype(jnp.int32)
+    raise ValueError(
+        f"unknown epilogue {epilogue!r}; expected 'scores', 'ovr' or 'topk'"
+    )

@@ -67,6 +67,10 @@ def run_with_restarts(
         else:
             start = 0
             ckpt.save(ckpt_dir, state, meta={"step": 0})
+        # Steps between the last checkpoint and a crash re-run from `start`:
+        # drop their already-logged metrics so RunReport.metrics matches the
+        # uninterrupted run exactly (one entry per step, no duplicates).
+        del metrics_log[start:]
         try:
             for i in range(start, len(batches)):
                 state, m = step_fn(state, batches[i])
@@ -91,9 +95,15 @@ def rebalance_ranges(
     split evenly among survivors, appended to their work queues."""
     dead = set(dead)
     survivors = [i for i in range(len(ranges)) if i not in dead]
-    assert survivors, "no survivors"
+    if not survivors:
+        raise ValueError(
+            f"rebalance_ranges: all {len(ranges)} shard(s) are dead "
+            f"(dead={sorted(dead)}) — no survivors to re-issue ranges to"
+        )
     out = {i: [ranges[i]] for i in survivors}
-    for d in dead:
+    # sorted(): set iteration order is hash-dependent; the re-issued work
+    # queues must be deterministic across processes.
+    for d in sorted(dead):
         lo, hi = ranges[d]
         n = len(survivors)
         width = (hi - lo + n - 1) // n

@@ -37,8 +37,9 @@ from typing import List, Optional, Tuple, Union
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.kernel_bank import KernelBank
 from repro.core.meb import Ball
-from repro.kernels.ops import predict_bank
+from repro.kernels.ops import predict_bank, predict_kernel_bank
 
 
 @dataclasses.dataclass
@@ -79,7 +80,14 @@ class BankServer:
     """Serve a trained (B, D) bank: microbatch, score, hot-swap.
 
     bank: a stacked ``Ball`` (``fit_bank``/``fit_ovr``/``fit_c_grid`` result
-    or a restored checkpoint) or a plain (B, D) weight array.
+    or a restored checkpoint), a plain (B, D) weight array, or a
+    ``KernelBank`` (``fit_kernel_bank`` result) — the kernelized bank is
+    detected by its (B, S, D) core-set ``points``/(B, S) ``coef`` arrays and
+    served through ``kernels.ops.predict_kernel_bank`` instead, with
+    ``kernel=`` ("linear"/"rbf", REQUIRED for kernel banks) and ``gamma=``
+    naming the kernel the bank was trained with (they must match the fit —
+    the checkpoint meta records them, and ``from_checkpoint`` restores them
+    automatically).
     epilogue/n_classes/k/q_block/b_tile/stream_dtype/bank_resident: the
     fused-kernel serving configuration — see ``kernels.ops.predict_bank``
     (``bank_resident="hbm"`` serves the bank straight out of ANY/HBM space
@@ -87,7 +95,9 @@ class BankServer:
     (B, D) footprint exceeds the VMEM budget; "auto" picks that exactly
     when it does). These are static (fixed per server); the bank itself is
     traced, so ``swap_bank`` with a same-shape bank reuses the compiled
-    kernel — in any residency.
+    kernel — in any residency. Kernel banks ignore ``b_tile`` and
+    ``bank_resident`` (their state is bounded by construction — the Gram
+    operand streams through the tiled kernel's own block pipeline).
     """
 
     def __init__(
@@ -101,10 +111,33 @@ class BankServer:
         b_tile: Optional[int] = None,
         stream_dtype=None,
         bank_resident: str = "auto",
+        kernel: Optional[str] = None,
+        gamma: float = 1.0,
         interpret: Optional[bool] = None,
     ):
-        self._w = self._bank_weights(bank)
-        b, d = self._w.shape
+        if self._is_kernel_bank(bank):
+            if kernel is None:
+                raise ValueError(
+                    "serving a KernelBank needs kernel='linear' or 'rbf' "
+                    "(the kernel the bank was trained with); pass it "
+                    "explicitly or use from_checkpoint, which restores it "
+                    "from the checkpoint meta"
+                )
+            self._w = None
+            self._points, self._coef = self._kernel_bank_arrays(bank)
+            b, _, d = self._points.shape
+        else:
+            if kernel is not None:
+                raise ValueError(
+                    f"kernel={kernel!r} only applies to a KernelBank; this "
+                    "bank is a linear (B, D) weight bank"
+                )
+            self._w = self._bank_weights(bank)
+            self._points = self._coef = None
+            b, d = self._w.shape
+        self.kernel = kernel
+        self.gamma = float(gamma)
+        self._b, self._d = b, d
         if epilogue not in ("scores", "ovr", "topk"):
             raise ValueError(
                 f"unknown epilogue {epilogue!r}; expected 'scores', 'ovr' "
@@ -135,6 +168,22 @@ class BankServer:
     # -- bank management ----------------------------------------------------
 
     @staticmethod
+    def _is_kernel_bank(bank) -> bool:
+        return hasattr(bank, "points") and hasattr(bank, "coef")
+
+    @staticmethod
+    def _kernel_bank_arrays(bank) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        points = jnp.asarray(bank.points, jnp.float32)
+        coef = jnp.asarray(bank.coef, jnp.float32)
+        if points.ndim != 3 or coef.shape != points.shape[:2]:
+            raise ValueError(
+                f"KernelBank needs (B, S, D) points with (B, S) coef: got "
+                f"points.shape={tuple(points.shape)}, coef.shape="
+                f"{tuple(coef.shape)}"
+            )
+        return points, coef
+
+    @staticmethod
     def _bank_weights(bank) -> jnp.ndarray:
         w = bank.w if hasattr(bank, "w") else bank
         w = jnp.asarray(w, jnp.float32)
@@ -146,7 +195,9 @@ class BankServer:
         return w
 
     @property
-    def bank_shape(self) -> Tuple[int, int]:
+    def bank_shape(self) -> Tuple[int, ...]:
+        if self._w is None:
+            return tuple(self._points.shape)
         return tuple(self._w.shape)
 
     def swap_bank(self, bank) -> None:
@@ -154,9 +205,32 @@ class BankServer:
 
         Rows already scored keep their (old-bank) results; every row scored
         from the next ``step()`` on sees the new bank. The new bank must
-        match the current (B, D) — same shape means the kernel's jit cache
-        is reused, so a swap never stalls serving on a recompile.
+        match the current shape — (B, D) weights for a linear server,
+        (B, S, D) core sets for a kernel server (a linear bank cannot swap
+        into a kernel server or vice versa) — same shape means the kernel's
+        jit cache is reused, so a swap never stalls serving on a recompile.
         """
+        if self._w is None:
+            if not self._is_kernel_bank(bank):
+                raise ValueError(
+                    "this server serves a KernelBank; hot-swap needs another "
+                    "KernelBank of the same (B, S, D) shape"
+                )
+            points, coef = self._kernel_bank_arrays(bank)
+            if points.shape != self._points.shape:
+                raise ValueError(
+                    f"hot-swap core-set shape {tuple(points.shape)} != "
+                    f"served shape {tuple(self._points.shape)}; start a new "
+                    "BankServer to change shape"
+                )
+            self._points, self._coef = points, coef
+            self.stats.bank_swaps += 1
+            return
+        if self._is_kernel_bank(bank):
+            raise ValueError(
+                "this server serves a linear (B, D) bank; a KernelBank "
+                "needs its own BankServer(kernel=...)"
+            )
         w = self._bank_weights(bank)
         if w.shape != self._w.shape:
             raise ValueError(
@@ -173,25 +247,41 @@ class BankServer:
 
         ``path`` is a ``repro.checkpoint.ckpt.save`` directory whose tree is
         the stacked Ball (the ``StreamCheckpoint.ball`` handed to the
-        checkpoint callback). The manifest's shapes/dtypes rebuild the Ball
-        target for restore; ``meta["n_classes"]`` (if the trainer recorded
-        it) fills in OVR serving unless overridden.
+        checkpoint callback) — or, when the manifest meta carries
+        ``bank_kind == "kernel"`` (a ``core.save_kernel_bank`` checkpoint),
+        the 7-leaf ``KernelBank``, in which case ``kernel``/``gamma`` are
+        restored from the meta unless overridden. The manifest's
+        shapes/dtypes rebuild the restore target; ``meta["n_classes"]`` (if
+        the trainer recorded it) fills in OVR serving unless overridden.
         """
         from repro.checkpoint import ckpt
 
         manifest = ckpt.load_manifest(path)
         shapes, dtypes = manifest["shapes"], manifest["dtypes"]
-        if len(shapes) != 4:
+        meta = manifest.get("meta", {})
+        if meta.get("bank_kind") == "kernel":
+            if len(shapes) != len(KernelBank._fields):
+                raise ValueError(
+                    f"kernel-bank checkpoint at {path!r} has {len(shapes)} "
+                    f"leaves; expected the {len(KernelBank._fields)}-leaf "
+                    "KernelBank a save_kernel_bank checkpoint carries"
+                )
+            target = KernelBank(
+                *(jnp.zeros(s, dt) for s, dt in zip(shapes, dtypes))
+            )
+            kwargs.setdefault("kernel", meta.get("kernel"))
+            kwargs.setdefault("gamma", float(meta.get("gamma", 1.0)))
+        elif len(shapes) != 4:
             raise ValueError(
                 f"checkpoint at {path!r} has {len(shapes)} leaves; expected "
                 "the 4-leaf stacked Ball (w, r, xi2, m) a fit_chunked_many "
                 "checkpoint carries"
             )
-        target = Ball(
-            *(jnp.zeros(s, dt) for s, dt in zip(shapes, dtypes))
-        )
+        else:
+            target = Ball(
+                *(jnp.zeros(s, dt) for s, dt in zip(shapes, dtypes))
+            )
         bank = ckpt.restore(path, target)
-        meta = manifest.get("meta", {})
         if (
             kwargs.get("epilogue") == "ovr"
             and "n_classes" not in kwargs
@@ -205,13 +295,13 @@ class BankServer:
     def submit(self, queries) -> ScoreRequest:
         """Queue a ragged block of query rows; returns its ScoreRequest."""
         q = np.asarray(queries, np.float32)
-        if q.ndim != 2 or q.shape[1] != self._w.shape[1]:
+        if q.ndim != 2 or q.shape[1] != self._d:
             raise ValueError(
-                f"queries must be (n, D={self._w.shape[1]}) rows: got shape "
+                f"queries must be (n, D={self._d}) rows: got shape "
                 f"{q.shape}"
             )
         n = q.shape[0]
-        b = self._w.shape[0]
+        b = self._b
         if self.epilogue == "scores":
             result = np.empty((n, b), np.float32)
         elif self.epilogue == "ovr":
@@ -240,8 +330,7 @@ class BankServer:
         scatter results back. Returns the number of rows scored."""
         if not self._queue:
             return 0
-        d = self._w.shape[1]
-        buf = np.zeros((self.q_block, d), np.float32)
+        buf = np.zeros((self.q_block, self._d), np.float32)
         segments: List[Tuple[ScoreRequest, int, int, int]] = []
         filled = 0
         qi = 0
@@ -253,18 +342,33 @@ class BankServer:
             segments.append((req, off, take, filled))
             filled += take
             qi += 1
-        out = predict_bank(
-            jnp.asarray(buf),
-            self._w,
-            epilogue=self.epilogue,
-            n_classes=self.n_classes,
-            k=self.k,
-            q_block=self.q_block,
-            b_tile=self.b_tile,
-            stream_dtype=self.stream_dtype,
-            bank_resident=self.bank_resident,
-            interpret=self.interpret,
-        )
+        if self._w is None:
+            out = predict_kernel_bank(
+                jnp.asarray(buf),
+                self._points,
+                self._coef,
+                kernel=self.kernel,
+                gamma=self.gamma,
+                epilogue=self.epilogue,
+                n_classes=self.n_classes,
+                k=self.k,
+                q_block=self.q_block,
+                stream_dtype=self.stream_dtype,
+                interpret=self.interpret,
+            )
+        else:
+            out = predict_bank(
+                jnp.asarray(buf),
+                self._w,
+                epilogue=self.epilogue,
+                n_classes=self.n_classes,
+                k=self.k,
+                q_block=self.q_block,
+                b_tile=self.b_tile,
+                stream_dtype=self.stream_dtype,
+                bank_resident=self.bank_resident,
+                interpret=self.interpret,
+            )
         parts = (out,) if self.epilogue == "scores" else out
         parts = tuple(np.asarray(p) for p in parts)
         finished = 0

@@ -78,6 +78,55 @@ def test_kernelized_linear_equals_algo1():
     np.testing.assert_allclose(float(kb.r), float(b.r), rtol=1e-5)
 
 
+@pytest.mark.parametrize("n,d", [(16, 3), (100, 8), (333, 20), (800, 5)])
+@pytest.mark.parametrize("c", [0.1, 1.0, 50.0])
+def test_kernelized_linear_identity_sweep(n, d, c):
+    """The linear-kernel dual recursion IS Algorithm 1, across shapes and
+    the C range (radius, count and primal weights all agree)."""
+    X, y = _data(n, d, seed=n + d)
+    Xj, yj = jnp.asarray(X), jnp.asarray(y)
+    kb = fit_kernelized(Xj, yj, c)
+    b = fit(Xj, yj, c)
+    np.testing.assert_allclose(
+        np.asarray(linear_weights(kb, Xj)), np.asarray(b.w),
+        rtol=2e-4, atol=2e-5,
+    )
+    assert int(kb.m) == int(b.m)
+    np.testing.assert_allclose(float(kb.r), float(b.r), rtol=1e-4)
+    np.testing.assert_allclose(
+        float(kb.xi2), float(b.xi2), rtol=1e-3, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("kernel", ["rbf", "linear"])
+def test_kernel_bank_small_n_equals_dense(kernel):
+    """coreset_size >= N: the bounded-buffer bank engine never evicts, so
+    each model's (index, coefficient) buffer must rebuild the dense
+    fit_kernelized alpha vector exactly (up to f32 roundoff)."""
+    from repro.core import fit_kernel_bank, linear_kernel, rbf_kernel
+
+    n, d, b = 24, 6, 3
+    X, y = _data(n, d, seed=4)
+    Xj = jnp.asarray(X)
+    Y = jnp.asarray(np.stack([y, -y, y]))
+    cs = jnp.asarray([0.5, 2.0, 10.0], jnp.float32)
+    gamma = 0.8
+    kfn = rbf_kernel(gamma) if kernel == "rbf" else linear_kernel
+    kb = fit_kernel_bank(
+        Xj, Y, cs, kernel=kernel, gamma=gamma, coreset_size=n, block_n=8
+    )
+    for bi in range(3):
+        dense = fit_kernelized(Xj, Y[bi], float(cs[bi]), kfn)
+        alpha = np.zeros(n, np.float32)
+        idx = np.asarray(kb.idx[bi])
+        live = idx >= 0
+        alpha[idx[live]] = np.asarray(kb.coef[bi])[live]
+        np.testing.assert_allclose(
+            alpha, np.asarray(dense.alpha), rtol=1e-4, atol=1e-5
+        )
+        assert int(kb.m[bi]) == int(dense.m)
+
+
 def test_radius_monotone_nondecreasing():
     """R never shrinks during the stream (enclosure invariant)."""
     X, y = _data(500, 5, 2)

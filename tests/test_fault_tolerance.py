@@ -37,6 +37,43 @@ def test_restart_bit_equivalent(tmp_path):
     assert int(clean["n"]) == int(crashy["n"]) == 10
 
 
+def test_restart_metrics_match_uninterrupted(tmp_path):
+    """Steps re-run after a crash must not duplicate their metrics entries:
+    RunReport.metrics of a crashy run == the uninterrupted run's, entry for
+    entry (the resume path truncates the log back to the restored step)."""
+    batches = [jnp.full((4,), i, jnp.float32) for i in range(10)]
+    init = {"w": jnp.zeros((4,)), "n": jnp.zeros((), jnp.int32)}
+
+    # ckpt_every=4 with crashes at 3 and 7: both crashes land steps past the
+    # last durable checkpoint, so their metrics entries are already logged
+    # and would duplicate without the resume-path truncation.
+    _, clean_report = run_with_restarts(
+        _toy_step(), init, batches, ckpt_dir=str(tmp_path / "a"), ckpt_every=4
+    )
+    _, crashy_report = run_with_restarts(
+        _toy_step(), init, batches, ckpt_dir=str(tmp_path / "b"), ckpt_every=4,
+        fail_at=[3, 7],
+    )
+    assert len(clean_report.metrics) == len(batches)
+    assert crashy_report.metrics == clean_report.metrics
+
+
+def test_rebalance_ranges_deterministic():
+    """The re-issued work queues must not depend on set iteration order —
+    dead shards are processed in sorted order whatever the input order."""
+    ranges = [(0, 97), (97, 200), (200, 311), (311, 400), (400, 500)]
+    outs = [
+        rebalance_ranges(ranges, dead=order)
+        for order in ([1, 3], [3, 1], {3, 1}, iter((3, 1)))
+    ]
+    assert all(o == outs[0] for o in outs[1:])
+
+
+def test_rebalance_ranges_all_dead_raises():
+    with pytest.raises(ValueError, match="no survivors"):
+        rebalance_ranges([(0, 10), (10, 20)], dead=[0, 1])
+
+
 def test_ckpt_roundtrip_dtypes(tmp_path):
     tree = {
         "a": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4),

@@ -1,0 +1,499 @@
+"""Kernelized one-pass bank: core-set engine, serving twin, parity bugfixes.
+
+The load-bearing contracts of this suite:
+
+  - with ``coreset_size >= N`` the bounded-buffer engine NEVER evicts, so it
+    must reproduce the dense O(N)-state ``fit_kernelized`` per model (f32
+    roundoff only — the engine evaluates kernels through the tiled Pallas
+    Gram kernel, the dense fit through one jnp expansion);
+  - with a small buffer it must match the plain-numpy row-at-a-time oracle
+    ``fit_kernel_bank_ref`` (identical slot indices — the eviction POLICY is
+    part of the contract, not just the scores);
+  - ``predict_kernel_bank`` / the kernel ``BankServer`` score bit-exact with
+    the jnp oracle against the stored core sets (the train->serve parity
+    contract of the linear bank, carried to kernel space);
+  - ``kernelized.rbf_kernel`` clamps d^2 at 0, matching the Gram epilogue
+    exactly on streams with duplicate rows (this PR's numerical-parity fix);
+  - ``ops.gram`` keeps its derived tiles sublane/lane aligned for odd M/N
+    (this PR's tiling fix — m=100 used to produce a 100-row block that only
+    survived in interpret mode).
+"""
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    KernelBank,
+    fit_kernel_bank,
+    fit_kernelized,
+    kernel_bank_decision,
+    linear_kernel,
+    linear_weights,
+    rbf_kernel,
+    save_kernel_bank,
+)
+from repro.core.kernelized import decision_function
+from repro.kernels import gram, predict_kernel_bank
+from repro.kernels.ops import gram_tiling
+from repro.kernels.ref import (
+    fit_kernel_bank_ref,
+    gram_ref,
+    predict_kernel_bank_ref,
+)
+from repro.serve.bank_server import BankServer
+
+
+def _bank_data(b, n, d, seed=0, zeros=False):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    Y = np.sign(rng.normal(size=(b, n))).astype(np.float32)
+    Y[Y == 0] = 1.0
+    if zeros:  # sprinkle inert rows, but keep row 0 live (it seeds the fit)
+        mask = rng.random(size=(b, n)) < 0.2
+        mask[:, 0] = False
+        Y[mask] = 0.0
+    cs = np.linspace(0.5, 8.0, b).astype(np.float32)
+    return jnp.asarray(X), jnp.asarray(Y), jnp.asarray(cs)
+
+
+def _kernel_fn(kernel, gamma):
+    return rbf_kernel(gamma) if kernel == "rbf" else linear_kernel
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: S >= N reproduces the dense kernelized fit per model
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kernel", ["rbf", "linear"])
+@pytest.mark.parametrize("block_n", [8, 32])
+def test_full_buffer_matches_dense_fit(kernel, block_n):
+    b, n, d = 3, 41, 12
+    X, Y, cs = _bank_data(b, n, d, seed=7)
+    gamma = 0.7
+    kb = fit_kernel_bank(
+        X, Y, cs, kernel=kernel, gamma=gamma, coreset_size=n + 5,
+        block_n=block_n,
+    )
+    for bi in range(b):
+        dense = fit_kernelized(
+            X, Y[bi], float(cs[bi]), _kernel_fn(kernel, gamma)
+        )
+        alpha = np.zeros(n, np.float32)
+        idx = np.asarray(kb.idx[bi])
+        coef = np.asarray(kb.coef[bi])
+        live = idx >= 0
+        alpha[idx[live]] = coef[live]
+        np.testing.assert_allclose(
+            alpha, np.asarray(dense.alpha), rtol=1e-4, atol=1e-5
+        )
+        np.testing.assert_allclose(
+            float(kb.q[bi]), float(dense.q), rtol=1e-4, atol=1e-6
+        )
+        np.testing.assert_allclose(
+            float(kb.r[bi]), float(dense.r), rtol=1e-4, atol=1e-6
+        )
+        np.testing.assert_allclose(
+            float(kb.xi2[bi]), float(dense.xi2), rtol=1e-3, atol=1e-6
+        )
+        assert int(kb.m[bi]) == int(dense.m)
+
+
+def test_full_buffer_decision_matches_dense(seed=11):
+    """End to end: served margins == dense decision_function, per model."""
+    b, n, d, q = 3, 30, 10, 17
+    X, Y, cs = _bank_data(b, n, d, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    Q = jnp.asarray(rng.normal(size=(q, d)).astype(np.float32))
+    gamma = 0.4
+    kb = fit_kernel_bank(
+        X, Y, cs, kernel="rbf", gamma=gamma, coreset_size=n, block_n=8
+    )
+    scores = kernel_bank_decision(kb, Q, kernel="rbf", gamma=gamma)
+    for bi in range(b):
+        dense = fit_kernelized(X, Y[bi], float(cs[bi]), rbf_kernel(gamma))
+        want = decision_function(dense, X, Q, rbf_kernel(gamma))
+        np.testing.assert_allclose(
+            np.asarray(scores[:, bi]), np.asarray(want), rtol=1e-4, atol=1e-5
+        )
+
+
+def test_full_buffer_linear_weights_match(seed=3):
+    """Linear kernel, S >= N: sum_s coef * points is the primal w of the
+    dense kernelized fit (linear_weights) — kernel space collapses back to
+    the (D,) weight the linear engine would serve."""
+    b, n, d = 2, 25, 9
+    X, Y, cs = _bank_data(b, n, d, seed=seed)
+    kb = fit_kernel_bank(X, Y, cs, kernel="linear", coreset_size=n, block_n=8)
+    w_bank = jnp.einsum("bs,bsd->bd", kb.coef, kb.points)
+    for bi in range(b):
+        dense = fit_kernelized(X, Y[bi], float(cs[bi]), linear_kernel)
+        np.testing.assert_allclose(
+            np.asarray(w_bank[bi]), np.asarray(linear_weights(dense, X)),
+            rtol=1e-4, atol=1e-5,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Bounded buffer: engine vs the plain-numpy eviction oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kernel", ["rbf", "linear"])
+@pytest.mark.parametrize("coreset_size,block_n", [(4, 8), (8, 16), (16, 8)])
+def test_bounded_buffer_matches_ref(kernel, coreset_size, block_n):
+    b, n, d = 3, 57, 11
+    X, Y, cs = _bank_data(b, n, d, seed=coreset_size, zeros=True)
+    gamma = 0.6
+    kb = fit_kernel_bank(
+        X, Y, cs, kernel=kernel, gamma=gamma, coreset_size=coreset_size,
+        block_n=block_n,
+    )
+    idx, coef, points, q, r, xi2, m = fit_kernel_bank_ref(
+        np.asarray(X), np.asarray(Y), np.asarray(cs), kernel=kernel,
+        gamma=gamma, coreset_size=coreset_size,
+    )
+    # The slot trajectory is part of the contract: identical buffers, not
+    # just close scores.
+    np.testing.assert_array_equal(np.asarray(kb.idx), idx)
+    np.testing.assert_allclose(np.asarray(kb.coef), coef, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kb.points), points, rtol=0, atol=0)
+    np.testing.assert_allclose(np.asarray(kb.q), q, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kb.r), r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kb.xi2), xi2, rtol=1e-3, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(kb.m), m)
+
+
+def test_inert_rows_do_not_move_state():
+    """Sign-0 rows are inert per model (the stream-padding contract)."""
+    b, n, d = 2, 33, 7
+    X, Y, cs = _bank_data(b, n, d, seed=9)
+    Y0 = np.asarray(Y).copy()
+    keep = np.ones(n, bool)
+    keep[1::3] = False
+    keep[0] = True
+    Yz = Y0.copy()
+    Yz[:, ~keep] = 0.0
+    kb_dense = fit_kernel_bank(
+        jnp.asarray(np.asarray(X)[keep]), jnp.asarray(Y0[:, keep]), cs,
+        kernel="rbf", gamma=0.5, coreset_size=8, block_n=8,
+    )
+    kb_inert = fit_kernel_bank(
+        X, jnp.asarray(Yz), cs, kernel="rbf", gamma=0.5, coreset_size=8,
+        block_n=8,
+    )
+    # Indices differ (they index different streams) but everything the
+    # decision function sees must agree.
+    np.testing.assert_allclose(
+        np.asarray(kb_inert.points), np.asarray(kb_dense.points),
+        rtol=1e-6, atol=1e-6,
+    )
+    np.testing.assert_allclose(
+        np.asarray(kb_inert.coef), np.asarray(kb_dense.coef),
+        rtol=1e-5, atol=1e-6,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(kb_inert.m), np.asarray(kb_dense.m)
+    )
+
+
+def test_single_row_stream():
+    X = jnp.asarray(np.eye(1, 5, dtype=np.float32))
+    Y = jnp.asarray(np.ones((2, 1), np.float32))
+    kb = fit_kernel_bank(X, Y, 1.0, kernel="rbf", coreset_size=4)
+    assert isinstance(kb, KernelBank)
+    np.testing.assert_array_equal(np.asarray(kb.m), [1, 1])
+    np.testing.assert_array_equal(np.asarray(kb.idx[:, 0]), [0, 0])
+
+
+def test_c_sweep_does_not_recompile():
+    b, n, d = 2, 20, 6
+    X, Y, _ = _bank_data(b, n, d, seed=13)
+    start = fit_kernel_bank._cache_size()
+    for c in (0.5, 2.0, 8.0):
+        fit_kernel_bank(
+            X, Y, jnp.full((b,), c), kernel="rbf", coreset_size=8, block_n=8
+        )
+    assert fit_kernel_bank._cache_size() == start + 1
+
+
+def test_stream_dtype_bf16_close():
+    b, n, d = 2, 40, 16
+    X, Y, cs = _bank_data(b, n, d, seed=21)
+    kb32 = fit_kernel_bank(
+        X, Y, cs, kernel="rbf", gamma=0.3, coreset_size=16, block_n=16
+    )
+    kb16 = fit_kernel_bank(
+        X, Y, cs, kernel="rbf", gamma=0.3, coreset_size=16, block_n=16,
+        stream_dtype="bf16",
+    )
+    np.testing.assert_allclose(
+        np.asarray(kb16.q), np.asarray(kb32.q), rtol=5e-2, atol=5e-2
+    )
+    np.testing.assert_allclose(
+        np.asarray(kb16.r), np.asarray(kb32.r), rtol=5e-2, atol=5e-2
+    )
+
+
+def test_fit_kernel_bank_validation():
+    X, Y, cs = _bank_data(2, 10, 4, seed=1)
+    with pytest.raises(ValueError, match="kernel"):
+        fit_kernel_bank(X, Y, cs, kernel="poly", coreset_size=4)
+    with pytest.raises(ValueError, match="coreset_size"):
+        fit_kernel_bank(X, Y, cs, kernel="rbf", coreset_size=0)
+    with pytest.raises(ValueError, match="variant"):
+        fit_kernel_bank(X, Y, cs, kernel="rbf", coreset_size=4, variant="x")
+    with pytest.raises(ValueError, match=r"\(B, N\)"):
+        fit_kernel_bank(X, Y[:, :-1], cs, kernel="rbf", coreset_size=4)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: rbf_kernel clamp parity with the Gram epilogue (duplicates)
+# ---------------------------------------------------------------------------
+
+
+def test_rbf_kernel_clamp_matches_gram_on_duplicates():
+    """Exact duplicate rows make the d^2 expansion go (slightly) negative in
+    f32; both the jnp helper and the Pallas epilogue must clamp at 0 so
+    K <= 1 with K(x, x) == 1 — the constant-diagonal assumption the MEB
+    update relies on."""
+    rng = np.random.default_rng(2)
+    A = rng.normal(size=(12, 40)).astype(np.float32)
+    A[3] = A[0]  # exact duplicates, plus self-pairs on the diagonal
+    A[9] = A[4]
+    B = A.copy()
+    gamma = 2.5
+    # The data must actually trigger the bug: the unclamped expansion goes
+    # negative somewhere (duplicate or self pair) in f32.
+    a2 = np.sum(A * A, 1)
+    d2_raw = a2[:, None] + a2[None, :] - 2.0 * (A @ B.T)
+    assert d2_raw.min() < 0.0
+    K_jnp = rbf_kernel(gamma)(jnp.asarray(A), jnp.asarray(B))
+    K_gram = gram(jnp.asarray(A), jnp.asarray(B), epilogue="rbf", gamma=gamma)
+    # Post-clamp: K can never exceed kappa = 1 (pre-fix it did, breaking the
+    # constant-diagonal assumption); duplicate/self pairs sit at 1 up to the
+    # f32 residue of the expansion (the clamp removes only the negative
+    # side).
+    assert float(jnp.max(K_jnp)) <= 1.0
+    assert float(jnp.max(K_gram)) <= 1.0
+    np.testing.assert_allclose(
+        np.asarray(jnp.diagonal(K_jnp)), 1.0, rtol=0, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(K_jnp), np.asarray(K_gram), rtol=1e-4, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# Satellite: gram derived-tile alignment for odd M/N
+# ---------------------------------------------------------------------------
+
+
+def test_gram_tiling_alignment():
+    for m, n in [(1, 1), (7, 100), (100, 200), (257, 513), (8, 128)]:
+        bm_, bn_ = gram_tiling(m, n, 256, 256)
+        assert bm_ % 8 == 0 and bn_ % 128 == 0, (m, n, bm_, bn_)
+        assert bm_ >= min(256, m) and bn_ >= min(256, n)
+    assert gram_tiling(1000, 1000, 256, 256) == (256, 256)
+    assert gram_tiling(100, 200, 256, 256) == (104, 256)
+
+
+@pytest.mark.parametrize("m,n,d", [(100, 200, 48), (37, 130, 513), (9, 1, 7)])
+@pytest.mark.parametrize("epilogue", ["linear", "rbf"])
+def test_gram_odd_shapes_vs_ref(m, n, d, epilogue):
+    """Regression: odd M/N used to derive misaligned (non-8/128-multiple)
+    block shapes that only interpret mode accepted."""
+    rng = np.random.default_rng(m + n)
+    A = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    B = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    K1 = gram(A, B, epilogue=epilogue, gamma=0.1)
+    K2 = gram_ref(A, B, epilogue=epilogue, gamma=0.1)
+    np.testing.assert_allclose(
+        np.asarray(K1), np.asarray(K2), rtol=1e-5, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serving twin: predict_kernel_bank vs oracle, all epilogues
+# ---------------------------------------------------------------------------
+
+
+def _served_bank(seed=5, b=4, n=48, d=10, s=12, gamma=0.5):
+    X, Y, cs = _bank_data(b, n, d, seed=seed)
+    kb = fit_kernel_bank(
+        X, Y, cs, kernel="rbf", gamma=gamma, coreset_size=s, block_n=16
+    )
+    rng = np.random.default_rng(seed + 100)
+    Q = jnp.asarray(rng.normal(size=(23, d)).astype(np.float32))
+    return kb, Q, gamma
+
+
+def test_predict_kernel_bank_scores_bit_exact():
+    kb, Q, gamma = _served_bank()
+    got = predict_kernel_bank(Q, kb.points, kb.coef, kernel="rbf", gamma=gamma)
+    want = predict_kernel_bank_ref(
+        Q, kb.points, kb.coef, kernel="rbf", gamma=gamma
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_predict_kernel_bank_ovr_topk():
+    kb, Q, gamma = _served_bank()
+    cls, margin = predict_kernel_bank(
+        Q, kb.points, kb.coef, kernel="rbf", gamma=gamma, epilogue="ovr",
+        n_classes=2,
+    )
+    cls_r, margin_r = predict_kernel_bank_ref(
+        Q, kb.points, kb.coef, kernel="rbf", gamma=gamma, epilogue="ovr",
+        n_classes=2,
+    )
+    np.testing.assert_array_equal(np.asarray(cls), np.asarray(cls_r))
+    np.testing.assert_array_equal(np.asarray(margin), np.asarray(margin_r))
+    vals, ids = predict_kernel_bank(
+        Q, kb.points, kb.coef, kernel="rbf", gamma=gamma, epilogue="topk", k=3
+    )
+    vals_r, ids_r = predict_kernel_bank_ref(
+        Q, kb.points, kb.coef, kernel="rbf", gamma=gamma, epilogue="topk", k=3
+    )
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(vals_r))
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids_r))
+
+
+def test_predict_kernel_bank_validation():
+    kb, Q, gamma = _served_bank()
+    with pytest.raises(ValueError, match="feature axis"):
+        predict_kernel_bank(Q[:, :-1], kb.points, kb.coef, kernel="rbf")
+    with pytest.raises(ValueError, match=r"\(B, S\)"):
+        predict_kernel_bank(Q, kb.points, kb.coef[:-1], kernel="rbf")
+    with pytest.raises(ValueError, match="kernel"):
+        predict_kernel_bank(Q, kb.points, kb.coef, kernel="poly")
+    with pytest.raises(ValueError, match="n_classes"):
+        predict_kernel_bank(
+            Q, kb.points, kb.coef, kernel="rbf", epilogue="ovr", n_classes=3
+        )
+    with pytest.raises(ValueError, match="topk"):
+        predict_kernel_bank(
+            Q, kb.points, kb.coef, kernel="rbf", epilogue="topk", k=99
+        )
+
+
+# ---------------------------------------------------------------------------
+# BankServer: kernelized serving, checkpoint round-trip, hot swap
+# ---------------------------------------------------------------------------
+
+
+def test_bank_server_kernel_end_to_end(tmp_path):
+    kb, Q, gamma = _served_bank(seed=17)
+    path = str(tmp_path / "kb")
+    save_kernel_bank(path, kb, kernel="rbf", gamma=gamma, meta={"n_classes": 2})
+    srv = BankServer.from_checkpoint(path, q_block=16)
+    assert srv.kernel == "rbf" and srv.gamma == gamma
+    assert srv.bank_shape == tuple(kb.points.shape)
+    got = srv.score(np.asarray(Q))
+    want = kernel_bank_decision(kb, Q, kernel="rbf", gamma=gamma)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert srv.stats.finished == 1 and srv.stats.steps == 2  # 23 rows / 16
+
+    # ovr server picks n_classes up from the meta
+    srv_ovr = BankServer.from_checkpoint(path, epilogue="ovr", q_block=16)
+    assert srv_ovr.n_classes == 2
+    cls, margin = srv_ovr.score(np.asarray(Q))
+    cls_r, margin_r = predict_kernel_bank_ref(
+        Q, kb.points, kb.coef, kernel="rbf", gamma=gamma, epilogue="ovr",
+        n_classes=2,
+    )
+    np.testing.assert_array_equal(cls, np.asarray(cls_r))
+    np.testing.assert_array_equal(margin, np.asarray(margin_r))
+
+
+def test_bank_server_kernel_hot_swap():
+    kb, Q, gamma = _served_bank(seed=19)
+    srv = BankServer(kb, kernel="rbf", gamma=gamma, q_block=16)
+    first = np.asarray(srv.score(np.asarray(Q)))
+    kb2 = KernelBank(
+        idx=kb.idx, coef=-kb.coef, points=kb.points, q=kb.q, r=kb.r,
+        xi2=kb.xi2, m=kb.m,
+    )
+    srv.swap_bank(kb2)
+    second = np.asarray(srv.score(np.asarray(Q)))
+    np.testing.assert_array_equal(second, -first)
+    assert srv.stats.bank_swaps == 1
+
+
+def test_bank_server_kernel_validation():
+    kb, Q, gamma = _served_bank(seed=23)
+    with pytest.raises(ValueError, match="kernel="):
+        BankServer(kb)  # KernelBank without kernel=
+    with pytest.raises(ValueError, match="KernelBank"):
+        BankServer(np.zeros((3, 4), np.float32), kernel="rbf")
+    srv = BankServer(kb, kernel="rbf", gamma=gamma)
+    with pytest.raises(ValueError, match="KernelBank"):
+        srv.swap_bank(np.zeros((3, 4), np.float32))
+    small = KernelBank(
+        idx=kb.idx[:, :4], coef=kb.coef[:, :4], points=kb.points[:, :4],
+        q=kb.q, r=kb.r, xi2=kb.xi2, m=kb.m,
+    )
+    with pytest.raises(ValueError, match="hot-swap"):
+        srv.swap_bank(small)
+    lin_srv = BankServer(np.zeros((3, 10), np.float32))
+    with pytest.raises(ValueError, match="KernelBank"):
+        lin_srv.swap_bank(kb)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: the new ValueErrors survive `python -O` (no bare asserts)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_new_value_errors_survive_python_O():
+    """The four guards this PR converted from bare asserts must be
+    ValueErrors with shape context, so `python -O` cannot strip them."""
+    script = r"""
+import numpy as np, jax.numpy as jnp
+from repro.kernels.gram import gram_pallas
+from repro.core import fit_chunked, fit_chunked_many
+from repro.runtime.fault_tolerance import rebalance_ranges
+
+try:  # 1) gram_pallas misaligned operands
+    gram_pallas(jnp.zeros((100, 512)), jnp.zeros((256, 512)), interpret=True)
+except ValueError as e:
+    assert "pre-padded" in str(e) and "A.shape=(100, 512)" in str(e), e
+    print("GRAM_OK")
+
+try:  # 2) fit_chunked empty stream
+    fit_chunked(iter(()), 1.0)
+except ValueError as e:
+    assert "empty stream" in str(e), e
+    print("CHUNKED_OK")
+
+try:  # 3) fit_chunked_many empty stream
+    fit_chunked_many(iter(()), jnp.ones((4,)))
+except ValueError as e:
+    assert "empty stream" in str(e) and "4-model" in str(e), e
+    print("MANY_OK")
+
+try:  # 4) rebalance_ranges with no survivors
+    rebalance_ranges([(0, 10), (10, 20)], dead=[0, 1])
+except ValueError as e:
+    assert "no survivors" in str(e) and "2 shard(s)" in str(e), e
+    print("REBALANCE_OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    out = subprocess.run(
+        [sys.executable, "-O", "-c", script],
+        env=env, capture_output=True, text=True, timeout=300,
+    )
+    assert out.returncode == 0, (
+        f"stdout:{out.stdout[-2000:]}\nstderr:{out.stderr[-4000:]}"
+    )
+    for token in ("GRAM_OK", "CHUNKED_OK", "MANY_OK", "REBALANCE_OK"):
+        assert token in out.stdout, out.stdout
