@@ -25,10 +25,19 @@ tiles revisit each resident tile, and bf16 query tiles halve the term),
 while the tiny (B, D) bank is re-read once per resident query tile — the
 cheap term, because one-pass training left the model constant-storage.
 
+``path="live"`` rows benchmark the continuous train->serve loop
+(repro.live.LiveBank) instead of a predict kernel: steady-state ingest rate
+(rows/s through train+fold+swap+checkpoint), hot-swap latency (seconds for
+``BankServer.swap_bank`` to publish an already-folded bank — the serving
+blackout window), and ``recovery_seconds`` — wall time from relaunching a
+killed trainer (crash injected mid-stream, after the last checkpoint) to
+the first FRESH bank swapped into the surviving server.
+
 Writes ``BENCH_serving.json`` at the repo root (validated by CI's
 bench-smoke next to BENCH_engine.json) and prints one ``BENCH`` line per
 config. ``--smoke`` runs a seconds-scale sweep in interpret mode for CI and
-always includes an ``ovr``-epilogue row (CI asserts it).
+always includes an ``ovr``-epilogue row and a ``live`` row (CI asserts
+both).
 
     PYTHONPATH=src python benchmarks/serving_throughput.py [--smoke]
         [--out BENCH_serving.json] [--reps 3]
@@ -54,7 +63,7 @@ from repro.kernels.ops import (
 )
 from repro.serve import BankServer
 
-SCHEMA = "streamsvm-bench-serving/v2"
+SCHEMA = "streamsvm-bench-serving/v3"
 DEFAULT_HBM_PEAK_GBPS = 819.0  # TPU v5e, per chip — same as BENCH_engine
 _DTYPE_BYTES = {"f32": 4, "bf16": 2}
 
@@ -77,6 +86,14 @@ RESULT_KEYS = (
     "queries_per_s", "model_scores_per_s", "bytes", "query_passes",
     "naive_query_bytes", "achieved_gbps", "hbm_peak_gbps",
     "roofline_seconds", "roofline_frac", "dma_overlap_efficiency",
+)
+
+# Keys for path="live" rows — the train->serve loop has its own surface
+# (ingest rate + swap latency + crash-recovery time, not kernel bytes).
+LIVE_RESULT_KEYS = (
+    "name", "path", "B", "D", "chunk_rows", "n_chunks", "n_sub_banks",
+    "rotate_every", "swap_every", "seconds_per_chunk", "rows_per_s",
+    "swaps", "checkpoints", "swap_latency_s", "recovery_seconds",
 )
 
 
@@ -266,6 +283,96 @@ def bench_one(cfg, reps, interpret, peak_gbps):
     }
 
 
+class _TimingServer:
+    """Hot-swap target that timestamps every published bank."""
+
+    def __init__(self):
+        self.times = []
+
+    def swap_bank(self, bank):
+        jax.block_until_ready(bank.w)
+        self.times.append(time.perf_counter())
+
+
+def bench_live(cfg, reps, interpret):
+    """The train->serve loop end to end: steady-state ingest, hot-swap
+    latency, and recovery-to-fresh-bank after an injected mid-stream kill."""
+    import tempfile
+
+    from repro.live import ArraySource, LiveBank
+    from repro.runtime import InjectedFailure
+
+    B, D = cfg["B"], cfg["D"]
+    chunk, n_chunks = cfg["chunk_rows"], cfg["n_chunks"]
+    n_rows = chunk * n_chunks
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(n_rows, D)).astype(np.float32)
+    X /= np.linalg.norm(X, axis=1, keepdims=True)
+    y = np.sign(rng.normal(size=n_rows) + X[:, 0]).astype(np.float32)
+    Y = np.tile(y, (B, 1))
+    cs = jnp.asarray(np.linspace(1.0, 8.0, B, dtype=np.float32))
+
+    def make(td, srv, failpoints=None):
+        return LiveBank(
+            ArraySource(X, Y, chunk), cs, ckpt_dir=os.path.join(td, "ck"),
+            n_sub_banks=cfg["n_sub_banks"], rotate_every=cfg["rotate_every"],
+            swap_every=cfg["swap_every"], server=srv, failpoints=failpoints,
+            sleep=lambda s: None, interpret=interpret,
+        )
+
+    with tempfile.TemporaryDirectory() as td:
+        make(td, _TimingServer()).run()  # compile warm-up
+    with tempfile.TemporaryDirectory() as td:
+        live = make(td, _TimingServer())
+        t0 = time.perf_counter()
+        stats = live.run()
+        total = time.perf_counter() - t0
+        bank = live.serving_bank()
+
+    # Hot-swap latency: publishing an already-folded bank into a warm
+    # server (same shape — never recompiles). This is the serving blackout.
+    server = BankServer(bank)
+    server.swap_bank(bank)  # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        server.swap_bank(bank)
+    swap_latency = (time.perf_counter() - t0) / reps
+
+    # Recovery: kill the trainer after it trains a chunk PAST its last
+    # checkpoint, relaunch, and clock the window until the surviving server
+    # receives its first fresh bank (replay + fold + swap).
+    crash_at = (n_chunks // 2) + 1
+    with tempfile.TemporaryDirectory() as td:
+        srv = _TimingServer()
+        live = make(td, srv, failpoints=[("post_train", crash_at)])
+        try:
+            live.run()
+        except InjectedFailure:
+            pass
+        swaps_before = len(srv.times)
+        t0 = time.perf_counter()
+        live.run()
+        recovery = srv.times[swaps_before] - t0
+
+    return {
+        "name": cfg["name"],
+        "path": "live",
+        "B": B,
+        "D": D,
+        "chunk_rows": chunk,
+        "n_chunks": n_chunks,
+        "n_sub_banks": cfg["n_sub_banks"],
+        "rotate_every": cfg["rotate_every"],
+        "swap_every": cfg["swap_every"],
+        "seconds_per_chunk": total / n_chunks,
+        "rows_per_s": n_rows / total,
+        "swaps": stats.swaps,
+        "checkpoints": stats.checkpoints,
+        "swap_latency_s": swap_latency,
+        "recovery_seconds": recovery,
+    }
+
+
 def _ragged_sizes(Q):
     """Deterministic ragged request spans covering Q rows (server path)."""
     spans, lo, step = [], 0, 0
@@ -308,6 +415,10 @@ def sweep(smoke: bool):
             dict(name="smoke_server_kernel_rbf", **base, B=48, b_tile=None,
                  stream_dtype="f32", kernel="rbf", coreset_size=16,
                  path="server"),
+            # continuous train->serve loop with an injected kill (CI asserts
+            # this row + its swap-latency/recovery fields)
+            dict(name="smoke_live", path="live", B=16, D=32, chunk_rows=128,
+                 n_chunks=8, n_sub_banks=2, rotate_every=3, swap_every=2),
         ]
     base = dict(D=128, q_block=256)
     return [
@@ -351,6 +462,10 @@ def sweep(smoke: bool):
         dict(name="serve_server_kernel_rbf_b64_s64", Q=4096, **base, B=64,
              b_tile=None, stream_dtype="f32", kernel="rbf", coreset_size=64,
              path="server"),
+        # the live loop at a production-ish shape: ingest rate, hot-swap
+        # blackout, and recovery time after a mid-stream kill
+        dict(name="live_b64_d128", path="live", B=64, D=128, chunk_rows=2048,
+             n_chunks=16, n_sub_banks=4, rotate_every=4, swap_every=2),
     ]
 
 
@@ -361,6 +476,9 @@ def run(smoke: bool, reps: int, interpret, name_filter: str | None = None,
     baselines = {}
     for cfg in sweep(smoke):
         if name_filter is not None and name_filter not in cfg["name"]:
+            continue
+        if cfg.get("path") == "live":
+            results.append(bench_live(cfg, reps, interpret))
             continue
         row = bench_one(cfg, reps, interpret, peak)
         base = baselines.get(cfg.get("overlap_baseline"))
@@ -412,6 +530,25 @@ def validate(report: dict):
     if not report["results"]:
         raise ValueError("BENCH report has no results")
     for row in report["results"]:
+        if row.get("path") == "live":
+            missing = [k for k in LIVE_RESULT_KEYS if k not in row]
+            if missing:
+                raise ValueError(
+                    f"live result {row.get('name')!r} missing {missing}"
+                )
+            for key in ("seconds_per_chunk", "rows_per_s", "swap_latency_s",
+                        "recovery_seconds"):
+                if not row[key] > 0:
+                    raise ValueError(
+                        f"{row['name']}: non-positive {key} ({row[key]!r})"
+                    )
+            if not (row["swaps"] >= 1 and row["checkpoints"] >= 1):
+                raise ValueError(
+                    f"{row['name']}: a live run must swap and checkpoint at "
+                    f"least once (swaps={row['swaps']}, "
+                    f"checkpoints={row['checkpoints']})"
+                )
+            continue
         missing = [k for k in RESULT_KEYS if k not in row]
         if missing:
             raise ValueError(f"result {row.get('name')!r} missing {missing}")
@@ -511,6 +648,14 @@ def main(argv=None):
            "model-scores/s", "GB/s", "roofline%", "overlap-eff", "s/batch")
     print(",".join(hdr))
     for r in report["results"]:
+        if r["path"] == "live":
+            print(
+                f'{r["name"]},-,live,-,{r["rows_per_s"]:.0f} rows/s,'
+                f'swap={r["swap_latency_s"] * 1e3:.2f}ms,'
+                f'recovery={r["recovery_seconds"]:.3f}s,-,-,'
+                f'{r["seconds_per_chunk"]:.4f}/chunk'
+            )
+            continue
         eff = r["dma_overlap_efficiency"]
         print(
             f'{r["name"]},{r["epilogue"]},{r["path"]},{r["bank_resident"]},'

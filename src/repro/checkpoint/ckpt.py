@@ -1,15 +1,33 @@
-"""Sharding-aware checkpointing with elastic restore.
+"""Sharding-aware checkpointing with elastic restore and atomic commits.
 
 save(): host-gathers every leaf (single-process container; in a multi-host
 deployment each process would write its addressable shards — the manifest
 format already records per-leaf sharding specs to support that) and writes
 one .npz plus a JSON manifest (tree structure, dtypes, step metadata).
 
+Commit protocol — a crash at ANY point leaves a checkpoint that restores
+bit-exactly to either the previous or the new state, never a torn mix:
+
+  1. the arrays payload is written to a fresh uniquely-named file through a
+     ``.tmp`` + ``os.replace`` pair (a crash mid-write leaves only garbage
+     under a name no manifest references);
+  2. the manifest — which names its arrays file via ``arrays_file`` — is
+     itself written ``.tmp`` + ``os.replace``: THE single commit point.
+     Until it lands, the old manifest still points at the old, intact
+     arrays file (this is why the arrays file is never overwritten in
+     place: replacing ``arrays.npz`` under a not-yet-replaced manifest
+     would marry old metadata to new arrays — a torn checkpoint that
+     restores newer state than ``meta`` claims);
+  3. stale arrays files from earlier commits are garbage-collected last
+     (crash before cleanup leaves harmless orphans, removed next save).
+
 restore(): rebuilds the pytree and device_puts each leaf with the sharding
 derived from the *target* mesh — which may differ in size/shape from the mesh
 that wrote the checkpoint. That is the elastic-rescale path: a 512-chip
 checkpoint restores onto 256 or 1024 chips by re-slicing (weights are stored
 logically; sharding is a property of the restore target, not the file).
+An unreadable/truncated arrays payload raises a ValueError naming the file
+instead of returning garbage.
 
 StreamSVM head state (w, R, xi2, M, stream position) is O(D) and rides in the
 same manifest — a preempted one-pass run resumes mid-stream without touching
@@ -19,7 +37,8 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Any, Callable, Dict, Optional
+import uuid
+from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
@@ -40,18 +59,39 @@ def save(path: str, tree, *, meta: Optional[Dict[str, Any]] = None):
         if str(a.dtype) == "bfloat16":  # numpy .npz cannot round-trip bf16
             a = a.view(np.uint16)
         arrays[f"leaf_{i}"] = a
-    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    # Fresh name per commit; never overwrite the file the live manifest
+    # references (see module docstring, step 2).
+    arrays_file = f"arrays-{uuid.uuid4().hex[:12]}.npz"
+    arrays_tmp = os.path.join(path, arrays_file + ".tmp")
+    with open(arrays_tmp, "wb") as f:  # file object: savez must not append .npz
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(arrays_tmp, os.path.join(path, arrays_file))
     manifest = {
         "treedef": str(treedef),
         "n_leaves": len(leaves),
         "dtypes": dtypes,
         "shapes": [list(a.shape) for a in arrays.values()],
+        "arrays_file": arrays_file,
         "meta": meta or {},
     }
     tmp = os.path.join(path, "manifest.json.tmp")
     with open(tmp, "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, os.path.join(path, "manifest.json"))  # atomic commit
+    for name in os.listdir(path):  # GC arrays of superseded commits
+        if (
+            name != arrays_file
+            and name.startswith("arrays")
+            and (name.endswith(".npz") or name.endswith(".tmp"))
+        ):
+            try:
+                os.remove(os.path.join(path, name))
+            except OSError:
+                pass  # concurrent cleanup / permissions: orphans are harmless
 
 
 def load_manifest(path: str) -> Dict[str, Any]:
@@ -72,19 +112,43 @@ def exists(path: str) -> bool:
     return os.path.exists(os.path.join(path, "manifest.json"))
 
 
+def _load_arrays(path: str, manifest: Dict[str, Any]) -> Dict[str, np.ndarray]:
+    """Eagerly read every leaf array, refusing torn payloads loudly.
+
+    ``arrays_file`` defaults to the pre-atomic-commit layout's fixed name so
+    old checkpoints keep restoring. npz reads are lazy (zip members decode on
+    access), so a truncated payload is forced to surface HERE as a clear
+    ValueError instead of as garbage mid-restore."""
+    arrays_path = os.path.join(path, manifest.get("arrays_file", "arrays.npz"))
+    try:
+        with np.load(arrays_path) as data:
+            return {name: data[name] for name in data.files}
+    except Exception as e:  # BadZipFile / EOFError / zlib / OSError ...
+        raise ValueError(
+            f"checkpoint at {path!r}: arrays payload {arrays_path!r} is "
+            f"unreadable ({type(e).__name__}: {e}) — the file is torn or "
+            "corrupt; refusing to restore garbage. Restore from an older "
+            "checkpoint or re-save."
+        ) from e
+
+
 def restore(path: str, target_tree, *, shardings=None):
     """Restore into the structure of `target_tree` (values replaced).
 
     `shardings`: optional matching pytree of NamedSharding for elastic
     placement on the current mesh; None leaves go wherever jnp defaults.
     """
-    import json as _json
-
-    data = np.load(os.path.join(path, "arrays.npz"))
-    with open(os.path.join(path, "manifest.json")) as f:
-        dtypes = _json.load(f)["dtypes"]
+    manifest = load_manifest(path)
+    dtypes = manifest["dtypes"]
+    data = _load_arrays(path, manifest)
     leaves, treedef = _flatten(target_tree)
-    assert len(leaves) == len(data.files), (len(leaves), len(data.files))
+    if len(leaves) != len(data):
+        raise ValueError(
+            f"checkpoint at {path!r} holds {len(data)} leaves but the "
+            f"restore target has {len(leaves)} — the target tree's structure "
+            "does not match what was saved (wrong checkpoint, or a "
+            "differently-shaped restore target)"
+        )
     new_leaves = []
     sh_leaves = (
         jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else [None] * len(leaves)

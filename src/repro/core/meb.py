@@ -123,6 +123,37 @@ def merge_banks(b1: Ball, b2: Ball) -> Ball:
     return jax.vmap(merge_balls)(b1, b2)
 
 
+def stack_banks(banks) -> Ball:
+    """Stack an iterable of same-shape Ball banks on a NEW leading axis.
+
+    K banks of shape (B, D) become one stacked Ball with w: (K, B, D) —
+    the layout ``fold_merge`` folds bank-wise and the live loop checkpoints
+    (repro.live keeps its K rotating sub-banks exactly like this).
+    """
+    banks = list(banks)
+    if not banks:
+        raise ValueError("stack_banks needs at least one bank; got an empty sequence")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *banks)
+
+
+def fold_banks(banks) -> Ball:
+    """Sec-4.3 fold of a python sequence of same-shape banks, in order.
+
+    The sub-bank fold helper behind the live loop's drift repair: K rotating
+    sub-banks — each a (B, D) stacked Ball trained over its own span of the
+    stream, hence disjoint example sets — fold left-to-right (callers pass
+    oldest first) into ONE serving bank via the bank-vectorized merge.
+    Equivalent to ``fold_merge(stack_banks(banks))``; a single bank passes
+    through untouched.
+    """
+    banks = list(banks)
+    if not banks:
+        raise ValueError("fold_banks needs at least one bank; got an empty sequence")
+    if len(banks) == 1:
+        return banks[0]
+    return fold_merge(stack_banks(banks))
+
+
 def fold_merge(balls: Ball, live: jax.Array | None = None) -> Ball:
     """Deterministic left fold of a stacked Ball pytree (leading axis).
 

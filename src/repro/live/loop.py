@@ -1,0 +1,532 @@
+"""LiveBank — the always-on ingest -> train -> fold -> hot-swap loop.
+
+Closes the loop between the one-pass trainer (``core.fit_bank`` /
+``fit_chunked_many``) and the serving engine (``serve.BankServer``): consume
+an unbounded stream of ``(X_chunk, y_chunk)`` chunks, train each into the
+active sub-bank through the tiled Pallas engine, fold the sub-banks with the
+bank-vectorized Sec-4.3 merge, and hot-swap the merged bank into a running
+server on a cadence — checkpointed, restartable, and drift-repairing.
+
+K-sub-bank drift-repair contract
+--------------------------------
+The paper's one-pass recursion is stream-order sensitive: a single greedy
+ball absorbs every point into an ever-growing radius, so early data shapes
+the center forever and late drift is diluted. The repair (blurred-ball
+cover, "Accurate Streaming SVMs", PAPERS.md) keeps a small COVER of balls
+instead of one:
+
+  - the stream is cut into epochs of ``rotate_every`` chunks; each epoch
+    trains its OWN fresh sub-bank (Algorithm 1 from scratch — per model,
+    a ball enclosing just that epoch's augmented points);
+  - the serving bank is the Sec-4.3 fold of the <= K live sub-banks,
+    oldest first (``core.fold_banks``) — exact in the augmented space
+    because epochs touch disjoint examples;
+  - when all K slots are full, the OLDEST sub-bank is retired:
+    ``retire="merge"`` re-merges the two oldest into one (no example's
+    influence is dropped — the cover coarsens at the old end, blurred-ball
+    style), ``retire="drop"`` forgets the oldest epoch outright (bounded
+    memory of the last ~K * rotate_every chunks — concept-drift adaptation).
+
+Bound: each sub-ball encloses its epoch's points by the Algorithm-1
+invariant, and every fold/merge yields a ball enclosing both inputs with
+radius within 2x of the optimal enclosing ball (property-tested bounds in
+tests/test_sharded_bank.py). Order sensitivity is therefore confined WITHIN
+an epoch (``rotate_every`` chunks of lookback); across epochs the cover
+re-merges from small balls instead of absorbing points one by one — drift
+in a new epoch lands in a fresh ball at full weight rather than nudging a
+giant stale center.
+
+Fault tolerance
+---------------
+Every fold commits an atomic ``StreamCheckpoint`` (checkpoint/ckpt.py:
+manifest-commit protocol — a crash at any instant leaves the previous or
+the new checkpoint, never a torn mix). ``run()`` always resumes from the
+last durable checkpoint, and the source is addressed by absolute chunk
+index (see sources.py), so a crash at ANY phase boundary replays to a
+bit-identical (f32) bank: train/fold/swap are pure functions of
+(checkpoint state, chunk index). Flaky fetches retry under a
+``runtime.RetryPolicy`` (capped exponential backoff); chunks that exhaust
+the budget are quarantined — recorded, skipped, and the loop moves on.
+The server is decoupled: while the trainer crashes and recovers, an
+attached ``BankServer`` keeps answering with the last good bank, and
+``LiveStats.bank_age_chunks`` reports how stale it is.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.core.meb import Ball, fold_banks, merge_banks
+from repro.core.multiball import fit_bank
+from repro.runtime.fault_tolerance import InjectedFailure, RetryPolicy
+
+from .sources import TransientSourceError
+
+# fetch() sentinels: stream exhausted / chunk abandoned after retries
+_END = object()
+_QUARANTINED = object()
+
+PHASES = (
+    "fetch", "post_train", "post_rotate", "post_fold", "post_swap",
+    "mid_checkpoint", "post_checkpoint",
+)
+
+
+@dataclasses.dataclass
+class LiveStats:
+    """Trainer-side staleness/health surface, mirroring serve.ServerStats.
+
+    Durable counters (restored from the checkpoint on restart, so a crashy
+    run's final accounting matches the uninterrupted run's): chunks/rows
+    ingested, folds, swaps, rotations, retirements, checkpoints, the
+    quarantined chunk ids, and ``last_swap_chunk``. Volatile counters
+    (facts about THIS process's life, never restored): ``restarts`` and
+    ``retries``. ``bank_age_chunks`` is the staleness signal: chunks
+    ingested since the served bank was last swapped.
+    """
+
+    chunks_ingested: int = 0
+    rows_ingested: int = 0
+    folds: int = 0
+    swaps: int = 0
+    rotations: int = 0
+    retirements: int = 0
+    checkpoints: int = 0
+    quarantined: List[int] = dataclasses.field(default_factory=list)
+    last_swap_chunk: int = -1
+    bank_age_chunks: int = 0
+    restarts: int = 0
+    retries: int = 0
+
+    _DURABLE = (
+        "chunks_ingested", "rows_ingested", "folds", "swaps", "rotations",
+        "retirements", "checkpoints", "quarantined", "last_swap_chunk",
+    )
+
+    def durable(self) -> dict:
+        return {k: getattr(self, k) for k in self._DURABLE}
+
+    def load_durable(self, d: dict) -> None:
+        for k in self._DURABLE:
+            if k in d:
+                setattr(self, k, d[k])
+
+
+class LiveBank:
+    """Continuous train->serve driver over a replayable chunk source.
+
+    source:        ``source(i) -> (X, y) | None`` — absolute-chunk-index
+                   addressing; must replay (sources.py documents the
+                   contract). ``y`` is (n,) shared labels or (B, n) signs.
+    cs:            (B,) per-model C values (scalar broadcasts).
+    n_sub_banks:   K rotating sub-bank slots (drift-repair cover size).
+    rotate_every:  chunks per sub-bank epoch before rotation.
+    swap_every:    chunks between fold + hot-swap pushes.
+    retire:        "merge" (re-merge two oldest, keep everything) or
+                   "drop" (forget the oldest epoch) when slots exhaust.
+    ckpt_dir:      StreamCheckpoint directory; ``run()`` resumes from it.
+    checkpoint_every_folds: folds per checkpoint commit (0 disables — then
+                   a restart replays the stream from chunk 0).
+    server / server_factory: hot-swap target. ``server_factory(bank)`` is
+                   called at the first fold to build one (e.g.
+                   ``lambda b: BankServer(b)``); an existing server can be
+                   passed or attached any time with ``attach_server``.
+    retry:         RetryPolicy classifying fetch failures (default:
+                   TransientSourceError/OSError/TimeoutError retry with
+                   capped exponential backoff; others propagate). Chunks
+                   exhausting the budget are quarantined and skipped.
+    failpoints:    crash-injection hooks for tests: a set of
+                   ``(phase, chunk_idx)`` pairs (phase in PHASES); each
+                   fires ONCE, raising InjectedFailure at that boundary.
+                   ``mid_checkpoint`` additionally drops a garbage
+                   ``.tmp`` into ckpt_dir first — the exact debris an
+                   OS-level crash mid-commit leaves behind.
+    Engine kwargs (variant/block_n/b_tile/stream_dtype/bank_resident/mesh/
+    shard_axis/interpret) pass straight through to ``core.fit_bank``.
+    """
+
+    def __init__(
+        self,
+        source: Callable,
+        cs,
+        *,
+        ckpt_dir: str,
+        n_sub_banks: int = 4,
+        rotate_every: int = 8,
+        swap_every: int = 1,
+        retire: str = "merge",
+        checkpoint_every_folds: int = 1,
+        server=None,
+        server_factory: Optional[Callable] = None,
+        retry: Optional[RetryPolicy] = None,
+        failpoints: Optional[Sequence[Tuple[str, int]]] = None,
+        sleep: Callable[[float], None] = time.sleep,
+        # engine passthrough
+        variant: str = "exact",
+        block_n: int = 256,
+        b_tile: Optional[int] = None,
+        stream_dtype=None,
+        bank_resident: str = "auto",
+        mesh=None,
+        shard_axis="data",
+        interpret: Optional[bool] = None,
+    ):
+        if n_sub_banks < 1:
+            raise ValueError(f"n_sub_banks must be >= 1: got {n_sub_banks}")
+        if rotate_every < 1:
+            raise ValueError(f"rotate_every must be >= 1: got {rotate_every}")
+        if swap_every < 1:
+            raise ValueError(f"swap_every must be >= 1: got {swap_every}")
+        if retire not in ("merge", "drop"):
+            raise ValueError(
+                f"retire must be 'merge' or 'drop': got {retire!r}"
+            )
+        for fp in failpoints or ():
+            if fp[0] not in PHASES:
+                raise ValueError(
+                    f"unknown failpoint phase {fp[0]!r}; expected one of "
+                    f"{PHASES}"
+                )
+        self.source = source
+        self.cs = jnp.atleast_1d(jnp.asarray(cs, jnp.float32))
+        self.n_models = int(self.cs.shape[0])
+        self.ckpt_dir = ckpt_dir
+        self.k = int(n_sub_banks)
+        self.rotate_every = int(rotate_every)
+        self.swap_every = int(swap_every)
+        self.retire = retire
+        self.checkpoint_every_folds = int(checkpoint_every_folds)
+        self.server = server
+        self.server_factory = server_factory
+        self.retry = retry or RetryPolicy(
+            retryable=(TransientSourceError, OSError, TimeoutError),
+            max_retries=4,
+        )
+        self._failpoints: Set[Tuple[str, int]] = set(failpoints or ())
+        self._sleep = sleep
+        self._engine_kw = dict(
+            variant=variant, block_n=block_n, b_tile=b_tile,
+            stream_dtype=stream_dtype, bank_resident=bank_resident,
+            mesh=mesh, shard_axis=shard_axis, interpret=interpret,
+        )
+        self.stats = LiveStats()
+        self._reset_state()
+
+    # -- state ---------------------------------------------------------------
+
+    def _reset_state(self) -> None:
+        self._slots: List[Optional[Ball]] = [None] * self.k
+        self._birth: List[int] = [0] * self.k
+        self._active: int = 0
+        self.chunk_idx: int = 0
+        self._folds_since_ckpt: int = 0
+        self._last_merged: Optional[Ball] = None
+        # reset durable counters without touching volatile ones (restarts,
+        # retries, bank_age are facts about this process, not the stream)
+        self.stats.load_durable(LiveStats().durable())
+
+    def _state_tree(self) -> dict:
+        ref = next(s for s in self._slots if s is not None)
+        zero = jax.tree.map(jnp.zeros_like, ref)
+
+        def stacked(get):
+            return jnp.stack(
+                [get(s if s is not None else zero) for s in self._slots]
+            )
+
+        sub = Ball(
+            w=stacked(lambda b: b.w), r=stacked(lambda b: b.r),
+            xi2=stacked(lambda b: b.xi2), m=stacked(lambda b: b.m),
+        )
+        return {
+            "birth": jnp.asarray(self._birth, jnp.int32),
+            "live": jnp.asarray(
+                [s is not None for s in self._slots], bool
+            ),
+            "sub": sub,
+        }
+
+    def _resume_from_disk(self) -> None:
+        """Disk is the source of truth at run() entry: reset in-memory state
+        and reload the last durable StreamCheckpoint (if any) — the restart
+        path after a crash, and a no-op-equivalent on a fresh start."""
+        self._reset_state()
+        if not ckpt.exists(self.ckpt_dir):
+            return
+        manifest = ckpt.load_manifest(self.ckpt_dir)
+        meta = manifest["meta"]
+        if meta.get("live_k") != self.k or meta.get("n_models") != self.n_models:
+            raise ValueError(
+                f"checkpoint at {self.ckpt_dir!r} was written by a live loop "
+                f"with K={meta.get('live_k')}, B={meta.get('n_models')}; this "
+                f"loop is configured K={self.k}, B={self.n_models} — resume "
+                "needs a matching configuration"
+            )
+        # leaf order of the state dict (sorted keys, Ball field order):
+        # birth (K,), live (K,), w (K,B,D), r, xi2, m
+        shapes, dtypes = manifest["shapes"], manifest["dtypes"]
+        target = {
+            "birth": jnp.zeros(shapes[0], dtypes[0]),
+            "live": jnp.zeros(shapes[1], bool),
+            "sub": Ball(
+                *(jnp.zeros(s, dt) for s, dt in zip(shapes[2:], dtypes[2:]))
+            ),
+        }
+        state = ckpt.restore(self.ckpt_dir, target)
+        live = np.asarray(state["live"])
+        self._birth = [int(b) for b in np.asarray(state["birth"])]
+        self._slots = [
+            jax.tree.map(lambda x, i=i: x[i], state["sub"]) if live[i] else None
+            for i in range(self.k)
+        ]
+        self._active = int(meta["active_slot"])
+        self.chunk_idx = int(meta["chunk_idx"])
+        self.stats.load_durable(meta["stats"])
+        if any(s is not None for s in self._slots):
+            self._last_merged = self._merged()
+
+    def _checkpoint(self, i: int) -> None:
+        if all(s is None for s in self._slots):
+            return  # nothing durable yet (e.g. every chunk so far quarantined)
+        self._failpoint("mid_checkpoint", i, torn_tmp=True)
+        # Count the commit in the meta it rides in: restoring checkpoint N
+        # must report N checkpoints, or every restart would lose one.
+        self.stats.checkpoints += 1
+        ckpt.save(
+            self.ckpt_dir,
+            self._state_tree(),
+            meta={
+                "chunk_idx": self.chunk_idx,
+                "active_slot": self._active,
+                "live_k": self.k,
+                "n_models": self.n_models,
+                "stats": self.stats.durable(),
+            },
+        )
+        self._folds_since_ckpt = 0
+        self._failpoint("post_checkpoint", i)
+
+    # -- failure injection ---------------------------------------------------
+
+    def _failpoint(self, phase: str, i: int, torn_tmp: bool = False) -> None:
+        key = (phase, i)
+        if key not in self._failpoints:
+            return
+        self._failpoints.discard(key)  # fire once: the restart sails past
+        if torn_tmp:
+            # The debris an OS crash mid-commit leaves under the atomic
+            # protocol: a half-written arrays tmp nothing references. The
+            # resume path must shrug it off and restore the previous commit.
+            with open(
+                os.path.join(self.ckpt_dir, "arrays-torn.npz.tmp"), "wb"
+            ) as f:
+                f.write(b"\x00garbage, not a zip")
+        raise InjectedFailure(f"injected at {phase} of chunk {i}")
+
+    # -- ingest --------------------------------------------------------------
+
+    def _fetch(self, i: int):
+        attempt = 0
+        while True:
+            try:
+                chunk = self.source(i)
+            except Exception as e:
+                if not self.retry.is_retryable(e):
+                    raise  # programming error: surface it
+                if attempt >= self.retry.max_retries:
+                    self.stats.quarantined.append(i)
+                    return _QUARANTINED
+                self._sleep(self.retry.delay(attempt))
+                attempt += 1
+                self.stats.retries += 1
+                continue
+            return _END if chunk is None else chunk
+
+    # -- train / fold / swap -------------------------------------------------
+
+    def _train(self, X, y) -> int:
+        Xc = jnp.asarray(X)
+        yc = jnp.asarray(y)
+        if yc.ndim == 1:
+            yc = jnp.broadcast_to(yc[None, :], (self.n_models, yc.shape[0]))
+        bank = fit_bank(
+            Xc, yc, self.cs, self._slots[self._active], **self._engine_kw
+        )
+        self._slots[self._active] = jax.tree.map(jnp.asarray, bank)
+        return int(Xc.shape[0])
+
+    def _age_order(self) -> List[int]:
+        """Live slot indices, oldest epoch first (deterministic)."""
+        return sorted(
+            (s for s in range(self.k) if self._slots[s] is not None),
+            key=lambda s: (self._birth[s], s),
+        )
+
+    def _rotate(self) -> None:
+        if self._slots[self._active] is None:
+            return  # empty epoch (all chunks quarantined): nothing to freeze
+        free = [s for s in range(self.k) if self._slots[s] is None]
+        if free:
+            nxt = free[0]
+        else:
+            order = self._age_order()
+            oldest = order[0]
+            if self.retire == "drop" or self.k == 1:
+                self._slots[oldest] = None
+            else:
+                second = order[1]
+                self._slots[second] = jax.tree.map(
+                    jnp.asarray,
+                    merge_banks(self._slots[oldest], self._slots[second]),
+                )
+                self._birth[second] = self._birth[oldest]
+                self._slots[oldest] = None
+            self.stats.retirements += 1
+            nxt = oldest
+        self._active = nxt
+        self._birth[nxt] = self.chunk_idx
+        self.stats.rotations += 1
+
+    def _merged(self) -> Optional[Ball]:
+        order = self._age_order()
+        if not order:
+            return None
+        return jax.tree.map(
+            jnp.asarray, fold_banks([self._slots[s] for s in order])
+        )
+
+    def _push(self, merged: Optional[Ball]) -> None:
+        if merged is None:
+            return
+        self._last_merged = merged
+        if self.server is None and self.server_factory is not None:
+            self.server = self.server_factory(merged)
+        elif self.server is not None:
+            self.server.swap_bank(merged)
+        self.stats.swaps += 1
+        self.stats.last_swap_chunk = self.chunk_idx
+        self.stats.bank_age_chunks = 0
+
+    # -- public surface ------------------------------------------------------
+
+    def attach_server(self, server, push_current: bool = True) -> None:
+        """Point hot-swaps at ``server``; optionally push the current bank."""
+        self.server = server
+        if push_current and self._last_merged is not None:
+            server.swap_bank(self._last_merged)
+
+    def serving_bank(self) -> Optional[Ball]:
+        """The last folded bank (what an attached server is serving)."""
+        return self._last_merged
+
+    def run(self, max_chunks: Optional[int] = None) -> LiveStats:
+        """Resume from the last durable checkpoint and consume the stream.
+
+        Stops when the source returns None (bounded/drained stream) or
+        after ``max_chunks`` chunk positions this call. On exit a final
+        fold + swap + checkpoint makes the tail durable and served. Crash
+        recovery = call run() again (see run_live_with_restarts).
+        """
+        self._resume_from_disk()
+        processed = 0
+        while max_chunks is None or processed < max_chunks:
+            i = self.chunk_idx
+            self._failpoint("fetch", i)
+            chunk = self._fetch(i)
+            if chunk is _END:
+                break
+            if chunk is _QUARANTINED:
+                self.chunk_idx = i + 1
+                processed += 1
+                self._cadences(i)
+                continue
+            X, y = chunk
+            if np.asarray(X).shape[0] == 0:
+                self.chunk_idx = i + 1
+                processed += 1
+                continue
+            rows = self._train(X, y)
+            self._failpoint("post_train", i)
+            self.chunk_idx = i + 1
+            self.stats.chunks_ingested += 1
+            self.stats.rows_ingested += rows
+            processed += 1
+            self._cadences(i)
+        self._finalize()
+        return self.stats
+
+    def _cadences(self, i: int) -> None:
+        """Rotation / fold+swap / checkpoint, keyed on the ABSOLUTE chunk
+        position so a replayed window re-fires them identically."""
+        if self.chunk_idx % self.rotate_every == 0:
+            self._rotate()
+            self._failpoint("post_rotate", i)
+        if self.chunk_idx % self.swap_every == 0:
+            merged = self._merged()
+            if merged is not None:
+                self.stats.folds += 1
+                self._folds_since_ckpt += 1
+                self._failpoint("post_fold", i)
+                self._push(merged)
+                self._failpoint("post_swap", i)
+        if (
+            self.checkpoint_every_folds
+            and self._folds_since_ckpt >= self.checkpoint_every_folds
+        ):
+            self._checkpoint(i)
+        if self.stats.last_swap_chunk >= 0:
+            self.stats.bank_age_chunks = (
+                self.chunk_idx - self.stats.last_swap_chunk
+            )
+
+    def _finalize(self) -> None:
+        """Drained-stream tail: fold+swap anything trained since the last
+        cadence hit, then commit a final checkpoint."""
+        if self.chunk_idx % self.swap_every != 0:
+            merged = self._merged()
+            if merged is not None and (
+                self.stats.last_swap_chunk != self.chunk_idx
+            ):
+                self.stats.folds += 1
+                self._folds_since_ckpt += 1
+                self._push(merged)
+        if self.checkpoint_every_folds and self._folds_since_ckpt:
+            self._checkpoint(self.chunk_idx - 1)
+
+
+def run_live_with_restarts(
+    live: LiveBank,
+    *,
+    max_restarts: int = 8,
+    policy: Optional[RetryPolicy] = None,
+    sleep: Callable[[float], None] = time.sleep,
+    max_chunks: Optional[int] = None,
+) -> LiveStats:
+    """Crash-recovery driver: re-enter ``live.run()`` after retryable
+    failures (the live-loop analogue of runtime.run_with_restarts).
+
+    Each restart resumes from the last durable StreamCheckpoint — the
+    crash-equivalence suite proves the recovered bank and served scores are
+    bit-identical (f32) to an uninterrupted run. Non-retryable exceptions
+    (programming errors) propagate immediately.
+    """
+    policy = policy or RetryPolicy(max_retries=max_restarts)
+    restarts = 0
+    while True:
+        try:
+            return live.run(max_chunks=max_chunks)
+        except Exception as e:
+            if not policy.is_retryable(e):
+                raise
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            live.stats.restarts += 1
+            sleep(policy.delay(restarts - 1))

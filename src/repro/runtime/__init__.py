@@ -1,5 +1,6 @@
 from .fault_tolerance import (
     InjectedFailure,
+    RetryPolicy,
     RunReport,
     StragglerPolicy,
     rebalance_ranges,
@@ -9,6 +10,7 @@ from .fault_tolerance import (
 
 __all__ = [
     "InjectedFailure",
+    "RetryPolicy",
     "RunReport",
     "StragglerPolicy",
     "rebalance_ranges",

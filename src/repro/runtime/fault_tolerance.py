@@ -19,7 +19,8 @@ steps without a crash.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Iterable, List, Optional, Sequence, Tuple
+import time
+from typing import Callable, Iterable, List, Optional, Sequence, Tuple, Type
 
 import jax
 
@@ -28,6 +29,34 @@ from repro.checkpoint import ckpt
 
 class InjectedFailure(RuntimeError):
     pass
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Failure classification + capped exponential backoff, as one object.
+
+    ``retryable`` names the exception classes worth restarting for —
+    transient infrastructure faults (preemption, flaky I/O, injected test
+    failures). Everything else is treated as a programming error and
+    propagates immediately: retrying a ValueError re-raises the same
+    ValueError ``max_retries`` times slower.
+
+    ``delay(attempt)`` is ``backoff_base * 2**attempt`` capped at
+    ``backoff_cap`` seconds (attempt counts from 0). Both the restart driver
+    (``run_with_restarts``) and the live loop's chunk-fetch retry
+    (repro.live) share this policy object.
+    """
+
+    retryable: Tuple[Type[BaseException], ...] = (InjectedFailure,)
+    max_retries: int = 8
+    backoff_base: float = 0.05
+    backoff_cap: float = 2.0
+
+    def is_retryable(self, exc: BaseException) -> bool:
+        return isinstance(exc, self.retryable)
+
+    def delay(self, attempt: int) -> float:
+        return min(self.backoff_cap, self.backoff_base * (2.0 ** attempt))
 
 
 @dataclasses.dataclass
@@ -47,13 +76,27 @@ def run_with_restarts(
     fail_at: Optional[Sequence[int]] = None,
     max_restarts: int = 8,
     shardings=None,
+    retryable: Sequence[Type[BaseException]] = (InjectedFailure,),
+    backoff_base: float = 0.05,
+    backoff_cap: float = 2.0,
+    sleep: Callable[[float], None] = time.sleep,
 ) -> Tuple[object, RunReport]:
     """Run `step_fn` over `batches` with checkpoint/restart semantics.
 
     `fail_at`: steps at which an InjectedFailure fires *after* the step
     executes but *before* its checkpoint would commit — the worst case
     (work lost back to the last checkpoint).
+
+    `retryable` classifies failures: exceptions of these classes restart
+    from the last durable checkpoint after a capped exponential backoff
+    (``backoff_base * 2**restart``, capped at ``backoff_cap``; ``sleep`` is
+    injectable for tests); anything else — a programming error — propagates
+    immediately with no restart burned.
     """
+    policy = RetryPolicy(
+        retryable=tuple(retryable), max_retries=max_restarts,
+        backoff_base=backoff_base, backoff_cap=backoff_cap,
+    )
     fail_at = set(fail_at or ())
     restarts = 0
     metrics_log: list = []
@@ -81,10 +124,13 @@ def run_with_restarts(
                     ckpt.save(ckpt_dir, state, meta={"step": i + 1})
                 metrics_log.append(m)
             return state, RunReport(len(batches), restarts, metrics_log)
-        except InjectedFailure:
+        except Exception as e:
+            if not policy.is_retryable(e):
+                raise  # programming error: no restart to burn
             restarts += 1
             if restarts > max_restarts:
                 raise
+            sleep(policy.delay(restarts - 1))
 
 
 def rebalance_ranges(

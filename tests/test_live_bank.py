@@ -1,0 +1,405 @@
+"""Live loop: crash equivalence at every phase boundary, retry/quarantine,
+K-sub-bank drift repair, server survival, and the fold helpers."""
+import functools
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.core import fit_bank, fold_banks, merge_banks, stack_banks
+from repro.core.meb import Ball
+from repro.live import (
+    PHASES,
+    ArraySource,
+    FlakySource,
+    LiveBank,
+    TransientSourceError,
+    run_live_with_restarts,
+)
+from repro.runtime import InjectedFailure, RetryPolicy
+
+D, B, CHUNK, N_CHUNKS = 8, 3, 32, 10
+CS = jnp.asarray([0.5, 2.0, 8.0], jnp.float32)
+_NOSLEEP = lambda s: None
+
+
+def _stream(n_chunks=N_CHUNKS, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n_chunks * CHUNK, D)).astype(np.float32)
+    X /= np.linalg.norm(X, axis=1, keepdims=True)
+    y = np.sign(rng.normal(size=X.shape[0]) + X[:, 0]).astype(np.float32)
+    return X, np.tile(y, (B, 1))
+
+
+def _make(source, ckpt_dir, **kw):
+    kw.setdefault("n_sub_banks", 2)
+    kw.setdefault("rotate_every", 3)
+    kw.setdefault("swap_every", 2)
+    kw.setdefault("sleep", _NOSLEEP)
+    return LiveBank(source, CS, ckpt_dir=str(ckpt_dir), **kw)
+
+
+def _bank_eq(a: Ball, b: Ball) -> bool:
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(a, b)
+    )
+
+
+# ---------------------------------------------------------------------------
+# training semantics
+# ---------------------------------------------------------------------------
+
+
+def test_single_slot_matches_sequential_fit_bank(tmp_path):
+    """K=1 with no rotation is exactly the chunked one-pass bank fit."""
+    X, Y = _stream()
+    live = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "c",
+        n_sub_banks=1, rotate_every=10**9, swap_every=1,
+    )
+    live.run()
+
+    ref = None
+    for i in range(N_CHUNKS):
+        lo = i * CHUNK
+        ref = fit_bank(
+            jnp.asarray(X[lo:lo + CHUNK]),
+            jnp.asarray(Y[:, lo:lo + CHUNK]), CS, ref,
+        )
+    assert _bank_eq(live.serving_bank(), ref)
+
+
+def test_clean_run_stats_accounting(tmp_path):
+    """Cadence arithmetic: rotations at 3/6/9, folds+swaps+ckpts at every
+    even chunk, retirements once both K=2 slots are full."""
+    X, Y = _stream()
+    stats = _make(ArraySource(X, Y, CHUNK), tmp_path / "c").run()
+    assert stats.chunks_ingested == N_CHUNKS
+    assert stats.rows_ingested == N_CHUNKS * CHUNK
+    assert stats.rotations == 3 and stats.retirements == 2
+    assert stats.folds == stats.swaps == stats.checkpoints == 5
+    assert stats.last_swap_chunk == N_CHUNKS
+    assert stats.bank_age_chunks == 0 and stats.quarantined == []
+
+
+def test_rotation_retirement_exact():
+    """K=2, rotate_every=2 over 8 chunks pins the retirement semantics:
+    retire='drop' serves ONLY the final epoch's bank (epochs e0..e2 were
+    dropped), retire='merge' serves merge(merge(merge(e0,e1),e2),e3) —
+    both bit-identical to the hand-built referents."""
+    X, Y = _stream(8, seed=3)
+
+    def fit_epoch(e, prior=None):
+        ref = prior
+        for c in (2 * e, 2 * e + 1):
+            lo = c * CHUNK
+            ref = fit_bank(
+                jnp.asarray(X[lo:lo + CHUNK]),
+                jnp.asarray(Y[:, lo:lo + CHUNK]), CS, ref,
+            )
+        return ref
+
+    epochs = [fit_epoch(e) for e in range(4)]
+    banks = {}
+    for retire in ("drop", "merge"):
+        import tempfile
+        with tempfile.TemporaryDirectory() as td:
+            live = _make(
+                ArraySource(X, Y, CHUNK), td, n_sub_banks=2,
+                rotate_every=2, swap_every=8, retire=retire,
+            )
+            stats = live.run()
+            assert stats.rotations == 4 and stats.retirements == 3
+            banks[retire] = live.serving_bank()
+
+    assert _bank_eq(banks["drop"], epochs[3])
+    assert _bank_eq(
+        banks["merge"], functools.reduce(merge_banks, epochs)
+    )
+    assert not _bank_eq(banks["drop"], banks["merge"])
+
+
+def test_fold_helpers():
+    X, Y = _stream(3, seed=5)
+    chunks = [
+        fit_bank(
+            jnp.asarray(X[i * CHUNK:(i + 1) * CHUNK]),
+            jnp.asarray(Y[:, i * CHUNK:(i + 1) * CHUNK]), CS,
+        )
+        for i in range(3)
+    ]
+    stacked = stack_banks(chunks)
+    assert stacked.w.shape == (3, B, D) and stacked.r.shape == (3, B)
+    # deterministic: the same fold twice is bit-identical; numerically it is
+    # the sequential left merge (last-ulp apart from the eager python
+    # reduce — jit fuses the scan arithmetic differently)
+    assert _bank_eq(fold_banks(chunks), fold_banks(list(chunks)))
+    eager = functools.reduce(merge_banks, chunks)
+    for a, b in zip(fold_banks(chunks), eager):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7
+        )
+    assert int(fold_banks(chunks).m.sum()) == int(eager.m.sum())
+    assert fold_banks(chunks[:1]) is chunks[0]
+    with pytest.raises(ValueError, match="empty"):
+        fold_banks([])
+    with pytest.raises(ValueError, match="empty"):
+        stack_banks(())
+
+
+def test_constructor_validation(tmp_path):
+    X, Y = _stream(1)
+    src = ArraySource(X, Y, CHUNK)
+    with pytest.raises(ValueError, match="n_sub_banks"):
+        _make(src, tmp_path, n_sub_banks=0)
+    with pytest.raises(ValueError, match="rotate_every"):
+        _make(src, tmp_path, rotate_every=0)
+    with pytest.raises(ValueError, match="retire"):
+        _make(src, tmp_path, retire="evict")
+    with pytest.raises(ValueError, match="unknown failpoint phase"):
+        _make(src, tmp_path, failpoints=[("pre_train", 3)])
+    with pytest.raises(ValueError, match="chunk_size"):
+        ArraySource(X, Y, 0)
+
+
+# ---------------------------------------------------------------------------
+# crash equivalence — the acceptance criterion
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def clean_reference(tmp_path_factory):
+    """The uninterrupted run every crashy variant must reproduce bit-exactly."""
+    X, Y = _stream()
+    live = _make(
+        ArraySource(X, Y, CHUNK),
+        tmp_path_factory.mktemp("clean") / "c",
+    )
+    stats = live.run()
+    return live.serving_bank(), stats.durable()
+
+
+@pytest.mark.parametrize("phase", PHASES)
+def test_crash_equivalence_at_every_phase(tmp_path, phase, clean_reference):
+    """Inject a crash at each phase boundary of chunk 5 (where rotation,
+    fold, swap and checkpoint ALL fire: chunk_idx 6 is divisible by both
+    cadences) — one restart later the bank and the durable accounting are
+    bit-identical to the uninterrupted run."""
+    ref_bank, ref_stats = clean_reference
+    X, Y = _stream()
+    live = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "c", failpoints=[(phase, 5)]
+    )
+    stats = run_live_with_restarts(live, sleep=_NOSLEEP)
+    assert stats.restarts == 1, f"failpoint {phase!r} never fired"
+    assert _bank_eq(live.serving_bank(), ref_bank)
+    assert stats.durable() == ref_stats
+    # recovery swept up any mid-commit debris (mid_checkpoint drops a torn
+    # .tmp in the directory first; the next commit's GC removes it)
+    leftover = [f for f in os.listdir(tmp_path / "c") if f.endswith(".tmp")]
+    assert leftover == []
+
+
+def test_repeated_crashes_still_converge(tmp_path, clean_reference):
+    """Five crashes at five different boundaries in one run."""
+    ref_bank, ref_stats = clean_reference
+    X, Y = _stream()
+    fps = [("fetch", 1), ("post_train", 3), ("post_fold", 5),
+           ("mid_checkpoint", 7), ("post_swap", 9)]
+    live = _make(ArraySource(X, Y, CHUNK), tmp_path / "c", failpoints=fps)
+    stats = run_live_with_restarts(live, sleep=_NOSLEEP)
+    assert stats.restarts == 5
+    assert _bank_eq(live.serving_bank(), ref_bank)
+    assert stats.durable() == ref_stats
+
+
+def test_run_live_nonretryable_propagates(tmp_path):
+    """run_live_with_restarts must not eat programming errors."""
+    def bad_source(i):
+        raise TypeError("a bug, not infrastructure")
+
+    live = _make(bad_source, tmp_path / "c")
+    # TypeError is not in the fetch RetryPolicy either: straight through
+    with pytest.raises(TypeError, match="a bug"):
+        run_live_with_restarts(live, sleep=_NOSLEEP)
+    assert live.stats.restarts == 0 and live.stats.retries == 0
+
+
+def test_resume_rejects_mismatched_configuration(tmp_path):
+    X, Y = _stream(4)
+    _make(ArraySource(X, Y, CHUNK), tmp_path / "c").run()
+    other = _make(ArraySource(X, Y, CHUNK), tmp_path / "c", n_sub_banks=3)
+    with pytest.raises(ValueError, match="K=2"):
+        other.run()
+
+
+def test_checkpointing_disabled(tmp_path):
+    X, Y = _stream(4)
+    live = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "c", checkpoint_every_folds=0
+    )
+    stats = live.run()
+    assert stats.checkpoints == 0
+    assert not ckpt.exists(str(tmp_path / "c"))
+
+
+# ---------------------------------------------------------------------------
+# retry / quarantine
+# ---------------------------------------------------------------------------
+
+
+def test_fetch_retry_backoff_and_quarantine(tmp_path):
+    """Transient chunk delivers after its faults; poison chunk exhausts the
+    budget into quarantine; the recorded sleeps are the capped exponential."""
+    X, Y = _stream()
+    delays = []
+    live = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "c", sleep=delays.append,
+        retry=RetryPolicy(
+            retryable=(TransientSourceError,), max_retries=2,
+            backoff_base=0.1, backoff_cap=0.15,
+        ),
+    )
+    live.source = FlakySource(
+        live.source, {1: 2, 4: FlakySource.POISON}
+    )
+    stats = live.run()
+    # chunk 1: two faults then delivered; chunk 4: 2 retries then quarantined
+    assert stats.retries == 4
+    assert delays == [0.1, 0.15, 0.1, 0.15]
+    assert stats.quarantined == [4]
+    assert stats.chunks_ingested == N_CHUNKS - 1
+    assert stats.rows_ingested == (N_CHUNKS - 1) * CHUNK
+    # a quarantined chunk keeps its stream position
+    assert live.chunk_idx == N_CHUNKS
+
+
+def test_fetch_nonretryable_propagates(tmp_path):
+    X, Y = _stream()
+    live = _make(ArraySource(X, Y, CHUNK), tmp_path / "c")
+    live.source = FlakySource(live.source, {2: 1}, exc=ZeroDivisionError)
+    with pytest.raises(ZeroDivisionError):
+        live.run()
+    assert live.stats.retries == 0
+
+
+# ---------------------------------------------------------------------------
+# server decoupling
+# ---------------------------------------------------------------------------
+
+
+class _RecordingServer:
+    """Stand-in hot-swap target: remembers every bank it was handed."""
+
+    def __init__(self):
+        self.banks = []
+
+    def swap_bank(self, bank):
+        self.banks.append(bank)
+
+
+def test_server_survives_trainer_crash(tmp_path):
+    """The server object outlives the trainer: it keeps the last good bank
+    through the crash (staleness visible in bank_age_chunks), and the
+    post-restart swap history is bit-identical to the crash-free run's."""
+    X, Y = _stream()
+
+    clean_srv = _RecordingServer()
+    _make(ArraySource(X, Y, CHUNK), tmp_path / "a", server=clean_srv).run()
+
+    srv = _RecordingServer()
+    live = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "b", server=srv,
+        failpoints=[("post_train", 5)],
+    )
+    with pytest.raises(InjectedFailure):
+        live.run()
+    # trainer is down; the server still holds the chunk-4 bank and knows
+    # how stale it is (chunk 5 ingested since the swap)
+    assert len(srv.banks) == 2
+    assert _bank_eq(srv.banks[-1], clean_srv.banks[1])
+    assert live.stats.bank_age_chunks == 1
+
+    live.run()  # recovery: resume from the durable checkpoint
+    assert len(srv.banks) == len(clean_srv.banks) == 5
+    assert all(_bank_eq(a, b) for a, b in zip(srv.banks, clean_srv.banks))
+
+
+def test_attach_server_pushes_current_bank(tmp_path):
+    X, Y = _stream(4)
+    live = _make(ArraySource(X, Y, CHUNK), tmp_path / "c")
+    live.run()
+    srv = _RecordingServer()
+    live.attach_server(srv)
+    assert len(srv.banks) == 1 and _bank_eq(srv.banks[0], live.serving_bank())
+
+
+# ---------------------------------------------------------------------------
+# process-level crash: the trainer actually dies
+# ---------------------------------------------------------------------------
+
+_SUBPROC = r"""
+import os, sys
+import numpy as np, jax.numpy as jnp
+from repro.checkpoint import ckpt
+from repro.live import ArraySource, LiveBank
+from repro.runtime import InjectedFailure
+
+ckpt_dir, out_dir, mode = sys.argv[1], sys.argv[2], sys.argv[3]
+rng = np.random.default_rng(7)
+X = rng.normal(size=(8 * 16, 4)).astype(np.float32)
+y = np.sign(rng.normal(size=X.shape[0]) + X[:, 0]).astype(np.float32)
+live = LiveBank(
+    ArraySource(X, y, 16), jnp.asarray([1.0, 4.0]), ckpt_dir=ckpt_dir,
+    n_sub_banks=2, rotate_every=3, swap_every=2, sleep=lambda s: None,
+    failpoints=[("post_fold", 3)] if mode == "crash" else None,
+)
+try:
+    live.run()
+except InjectedFailure:
+    os._exit(7)  # hard exit: no unwinding, no cleanup — a real dead process
+ckpt.save(out_dir, live.serving_bank(), meta={"stats": live.stats.durable()})
+print("DONE")
+"""
+
+
+@pytest.mark.slow
+def test_process_crash_and_relaunch_bit_exact(tmp_path):
+    """The trainer PROCESS dies (os._exit mid-run, nothing flushed) and a
+    fresh process resumes from the on-disk checkpoint: final bank and
+    durable stats equal a process that never crashed."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+
+    def launch(ckpt_dir, out_dir, mode):
+        return subprocess.run(
+            [sys.executable, "-c", _SUBPROC, str(ckpt_dir), str(out_dir), mode],
+            env=env, capture_output=True, text=True, timeout=300,
+        )
+
+    crashed = launch(tmp_path / "ck", tmp_path / "out", "crash")
+    assert crashed.returncode == 7, crashed.stderr[-4000:]
+    relaunch = launch(tmp_path / "ck", tmp_path / "out", "resume")
+    assert relaunch.returncode == 0, relaunch.stderr[-4000:]
+    assert "DONE" in relaunch.stdout
+
+    clean = launch(tmp_path / "ck_clean", tmp_path / "out_clean", "clean")
+    assert clean.returncode == 0, clean.stderr[-4000:]
+
+    target = Ball(
+        w=jnp.zeros((2, 4)), r=jnp.zeros((2,)), xi2=jnp.zeros((2,)),
+        m=jnp.zeros((2,), jnp.int32),
+    )
+    recovered = ckpt.restore(str(tmp_path / "out"), target)
+    reference = ckpt.restore(str(tmp_path / "out_clean"), target)
+    assert _bank_eq(recovered, reference)
+    assert (
+        ckpt.load_meta(str(tmp_path / "out"))["stats"]
+        == ckpt.load_meta(str(tmp_path / "out_clean"))["stats"]
+    )
