@@ -459,6 +459,14 @@ def sweep(smoke: bool):
         dict(name="serve_kernel_linear_b64_s64", Q=4096, **base, B=64,
              b_tile=None, stream_dtype="f32", kernel="linear",
              coreset_size=64),
+        # coreset-size sweep: S is the serve-side state/latency knob the
+        # training evictions trade accuracy against — (Q, B*S) kernel block
+        # and (B, S, D) gather scale linearly in S
+        dict(name="serve_kernel_rbf_b64_s16", Q=4096, **base, B=64,
+             b_tile=None, stream_dtype="f32", kernel="rbf", coreset_size=16),
+        dict(name="serve_kernel_rbf_b64_s128", Q=4096, **base, B=64,
+             b_tile=None, stream_dtype="f32", kernel="rbf",
+             coreset_size=128),
         dict(name="serve_server_kernel_rbf_b64_s64", Q=4096, **base, B=64,
              b_tile=None, stream_dtype="f32", kernel="rbf", coreset_size=64,
              path="server"),

@@ -34,6 +34,15 @@ Configs needing more devices than the process has are SKIPPED (printed, not
 silent); CI's bench-smoke forces 8 host devices so the sharded smoke row is
 always measured there.
 
+Kernelized rows (schema v3) sweep ``coreset_size`` x ``eviction`` x
+``n_shards``: ``eviction`` picks the core-set compression policy
+("smallest-coef" or "farthest-point" — the latter maintains an extra (S, S)
+core-set Gram carry per model), and ``n_shards > 1`` routes through
+``fit_kernel_bank(..., mesh=)`` — per-shard one-pass fits folded with the
+kernelized Sec-4.3 merge. Their ``vmem_working_set_bytes`` comes from
+``kernels.ops.kernel_engine_vmem_bytes``, the same byte model the fit's
+preflight budgets against (``s_tile=`` caps its core-set operand terms).
+
 Writes ``BENCH_engine.json`` at the repo root (schema below) so the perf
 trajectory is tracked from this PR onward, and prints one ``BENCH`` line per
 config. ``--smoke`` runs a seconds-scale sweep in interpret mode for CI,
@@ -55,9 +64,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import streamsvm_fit_many
-from repro.kernels.ops import bank_tiling, engine_vmem_bytes, gram_tiling
+from repro.kernels.ops import bank_tiling, engine_vmem_bytes
 
-SCHEMA = "streamsvm-bench-engine/v2"
+SCHEMA = "streamsvm-bench-engine/v3"
 DEFAULT_HBM_PEAK_GBPS = 819.0  # TPU v5e, per chip
 _DTYPE_BYTES = {"f32": 4, "bf16": 2}
 
@@ -76,7 +85,7 @@ def hbm_peak_gbps(override=None) -> float:
 RESULT_KEYS = (
     "name", "B", "D", "N", "block_n", "b_tile", "n_bank_tiles", "n_shards",
     "stream_dtype", "variant", "lookahead", "bank_resident", "kernel",
-    "coreset_size", "vmem_working_set_bytes", "seconds_per_pass",
+    "coreset_size", "eviction", "vmem_working_set_bytes", "seconds_per_pass",
     "rows_per_s", "model_rows_per_s", "bytes", "stream_passes",
     "naive_stream_bytes", "achieved_gbps", "hbm_peak_gbps",
     "roofline_seconds", "roofline_frac", "dma_overlap_efficiency",
@@ -152,11 +161,18 @@ def bench_one(cfg, reps, interpret, peak_gbps):
     sdt = cfg["stream_dtype"] if cfg["stream_dtype"] != "f32" else None
     if kernel is not None:
         from repro.core import fit_kernel_bank
+        from repro.kernels.ops import kernel_engine_vmem_bytes
 
+        eviction = cfg.get("eviction", "smallest-coef")
+        s_tile = cfg.get("s_tile")
+        mesh = (
+            jax.make_mesh((n_shards,), ("data",)) if n_shards > 1 else None
+        )
         fit = lambda X_, Y_, cs_: fit_kernel_bank(
             X_, Y_, cs_, kernel=kernel, gamma=0.5,
-            coreset_size=coreset_size, variant=variant,
-            block_n=cfg["block_n"], stream_dtype=sdt, interpret=interpret,
+            coreset_size=coreset_size, eviction=eviction, variant=variant,
+            block_n=cfg["block_n"], s_tile=s_tile, stream_dtype=sdt,
+            mesh=mesh, interpret=interpret,
         )
         run = lambda: jax.block_until_ready(fit(X, Y, cs))
         run()  # compile
@@ -165,18 +181,20 @@ def bench_one(cfg, reps, interpret, peak_gbps):
             run()
         sec = (time.perf_counter() - t0) / reps
         by = modeled_bytes(
-            B, D, N, cfg["stream_dtype"], block_n=cfg["block_n"],
+            B, D, N, cfg["stream_dtype"], n_shards, block_n=cfg["block_n"],
             kernel=kernel, coreset_size=coreset_size,
         )
         total = sum(by.values())
         roofline_sec = total / (peak_gbps * 1e9)
-        # Working-set estimate: the dominant resident blocks are the two
-        # fused Gram launches' tiles (A/B operand tiles + f32 accumulator)
-        # plus the streamed data tile itself.
-        bm_, bn_ = gram_tiling(cfg["block_n"], B * coreset_size, 256, 256)
-        bk = 512
-        working_set = (
-            (bm_ * bk + bn_ * bk + bm_ * bn_) * 4 + cfg["block_n"] * D * 4
+        # Per-step VMEM working set from the engine's own preflight byte
+        # model (Gram tiles + the s_tile-capped K_cs block / core-set
+        # operand + the stream tile) — the same numbers fit_kernel_bank
+        # budgets against.
+        working_set = sum(
+            kernel_engine_vmem_bytes(
+                B, D, coreset_size=coreset_size, block_n=cfg["block_n"],
+                s_tile=s_tile, stream_dtype=sdt,
+            ).values()
         )
         return {
             "name": cfg["name"],
@@ -186,13 +204,14 @@ def bench_one(cfg, reps, interpret, peak_gbps):
             "block_n": cfg["block_n"],
             "b_tile": None,
             "n_bank_tiles": 1,
-            "n_shards": 1,
+            "n_shards": n_shards,
             "stream_dtype": cfg["stream_dtype"],
             "variant": variant,
             "lookahead": None,
             "bank_resident": "vmem",
             "kernel": kernel,
             "coreset_size": coreset_size,
+            "eviction": eviction,
             "vmem_working_set_bytes": working_set,
             "seconds_per_pass": sec,
             "rows_per_s": N / sec,
@@ -268,6 +287,7 @@ def bench_one(cfg, reps, interpret, peak_gbps):
         "bank_resident": bank_resident,
         "kernel": None,
         "coreset_size": None,
+        "eviction": None,
         "vmem_working_set_bytes": working_set,
         "seconds_per_pass": sec,
         "rows_per_s": N / sec,
@@ -306,6 +326,16 @@ def sweep(smoke: bool):
             # through the fused epilogue (CI asserts this row + its fields)
             dict(name="smoke_kernel_rbf", **base, b_tile=None,
                  stream_dtype="f32", kernel="rbf", coreset_size=32),
+            # eviction-policy variant of the same kernelized fit
+            dict(name="smoke_kernel_rbf_fp", **base, b_tile=None,
+                 stream_dtype="f32", kernel="rbf", coreset_size=32,
+                 eviction="farthest-point"),
+            # mesh-sharded kernelized bank (8 host devices in CI's second
+            # bench-smoke pass; CI asserts this row carries n_shards == 8
+            # and an eviction field)
+            dict(name="smoke_sharded_kernel_rbf_s8", **base, b_tile=None,
+                 stream_dtype="f32", kernel="rbf", coreset_size=32,
+                 n_shards=8),
         ]
     base = dict(D=128, N=4096, block_n=256)
     cfgs = [
@@ -357,6 +387,25 @@ def sweep(smoke: bool):
              stream_dtype="f32", kernel="linear", coreset_size=64),
         dict(name="kernel_rbf_b16_s64_bf16", B=16, **base, b_tile=None,
              stream_dtype="bf16", kernel="rbf", coreset_size=64),
+        # core-set size sweep: S is the state/accuracy knob — smaller S
+        # means less Gram work and gather traffic per tile
+        dict(name="kernel_rbf_b16_s16", B=16, **base, b_tile=None,
+             stream_dtype="f32", kernel="rbf", coreset_size=16),
+        dict(name="kernel_rbf_b16_s128", B=16, **base, b_tile=None,
+             stream_dtype="f32", kernel="rbf", coreset_size=128),
+        # eviction-policy sweep at fixed shape: farthest-point maintains a
+        # per-model (S, S) core-set Gram carry on top of smallest-coef
+        dict(name="kernel_rbf_b16_s64_fp", B=16, **base, b_tile=None,
+             stream_dtype="f32", kernel="rbf", coreset_size=64,
+             eviction="farthest-point"),
+        # mesh-sharded kernelized bank: per-shard one-pass fits folded with
+        # the kernelized Sec-4.3 merge (measured in the forced-8-device
+        # second pass, like the linear sharded rows)
+        dict(name="sharded_kernel_rbf_b16_s64_s8", B=16, **base, b_tile=None,
+             stream_dtype="f32", kernel="rbf", coreset_size=64, n_shards=8),
+        dict(name="sharded_kernel_rbf_b16_s64_fp_s8", B=16, **base,
+             b_tile=None, stream_dtype="f32", kernel="rbf", coreset_size=64,
+             eviction="farthest-point", n_shards=8),
     ]
     return cfgs
 
@@ -462,6 +511,18 @@ def validate(report: dict):
             raise ValueError(
                 f"{row['name']}: coreset_size={row['coreset_size']!r} "
                 "without a kernel"
+            )
+        if row["kernel"] is not None:
+            if row["eviction"] not in ("smallest-coef", "farthest-point"):
+                raise ValueError(
+                    f"{row['name']}: kernelized rows need eviction in "
+                    "('smallest-coef', 'farthest-point'), got "
+                    f"{row['eviction']!r}"
+                )
+        elif row["eviction"] is not None:
+            raise ValueError(
+                f"{row['name']}: eviction={row['eviction']!r} without a "
+                "kernel"
             )
         if not (
             isinstance(row["vmem_working_set_bytes"], int)

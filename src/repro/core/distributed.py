@@ -15,6 +15,11 @@ Two entry points:
                       (meb.fold_merge over the gathered (S, B, ...) stack).
                       Ragged streams are padded with inert sign-0 rows, so
                       any N works on any shard count.
+``fit_kernel_bank_sharded``
+                      the KERNELIZED bank per shard (bounded core-set
+                      buffers), folded with the kernelized Sec-4.3 merge
+                      (meb.merge_kernel_banks: cross-Gram center distance +
+                      coreset-of-coresets compression back to S slots).
 
 Communication: one all_gather of B * (D+3) floats per shard, once per stream —
 negligible against ICI bandwidth at any B * D that fits in HBM.
@@ -41,7 +46,8 @@ except ImportError:  # older jax: experimental location, check_rep kwarg
     from jax.experimental.shard_map import shard_map as _shard_map
     _CHECK_REP_KW = "check_rep"
 
-from .meb import Ball, fold_merge, merge_banks
+from .kernel_bank import KernelBank, _fit_kernel_bank
+from .meb import Ball, fold_merge, merge_banks, merge_kernel_banks
 from .streamsvm import fit, fit_lookahead
 
 
@@ -159,6 +165,149 @@ def _sharded_fold(
         **{_CHECK_REP_KW: False},
     )
     return fn(X, Y, cs)
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "mesh", "axes", "n_shards", "shard_n", "n_rows", "kernel",
+        "coreset_size", "eviction", "variant", "block_n", "s_tile",
+        "stream_dtype", "interpret",
+    ),
+)
+def _sharded_kernel_fold(
+    X, Y, cs, gamma, *,
+    mesh, axes, n_shards, shard_n, n_rows, kernel, coreset_size, eviction,
+    variant, block_n, s_tile, stream_dtype, interpret,
+):
+    """jit'd shard_map core of fit_kernel_bank_sharded.
+
+    Module-level for the same jit-cache reason as ``_sharded_fold``. Each
+    shard runs the kernelized engine over its contiguous range (the engine's
+    DEFERRED seeding makes ranges starting with inert sign-0 rows — or
+    entirely padding — correct without special-casing), rewrites its
+    buffer's stream indices to GLOBAL coordinates, gathers every shard's
+    7-leaf bank, and folds them with the kernelized Sec-4.3 merge. Fully
+    padded shards produce m == 0 banks — exact merge identities — and are
+    additionally skipped statically (shard liveness is a trace-time
+    constant).
+    """
+
+    def local_fit(Xs, Ys, cs_, gamma_):
+        bank = _fit_kernel_bank(
+            Xs, Ys, cs_, gamma_,
+            kernel=kernel, coreset_size=coreset_size, eviction=eviction,
+            variant=variant, block_n=block_n, s_tile=s_tile,
+            stream_dtype=stream_dtype, interpret=interpret,
+        )
+        # Shard-local buffer indices -> global stream indices (the shards
+        # hold contiguous ranges in mesh-axes row-major order, matching the
+        # all_gather stacking below). Points were already gathered from the
+        # LOCAL rows by the engine, so only idx needs the offset.
+        sid = jnp.zeros((), jnp.int32)
+        for a in axes:
+            sid = sid * mesh.shape[a] + jax.lax.axis_index(a)
+        bank = bank._replace(
+            idx=jnp.where(bank.idx >= 0, bank.idx + sid * shard_n, bank.idx)
+        )
+        gather = lambda v: jax.lax.all_gather(v, axes, tiled=False)
+        stacked = KernelBank(*(gather(leaf) for leaf in bank))
+        take = lambda i: jax.tree.map(lambda x: x[i], stacked)
+        live = [i * shard_n < n_rows for i in range(n_shards)]
+        acc = None
+        for i in range(n_shards):
+            if not live[i]:
+                continue
+            acc = take(i) if acc is None else merge_kernel_banks(
+                acc, take(i), kernel=kernel, gamma=gamma_, eviction=eviction
+            )
+        return acc
+
+    fn = _shard_map(
+        local_fit,
+        mesh=mesh,
+        in_specs=(P(axes), P(None, axes), P(), P()),
+        out_specs=jax.tree.map(lambda _: P(), KernelBank(*range(7))),
+        **{_CHECK_REP_KW: False},
+    )
+    return fn(X, Y, cs, gamma)
+
+
+def fit_kernel_bank_sharded(
+    X: jax.Array,
+    Y: jax.Array,
+    cs,
+    mesh: Mesh,
+    *,
+    axis: str | Tuple[str, ...] = "data",
+    kernel: str = "rbf",
+    gamma=1.0,
+    coreset_size: int = 64,
+    eviction: str = "smallest-coef",
+    variant: str = "exact",
+    block_n: int = 256,
+    s_tile: int | None = None,
+    stream_dtype=None,
+    interpret: bool | None = None,
+) -> KernelBank:
+    """M stream shards x B kernelized models in one pass each.
+
+    The kernel-space twin of ``fit_bank_sharded``: the stream is split into
+    ``n_shards`` contiguous ranges over the ``axis`` axes of ``mesh``; every
+    shard runs the tiled core-set engine (``core.fit_kernel_bank``'s jit'd
+    core — ``coreset_size``, ``eviction``, ``s_tile``, ``stream_dtype`` all
+    apply per shard) over its local range, the per-shard (B, S) banks are
+    exchanged with one all_gather (B * S * (D + 2) floats + the ball
+    scalars, still independent of N), and every model lane is folded with
+    the kernelized Sec-4.3 merge: concatenate core-set buffers, re-compress
+    to S slots (coreset-of-coresets), merge (q, r, xi2) with the
+    ``merge_balls`` algebra (``meb.merge_kernel_banks``).
+
+    Ragged N is fine: the remainder is padded with inert rows (feature 0,
+    sign 0), shard ranges that START with padding seed on their first live
+    row (the engine's deferred seeding), and fully-padded shards fold as
+    exact m == 0 identities AND are skipped statically. The folded bank's
+    ``idx`` leaf carries GLOBAL stream indices, so the result is directly
+    comparable with a single-device fit's buffer.
+
+    Numpy oracle for the fold: per-range single-device fits merged with
+    ``kernels.ref.merge_kernel_banks_ref`` (tests/test_kernel_merge.py).
+    Returns the folded KernelBank, replicated on every device — checkpoint
+    it with ``save_kernel_bank`` and ``BankServer.from_checkpoint`` serves
+    it bit-exact with ``kernel_bank_decision`` (f32).
+    """
+    axes = _mesh_axes(axis)
+    n_shards = _n_shards(mesh, axes)
+    n, d = X.shape
+    b = Y.shape[0]
+    if Y.shape != (b, n):
+        raise ValueError(
+            f"Y must be (B, N) sign rows matching X: got Y.shape={Y.shape}, "
+            f"X.shape={X.shape}"
+        )
+    if n < 1:
+        raise ValueError(f"need at least one stream row: got X.shape={X.shape}")
+    cs = jnp.broadcast_to(jnp.asarray(cs, jnp.float32), (b,))
+    gamma = jnp.asarray(gamma, jnp.float32)
+
+    shard_n = -(-n // n_shards)  # rows per shard, ceil
+    pad = shard_n * n_shards - n
+    if pad:
+        # Inert remainder rows: feature 0 AND sign 0 — never seed, violate
+        # or absorb, so the padded run folds identically to the ragged
+        # ranges.
+        X = jnp.pad(X, ((0, pad), (0, 0)))
+        Y = jnp.pad(Y, ((0, 0), (0, pad)))
+    if not isinstance(X, jax.core.Tracer):  # eager call: place shards up front
+        X = jax.device_put(X, NamedSharding(mesh, P(axes)))
+        Y = jax.device_put(Y, NamedSharding(mesh, P(None, axes)))
+    return _sharded_kernel_fold(
+        X, Y, cs, gamma,
+        mesh=mesh, axes=axes, n_shards=n_shards, shard_n=shard_n, n_rows=n,
+        kernel=kernel, coreset_size=coreset_size, eviction=eviction,
+        variant=variant, block_n=block_n, s_tile=s_tile,
+        stream_dtype=stream_dtype, interpret=interpret,
+    )
 
 
 def fit_bank_sharded(

@@ -24,20 +24,49 @@ and then runs the O(block_n * B * S) coefficient recursion (a lax.scan of
 cheap elementwise work — the MXU-shaped O(block_n * B * S * D) kernel
 evaluations all live in the gram calls). A row inserted mid-tile reads its
 kernel values against later rows from K_tt, so the recursion is exactly
-row-at-a-time despite the tiled evaluation.
+row-at-a-time despite the tiled evaluation. ``s_tile=`` chunks the K_cs
+launch over the S axis (bit-exact f32 with the unchunked launch), so banks
+whose (B * S) core-set operand outgrows the VMEM budget still train — the
+kernel-bank twin of the linear engine's ``bank_resident`` knob, preflighted
+against the same byte model (``kernels.ops.kernel_engine_vmem_bytes``).
 
-When a model's buffer is full, the incoming core vector **evicts the
-smallest-|coef| slot** — the bounded-buffer compression step ("On Coresets
-for SVMs", PAPERS.md): the recursion scales every coefficient by (1 - s) at
-each absorb, so the smallest |coef| is the slot contributing least to the
-center. The running center norm q keeps the dense recursion (it needs only
-g and k(x, x)), so with ``coreset_size >= N`` nothing is ever evicted and
-the engine reproduces ``fit_kernelized`` exactly — property-tested, per
-model, in tests/test_kernel_bank.py.
+Each model SEEDS on the first row whose sign is nonzero for it (the paper's
+line-3 init, deferred past inert sign-0 rows): the recursion runs with a
+forced step s = 1, which reproduces the closed-form init exactly. The public
+``fit_kernel_bank`` still REQUIRES ``Y[:, 0]`` in {-1, +1} — a sign-0 seed
+row is almost always a label-encoding bug — but the deferred seed is what
+lets ``mesh=`` shard the stream into ranges whose first rows may be inert
+(ragged-N padding, per-class sign structure).
+
+When a model's buffer is full, the incoming core vector evicts a slot
+chosen by the ``eviction`` policy ("On Coresets for SVMs" / "Accurate
+Streaming SVMs", PAPERS.md):
+
+  "smallest-coef"   (default) evict argmin |coef| — the recursion scales
+                    every coefficient by (1 - s) at each absorb, so the
+                    smallest |coef| contributes least to the center.
+  "farthest-point"  evict the buffered point CLOSEST to the current center
+                    (keep the farthest — the blurred-ball/Badoiu-Clarkson
+                    choice: extreme points carry the ball geometry). Needs a
+                    (B, S, S) buffer-buffer Gram carried per tile.
+
+Free slots carry coef == 0 (smallest-coef) / score -inf (farthest-point), so
+both policies fill free slots before evicting anything. The running center
+norm q keeps the DENSE recursion (it needs only g and k(x, x)), so with
+``coreset_size >= N`` nothing is ever evicted and the engine reproduces
+``fit_kernelized`` exactly — property-tested, per model, in
+tests/test_kernel_bank.py.
+
+``mesh=`` shards the stream over a device mesh: each shard runs this engine
+over its contiguous range and the per-shard banks are folded with the
+kernelized Sec-4.3 merge (``meb.merge_kernel_banks`` — coreset-of-coresets
+compression + the ball-state merge; see ``distributed.fit_kernel_bank_
+sharded``).
 
 Kernels must satisfy K(x, x) ~ kappa (constant diagonal); the RBF epilogue
-clamps d^2 at 0 so duplicates cannot push K above kappa (the bug fixed in
-``kernelized.rbf_kernel`` this PR).
+clamps d^2 at 0 so duplicates cannot push K above kappa. ``gamma`` is
+TRACED through the Gram launches (a gamma sweep reuses one compilation,
+like the C sweep); ``kernel`` / ``coreset_size`` / ``eviction`` stay static.
 
 Serving rides ``kernels.ops.predict_kernel_bank`` (same fused Gram
 epilogues against the stored core-set points) and ``serve.BankServer``
@@ -50,15 +79,17 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 _KERNELS = ("linear", "rbf")
+_EVICTIONS = ("smallest-coef", "farthest-point")
 
 
 class KernelBank(NamedTuple):
     """Streaming state / result of the kernelized bank engine.
 
     idx:    (B, S) int32 — stream index of each buffered core vector, -1 for
-            a free slot.
+            a free slot. Sharded fits report GLOBAL stream indices.
     coef:   (B, S) f32 — signed Lagrange coefficients (exactly 0 in free
             slots, so free slots never contribute to any readout).
     points: (B, S, D) f32 — the buffered core vectors themselves (zeros in
@@ -67,7 +98,8 @@ class KernelBank(NamedTuple):
     q:      (B,) running |center|^2 (dense recursion — see module docstring).
     r:      (B,) radius.
     xi2:    (B,) slack-block squared norm.
-    m:      (B,) int32 core-vector absorb count (the paper's M).
+    m:      (B,) int32 core-vector absorb count (the paper's M; 0 == the
+            model never saw a live row — an identity for the merge).
     """
 
     idx: jax.Array
@@ -79,52 +111,48 @@ class KernelBank(NamedTuple):
     m: jax.Array
 
 
-def _kdiag(X, kernel: str, gamma: float):
+def _kdiag(X, kernel: str):
     """k(x, x) per row, matching the Gram epilogue's arithmetic."""
     x2 = jnp.sum(X.astype(jnp.float32) ** 2, axis=-1)
     if kernel == "rbf":
-        return jnp.exp(-gamma * jnp.maximum(x2 + x2 - 2.0 * x2, 0.0))
+        # K(x, x) = exp(-gamma * 0) = 1 identically, for every x and every
+        # gamma: the epilogue's d^2 = |x|^2 + |x|^2 - 2<x, x> is exactly 0
+        # (and clamped at 0 against rounding), so the RBF Gram diagonal is a
+        # constant ones vector — parity-tested against the Pallas epilogue
+        # diagonal in tests/test_kernel_bank.py.
+        return jnp.ones_like(x2)
     return x2
 
 
 @partial(
     jax.jit,
     static_argnames=(
-        "kernel", "gamma", "coreset_size", "variant", "block_n",
+        "kernel", "coreset_size", "eviction", "variant", "block_n", "s_tile",
         "stream_dtype", "interpret",
     ),
 )
-def fit_kernel_bank(
+def _fit_kernel_bank(
     X: jax.Array,
     Y: jax.Array,
     cs,
+    gamma,
     *,
-    kernel: str = "rbf",
-    gamma: float = 1.0,
-    coreset_size: int = 64,
-    variant: str = "exact",
-    block_n: int = 256,
-    stream_dtype=None,
-    interpret: bool | None = None,
+    kernel: str,
+    coreset_size: int,
+    eviction: str,
+    variant: str,
+    block_n: int,
+    s_tile: int | None,
+    stream_dtype,
+    interpret: bool | None,
 ) -> KernelBank:
-    """One-pass kernelized Algorithm 1 for a bank of B models.
+    """jit'd engine core of ``fit_kernel_bank`` (deferred per-model seeding).
 
-    X: (N, D) shared stream; Y: (B, N) per-model label signs in {-1, 0, +1}
-    (0 marks a row inert for that model — the same padding contract as the
-    linear engine; row 0 seeds every model, so ``Y[:, 0]`` must be +-1).
-    cs: scalar or (B,) per-model C (traced — a C sweep reuses one
-    compilation; ``kernel``/``gamma``/``coreset_size`` are static, so those
-    sweeps recompile).
-
-    kernel: "rbf" (K = exp(-gamma d^2), d^2 clamped at 0) or "linear".
-    coreset_size: S — the per-model buffer bound. With S >= N the buffer
-    never evicts and the fit equals the dense ``fit_kernelized`` per model;
-    smaller S trades accuracy for O(B*S*D) state via smallest-|coef|
-    eviction.
-    variant: "exact" / "paper-listing" — Algorithm 1's slack gain.
-    block_n / stream_dtype / interpret: the tiling and dtype knobs of the
-    linear engine. ``stream_dtype="bf16"`` rounds the streamed tiles (the
-    Gram operand) to bf16; buffered core-set points and all state stay f32.
+    Module-level so the public wrapper (which adds the eager seed-sign
+    validation, the VMEM preflight and the ``mesh=`` routing) stays a plain
+    python function, and so ``fit_kernel_bank_sharded``'s shard-local calls
+    — whose ranges legitimately start with inert sign-0 rows — share the
+    same jit cache.
     """
     n, d = X.shape
     b, n_y = Y.shape
@@ -133,54 +161,41 @@ def fit_kernel_bank(
             f"Y must be (B, N) sign rows matching X: got Y.shape={Y.shape}, "
             f"X.shape={X.shape}"
         )
-    if kernel not in _KERNELS:
-        raise ValueError(
-            f"unknown kernel {kernel!r}; expected one of {_KERNELS}"
-        )
-    if variant not in ("exact", "paper-listing"):
-        raise ValueError(
-            f"unknown variant {variant!r}; expected 'exact' or "
-            "'paper-listing'"
-        )
     s_size = int(coreset_size)
-    if s_size < 1:
-        raise ValueError(f"coreset_size must be >= 1, got {coreset_size}")
     from repro.kernels.ops import _resolve_stream_dtype, gram
 
     sdt = _resolve_stream_dtype(stream_dtype)
     Xf = X.astype(jnp.float32)
     cs = jnp.broadcast_to(jnp.asarray(cs, jnp.float32), (b,))
+    gamma = jnp.asarray(gamma, jnp.float32)
     c_inv = 1.0 / cs
     gain = c_inv if variant == "exact" else jnp.ones_like(c_inv)
+    st = s_size if s_tile is None else min(int(s_tile), s_size)
+    farthest = eviction == "farthest-point"
 
-    # Init (paper line 3) from row 0, per model: one core vector, coef y0.
-    idx0 = jnp.full((b, s_size), -1, jnp.int32).at[:, 0].set(0)
-    coef0 = jnp.zeros((b, s_size), jnp.float32).at[:, 0].set(
-        Y[:, 0].astype(jnp.float32)
-    )
-    q0 = jnp.broadcast_to(_kdiag(Xf[0], kernel, gamma), (b,))
+    # Empty init: every model seeds inside the recursion on its first live
+    # row (m == 0 forces step s = 1, which IS the paper's line-3 init —
+    # coef = y, q = k(x, x), r = 0, xi2 = gain — bit-exact f32 with the old
+    # closed-form row-0 seed when Y[:, 0] is +-1).
     state0 = (
-        idx0, coef0, q0,
-        jnp.zeros((b,), jnp.float32),  # r
-        gain,                          # xi2 = 1/C (exact) or 1
-        jnp.ones((b,), jnp.int32),     # m
+        jnp.full((b, s_size), -1, jnp.int32),   # idx
+        jnp.zeros((b, s_size), jnp.float32),    # coef
+        jnp.zeros((b,), jnp.float32),           # q
+        jnp.zeros((b,), jnp.float32),           # r
+        jnp.zeros((b,), jnp.float32),           # xi2
+        jnp.zeros((b,), jnp.int32),             # m
     )
-    ns = n - 1
-    if ns == 0:
-        return _finish(Xf, state0)
 
-    # Tile rows 1..N-1; padded rows are masked invalid.
-    n_tiles = -(-ns // block_n)
-    pad = n_tiles * block_n - ns
-    Xt = jnp.pad(Xf[1:], ((0, pad), (0, 0))).reshape(n_tiles, block_n, d)
-    # Y was (B, N); drop the consumed row 0 before padding.
+    n_tiles = -(-n // block_n)
+    pad = n_tiles * block_n - n
+    Xt = jnp.pad(Xf, ((0, pad), (0, 0))).reshape(n_tiles, block_n, d)
     Yt = (
-        jnp.pad(Y[:, 1:].astype(jnp.float32), ((0, 0), (0, pad)))
+        jnp.pad(Y.astype(jnp.float32), ((0, 0), (0, pad)))
         .reshape(b, n_tiles, block_n)
         .transpose(1, 0, 2)
     )
-    valid = (jnp.arange(n_tiles * block_n) < ns).reshape(n_tiles, block_n)
-    base = (1 + jnp.arange(n_tiles * block_n, dtype=jnp.int32)).reshape(
+    valid = (jnp.arange(n_tiles * block_n) < n).reshape(n_tiles, block_n)
+    base = jnp.arange(n_tiles * block_n, dtype=jnp.int32).reshape(
         n_tiles, block_n
     )
 
@@ -194,20 +209,47 @@ def fit_kernel_bank(
         xc = jnp.where(
             (idx >= 0)[..., None], Xf[jnp.clip(idx, 0)], 0.0
         )  # (B, S, D)
-        # ONE fused Gram launch covers every model's core set...
-        k_cs = gram(
-            x_stream, xc.reshape(b * s_size, d),
-            epilogue=kernel, gamma=gamma, interpret=interpret,
-        ).reshape(block_n, b, s_size)
-        # ...and one more covers rows inserted mid-tile.
+        # The fused Gram launch covers every model's core set; ``s_tile``
+        # chunks its (B * S) column axis so the operand/output tiles fit the
+        # VMEM budget. Each chunk is an independent launch over the same
+        # stream tile — the concatenation is bit-exact f32 with one launch.
+        parts = [
+            gram(
+                x_stream,
+                xc[:, lo : min(lo + st, s_size), :].reshape(
+                    b * (min(lo + st, s_size) - lo), d
+                ),
+                epilogue=kernel, gamma=gamma, interpret=interpret,
+            ).reshape(block_n, b, min(lo + st, s_size) - lo)
+            for lo in range(0, s_size, st)
+        ]
+        k_cs = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=2)
+        # ...and one more launch covers rows inserted mid-tile.
         k_tt = gram(
             x_stream, x_stream, epilogue=kernel, gamma=gamma,
             interpret=interpret,
         )
         kdiag_t = jnp.diagonal(k_tt)
+        if farthest:
+            # Buffer-buffer Gram per model, recomputed at tile entry and
+            # maintained incrementally across insertions — the eviction
+            # score needs each slot's kernel row against the whole buffer.
+            acc = jnp.einsum(
+                "bsd,btd->bst", xc, xc, preferred_element_type=jnp.float32
+            )
+            if kernel == "rbf":
+                n2 = jnp.sum(xc * xc, axis=-1)  # (B, S)
+                kbb = jnp.exp(
+                    -gamma
+                    * jnp.maximum(n2[:, :, None] + n2[:, None, :] - 2.0 * acc, 0.0)
+                )
+            else:
+                kbb = acc
+        else:
+            kbb = None
 
         def row_body(rcarry, i):
-            idx, coef, q, r, xi2, m, intile = rcarry
+            idx, coef, q, r, xi2, m, intile, kbb = rcarry
             # Kernel row of each buffered core vector against stream row i:
             # from K_tt if the slot was filled earlier in this tile, else
             # from the tile-entry K_cs block.
@@ -216,24 +258,51 @@ def fit_kernel_bank(
             )  # (B, S)
             g = jnp.sum(coef * kv, axis=1)
             yn = y_tile[:, i]
+            ok = jnp.logical_and(valid_t[i], yn != 0)
+            seed = jnp.logical_and(m == 0, ok)  # deferred line-3 init
             d2 = q - 2.0 * yn * g + kdiag_t[i] + xi2 + c_inv
             dist = jnp.sqrt(jnp.maximum(d2, 1e-12))
-            upd = jnp.logical_and(
-                dist >= r, jnp.logical_and(valid_t[i], yn != 0)
+            upd = jnp.logical_and(jnp.logical_and(~seed, ok), dist >= r)
+            act = jnp.logical_or(seed, upd)
+            s = jnp.where(
+                seed, 1.0, jnp.where(upd, 0.5 * (1.0 - r / dist), 0.0)
             )
-            s = jnp.where(upd, 0.5 * (1.0 - r / dist), 0.0)
-            # Slot choice: free slots carry coef == 0 so argmin|coef| finds
-            # them first; with a full buffer this IS the coreset-compression
-            # eviction (the uniform (1-s) scaling preserves the ordering).
-            slot = jnp.argmin(jnp.abs(coef), axis=1)
+            # Slot choice: free slots are always preferred (coef == 0 /
+            # score -inf); with a full buffer this IS the coreset-
+            # compression eviction.
+            if farthest:
+                gs = jnp.einsum(
+                    "bst,bt->bs", kbb, coef,
+                    preferred_element_type=jnp.float32,
+                )
+                kbb_diag = jnp.diagonal(kbb, axis1=1, axis2=2)
+                score = jnp.where(
+                    idx >= 0,
+                    q[:, None] - 2.0 * jnp.sign(coef) * gs + kbb_diag,
+                    -jnp.inf,
+                )  # squared center->point distance; evict the closest
+                slot = jnp.argmin(score, axis=1)
+            else:
+                # the uniform (1-s) scaling preserves the |coef| ordering
+                slot = jnp.argmin(jnp.abs(coef), axis=1)
             hit = jnp.logical_and(
-                jnp.arange(s_size)[None, :] == slot[:, None], upd[:, None]
+                jnp.arange(s_size)[None, :] == slot[:, None], act[:, None]
             )
+            if farthest:
+                # Replaced slot's kernel row/col against the (pre-insert)
+                # buffer is exactly kv; its diagonal entry is k(x_i, x_i).
+                kbb = jnp.where(hit[:, :, None], kv[:, None, :], kbb)
+                kbb = jnp.where(hit[:, None, :], kv[:, :, None], kbb)
+                kbb = jnp.where(
+                    jnp.logical_and(hit[:, :, None], hit[:, None, :]),
+                    kdiag_t[i], kbb,
+                )
             coef = coef * (1.0 - s)[:, None]
             coef = jnp.where(hit, (s * yn)[:, None], coef)
             idx = jnp.where(hit, base_t[i], idx)
             intile = jnp.where(hit, i, intile)
-            # s == 0 when not updating, so the recursions are no-ops there.
+            # s == 0 when not updating, so the recursions are no-ops there;
+            # the seed's s == 1 zeroes the stale q/xi2 terms exactly.
             q_new = (
                 (1.0 - s) ** 2 * q
                 + 2.0 * s * (1.0 - s) * yn * g
@@ -241,18 +310,143 @@ def fit_kernel_bank(
             )
             r_new = r + jnp.where(upd, 0.5 * (dist - r), 0.0)
             xi2_new = xi2 * (1.0 - s) ** 2 + s**2 * gain
-            m_new = m + upd.astype(jnp.int32)
-            return (idx, coef, q_new, r_new, xi2_new, m_new, intile), None
+            m_new = m + act.astype(jnp.int32)
+            return (idx, coef, q_new, r_new, xi2_new, m_new, intile, kbb), None
 
         intile0 = jnp.full((b, s_size), -1, jnp.int32)
-        (idx, coef, q, r, xi2, m, _), _ = jax.lax.scan(
-            row_body, (idx, coef, q, r, xi2, m, intile0),
+        (idx, coef, q, r, xi2, m, _, _), _ = jax.lax.scan(
+            row_body, (idx, coef, q, r, xi2, m, intile0, kbb),
             jnp.arange(block_n),
         )
         return (idx, coef, q, r, xi2, m), None
 
     state, _ = jax.lax.scan(tile_body, state0, (Xt, Yt, base, valid))
     return _finish(Xf, state)
+
+
+def fit_kernel_bank(
+    X: jax.Array,
+    Y: jax.Array,
+    cs,
+    *,
+    kernel: str = "rbf",
+    gamma=1.0,
+    coreset_size: int = 64,
+    eviction: str = "smallest-coef",
+    variant: str = "exact",
+    block_n: int = 256,
+    s_tile: int | None = None,
+    stream_dtype=None,
+    mesh=None,
+    shard_axis="data",
+    vmem_budget_bytes: int | None = None,
+    interpret: bool | None = None,
+) -> KernelBank:
+    """One-pass kernelized Algorithm 1 for a bank of B models.
+
+    X: (N, D) shared stream; Y: (B, N) per-model label signs in {-1, 0, +1}
+    (0 marks a row inert for that model — the same padding contract as the
+    linear engine). ``Y[:, 0]`` must be +-1: row 0 seeds every model, and a
+    sign-0 seed is almost always a label-encoding bug, so it raises a
+    ValueError naming the offending model rows (checked eagerly; inside a
+    jit trace the check is skipped and the engine's deferred seeding takes
+    the first live row instead). cs: scalar or (B,) per-model C and
+    ``gamma`` are both TRACED — C and gamma sweeps reuse one compilation;
+    ``kernel``/``coreset_size``/``eviction`` are static.
+
+    kernel: "rbf" (K = exp(-gamma d^2), d^2 clamped at 0) or "linear".
+    coreset_size: S — the per-model buffer bound. With S >= N the buffer
+    never evicts and the fit equals the dense ``fit_kernelized`` per model;
+    smaller S trades accuracy for O(B*S*D) state.
+    eviction: "smallest-coef" (drop the smallest |coef| slot) or
+    "farthest-point" (drop the slot closest to the center — keep the
+    extreme points that carry the ball geometry). Both oracle-tested.
+    variant: "exact" / "paper-listing" — Algorithm 1's slack gain.
+    s_tile: chunk the K_cs Gram launch over the S axis (bit-exact f32) so a
+    (B * S, D) core-set operand beyond the VMEM budget still trains; the
+    preflight below raises an actionable error naming this knob.
+    block_n / stream_dtype / interpret: the tiling and dtype knobs of the
+    linear engine. ``stream_dtype="bf16"`` rounds the streamed tiles (the
+    Gram operand) to bf16; buffered core-set points and all state stay f32.
+    mesh / shard_axis: shard the STREAM over the mesh axes — per-shard
+    engine passes folded with the kernelized Sec-4.3 merge
+    (``distributed.fit_kernel_bank_sharded``; ragged N pads inert).
+    vmem_budget_bytes: preflight budget override (else
+    ``REPRO_VMEM_BUDGET_BYTES`` / the 16 MiB default).
+    """
+    if kernel not in _KERNELS:
+        raise ValueError(
+            f"unknown kernel {kernel!r}; expected one of {_KERNELS}"
+        )
+    if eviction not in _EVICTIONS:
+        raise ValueError(
+            f"unknown eviction {eviction!r}; expected one of {_EVICTIONS}"
+        )
+    if variant not in ("exact", "paper-listing"):
+        raise ValueError(
+            f"unknown variant {variant!r}; expected 'exact' or "
+            "'paper-listing'"
+        )
+    if int(coreset_size) < 1:
+        raise ValueError(f"coreset_size must be >= 1, got {coreset_size}")
+    if s_tile is not None and int(s_tile) < 1:
+        raise ValueError(f"s_tile must be >= 1 (or None), got {s_tile}")
+    if Y.ndim != 2:
+        raise ValueError(f"Y must be (B, N) sign rows: got Y.shape={Y.shape}")
+    if not isinstance(Y, jax.core.Tracer):
+        # Eager seed-sign validation (satellite of the deferred-seed change):
+        # the old engine silently seeded coef = 0 with a live q here.
+        bad = np.flatnonzero(np.asarray(Y[:, 0]) == 0)
+        if bad.size:
+            raise ValueError(
+                "fit_kernel_bank needs Y[:, 0] in {-1, +1}: row 0 seeds "
+                "every model, and a sign-0 seed almost always means the "
+                "label encoding dropped a model. Offending model rows "
+                f"(Y[b, 0] == 0): b = {bad.tolist()}"
+            )
+    from repro.kernels.ops import (
+        kernel_engine_vmem_bytes,
+        vmem_budget_bytes as _vmem_budget,
+    )
+
+    b = Y.shape[0]
+    d = X.shape[1]
+    by = kernel_engine_vmem_bytes(
+        b, d, coreset_size=coreset_size, block_n=block_n, s_tile=s_tile,
+        stream_dtype=stream_dtype,
+    )
+    budget = _vmem_budget(vmem_budget_bytes)
+    if sum(by.values()) > budget:
+        raise ValueError(
+            f"fit_kernel_bank with B={b}, D={d}, S={coreset_size}, "
+            f"block_n={block_n}, s_tile={s_tile} needs a per-step VMEM "
+            f"working set of {sum(by.values())} bytes (breakdown: {by}), "
+            f"exceeding the budget of {budget} bytes — pass a smaller "
+            "s_tile= (chunks the core-set Gram operand, bit-exact f32) or "
+            "shrink block_n. The budget follows vmem_budget_bytes(): pass "
+            "vmem_budget_bytes= or set REPRO_VMEM_BUDGET_BYTES."
+        )
+    if mesh is not None:
+        from .distributed import fit_kernel_bank_sharded  # lazy: module cycle
+
+        return fit_kernel_bank_sharded(
+            X, Y, cs, mesh,
+            axis=shard_axis, kernel=kernel, gamma=gamma,
+            coreset_size=coreset_size, eviction=eviction, variant=variant,
+            block_n=block_n, s_tile=s_tile, stream_dtype=stream_dtype,
+            interpret=interpret,
+        )
+    return _fit_kernel_bank(
+        X, Y, cs, gamma,
+        kernel=kernel, coreset_size=coreset_size, eviction=eviction,
+        variant=variant, block_n=block_n, s_tile=s_tile,
+        stream_dtype=stream_dtype, interpret=interpret,
+    )
+
+
+# The jit-cache regression tests (C sweep, gamma sweep) read the engine's
+# cache through the public name.
+fit_kernel_bank._cache_size = _fit_kernel_bank._cache_size
 
 
 def _finish(Xf, state) -> KernelBank:
@@ -268,7 +462,7 @@ def kernel_bank_decision(
     X: jax.Array,
     *,
     kernel: str = "rbf",
-    gamma: float = 1.0,
+    gamma=1.0,
     interpret: bool | None = None,
 ) -> jax.Array:
     """(Q, B) decision margins of every model against the stored core sets.
@@ -296,8 +490,10 @@ def save_kernel_bank(
     """Checkpoint a KernelBank so ``BankServer.from_checkpoint`` can serve it.
 
     Persists the 7-leaf bank pytree via ``repro.checkpoint.ckpt.save`` with
-    ``meta["bank_kind"] = "kernel"`` plus the (static) kernel config the fit
-    used — the serve side needs them to rebuild the decision function.
+    ``meta["bank_kind"] = "kernel"`` plus the kernel config the fit used —
+    the serve side needs them to rebuild the decision function. Sharded-
+    trained banks checkpoint identically: the fold replicates the same
+    7-leaf pytree on every device.
     """
     from repro.checkpoint import ckpt
 

@@ -113,6 +113,145 @@ def merge_balls(b1: Ball, b2: Ball) -> Ball:
     return Ball(w=w, r=r, xi2=xi2, m=b1.m + b2.m)
 
 
+def _pair_gram(P1, P2, kernel: str, gamma):
+    """(B, S1, S2) kernel matrix between two (B, S, D) core-set buffers."""
+    P1 = P1.astype(jnp.float32)
+    P2 = P2.astype(jnp.float32)
+    acc = jnp.einsum("bsd,btd->bst", P1, P2, preferred_element_type=jnp.float32)
+    if kernel == "rbf":
+        n1 = jnp.sum(P1 * P1, axis=-1)
+        n2 = jnp.sum(P2 * P2, axis=-1)
+        return jnp.exp(
+            -jnp.asarray(gamma, jnp.float32)
+            * jnp.maximum(n1[:, :, None] + n2[:, None, :] - 2.0 * acc, 0.0)
+        )
+    return acc
+
+
+def merge_kernel_banks(b1, b2, *, kernel: str, gamma=1.0,
+                       eviction: str = "smallest-coef"):
+    """Sec-4.3 merge of two kernelized banks built from disjoint example sets.
+
+    The kernel-space twin of ``merge_banks``: both arguments are
+    ``KernelBank``s of identical (B, S) shape whose centers live in the same
+    RKHS, c_i = sum_s coef_i[s] phi(p_i[s]) plus an orthogonal slack block of
+    squared norm xi2_i. The center distance needs one cross-Gram
+    contraction,
+
+        |c1 - c2|^2 = q1 + q2 - 2 sum_{s,t} coef1[s] coef2[t] k(p1s, p2t)
+                      + xi1 + xi2,
+
+    and then the EXACT ``merge_balls`` algebra applies unchanged: r_join =
+    (r1 + r2 + dist) / 2, t = clip((r_join - r1)/dist, 0, 1), with the
+    merged center c = (1-t) c1 + t c2 represented on the CONCATENATED
+    (B, 2S) buffer as [(1-t) coef1 ; t coef2] and q_join following the same
+    interpolation ((1-t)^2 q1 + 2 t (1-t) cross + t^2 q2). Containment and
+    empty-bank cases (m == 0 — a fully padded stream shard — is an exact
+    identity) collapse onto t in {0, 1}, keeping everything branch-free.
+
+    The 2S-slot buffer is then compressed back to S slots — the
+    coreset-of-coresets step ("On Coresets for SVMs", PAPERS.md) — keeping
+    the top-S slots under the SAME ``eviction`` policy the fit used:
+    "smallest-coef" keeps the largest |coef|, "farthest-point" keeps the
+    slots farthest from the merged center. Free slots (coef 0 / score -inf)
+    are always dropped first, so the merge is EXACT (no mass lost) whenever
+    the live slots of both inputs fit in S; beyond that it is lossy in the
+    same sense as the fit's eviction — q keeps the dense-recursion value
+    while the buffer approximates the center. Numpy oracle:
+    ``kernels.ref.merge_kernel_banks_ref``; property/parity suites:
+    tests/test_kernel_merge.py.
+    """
+    from .kernel_bank import KernelBank  # lazy: module cycle
+
+    if b1.coef.shape != b2.coef.shape:
+        raise ValueError(
+            f"merge_kernel_banks needs identically-shaped banks: got "
+            f"coef {b1.coef.shape} vs {b2.coef.shape}"
+        )
+    if eviction not in ("smallest-coef", "farthest-point"):
+        raise ValueError(
+            f"unknown eviction {eviction!r}; expected 'smallest-coef' or "
+            "'farthest-point'"
+        )
+    s_size = b1.coef.shape[1]
+    c1 = b1.coef.astype(jnp.float32)
+    c2 = b2.coef.astype(jnp.float32)
+    k12 = _pair_gram(b1.points, b2.points, kernel, gamma)
+    cross = jnp.einsum("bs,bst,bt->b", c1, k12, c2)
+
+    d2 = b1.q + b2.q - 2.0 * cross + b1.xi2 + b2.xi2
+    dist = jnp.sqrt(jnp.maximum(d2, 0.0))
+    safe = jnp.maximum(dist, _EPS)
+    one_in_two = dist + b1.r <= b2.r
+    two_in_one = dist + b2.r <= b1.r
+    empty1 = b1.m == 0
+    empty2 = b2.m == 0
+
+    r_join = 0.5 * (b1.r + b2.r + dist)
+    t = jnp.clip((r_join - b1.r) / safe, 0.0, 1.0)
+    # Containment / empty-identity collapse onto the interpolation weight
+    # (t = 1 keeps bank 2's center exactly, t = 0 bank 1's) and the radius.
+    t = jnp.where(one_in_two, 1.0, jnp.where(two_in_one, 0.0, t))
+    t = jnp.where(empty1, 1.0, jnp.where(empty2, 0.0, t))
+    r = jnp.where(one_in_two, b2.r, jnp.where(two_in_one, b1.r, r_join))
+    r = jnp.where(empty1, b2.r, jnp.where(empty2, b1.r, r))
+
+    q = (1.0 - t) ** 2 * b1.q + 2.0 * t * (1.0 - t) * cross + t**2 * b2.q
+    xi2 = (1.0 - t) ** 2 * b1.xi2 + t**2 * b2.xi2
+    m = b1.m + b2.m
+
+    idx_c = jnp.concatenate([b1.idx, b2.idx], axis=1)  # (B, 2S)
+    coef_c = jnp.concatenate(
+        [(1.0 - t)[:, None] * c1, t[:, None] * c2], axis=1
+    )
+    pts_c = jnp.concatenate(
+        [b1.points.astype(jnp.float32), b2.points.astype(jnp.float32)], axis=1
+    )
+
+    if eviction == "farthest-point":
+        kcc = _pair_gram(pts_c, pts_c, kernel, gamma)
+        gs = jnp.einsum(
+            "bst,bt->bs", kcc, coef_c, preferred_element_type=jnp.float32
+        )
+        kdiag = jnp.diagonal(kcc, axis1=1, axis2=2)
+        score = jnp.where(
+            idx_c >= 0,
+            q[:, None] - 2.0 * jnp.sign(coef_c) * gs + kdiag,
+            -jnp.inf,
+        )  # keep the slots FARTHEST from the merged center
+    else:
+        score = jnp.where(idx_c >= 0, jnp.abs(coef_c), -jnp.inf)
+    _, keep = jax.lax.top_k(score, s_size)  # (B, S), ties -> lowest index
+    return KernelBank(
+        idx=jnp.take_along_axis(idx_c, keep, axis=1),
+        coef=jnp.take_along_axis(coef_c, keep, axis=1),
+        points=jnp.take_along_axis(pts_c, keep[..., None], axis=1),
+        q=q, r=r, xi2=xi2, m=m,
+    )
+
+
+def fold_kernel_banks(banks, *, kernel: str, gamma=1.0,
+                      eviction: str = "smallest-coef"):
+    """Left fold of a python sequence of same-shape KernelBanks, in order.
+
+    The kernelized ``fold_banks``: shard count is static and small, so the
+    fold is a plain python loop of ``merge_kernel_banks`` (callers pass
+    shards oldest/leftmost first — the order ``fit_kernel_bank_sharded``
+    gathers them in). A single bank passes through untouched.
+    """
+    banks = list(banks)
+    if not banks:
+        raise ValueError(
+            "fold_kernel_banks needs at least one bank; got an empty sequence"
+        )
+    acc = banks[0]
+    for nxt in banks[1:]:
+        acc = merge_kernel_banks(
+            acc, nxt, kernel=kernel, gamma=gamma, eviction=eviction
+        )
+    return acc
+
+
 def merge_banks(b1: Ball, b2: Ball) -> Ball:
     """Sec-4.3 merge vmapped over a leading bank axis: B models at once.
 

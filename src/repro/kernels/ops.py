@@ -195,6 +195,57 @@ def engine_vmem_bytes(
     return out
 
 
+def kernel_engine_vmem_bytes(
+    b: int,
+    d: int,
+    *,
+    coreset_size: int,
+    block_n: int = 256,
+    s_tile: int | None = None,
+    stream_dtype=None,
+) -> dict:
+    """Per-step VMEM working set of the kernelized bank engine, bytes by term.
+
+    The kernelized engine's resident blocks are the two fused Gram launches'
+    tiles: the K_cs launch scores a (block_n, D) stream tile against the
+    (B * s_chunk, D) core-set operand (``s_tile`` chunks the S axis per
+    model, so the Gram N axis — and with it the operand and output tiles —
+    shrinks from B*S to B*s_tile columns per launch: the kernel-bank twin of
+    PR 5's ``bank_resident`` knob, same budget, same preflight), and the
+    K_tt launch is (block_n, block_n). Gram operands are staged f32
+    (``gram`` upcasts before padding), BlockSpec-delivered tiles count twice
+    (Pallas double-buffers its own pipeline), and the f32 accumulator
+    scratch counts once. The preflight in ``core.fit_kernel_bank`` and the
+    BENCH engine harness's kernelized ``vmem_working_set_bytes`` both read
+    this.
+    """
+    S = int(coreset_size)
+    st = S if s_tile is None else min(int(s_tile), S)
+    cols = b * st  # columns per K_cs launch
+    bm_, bn_ = gram_tiling(block_n, cols, 256, 256)
+    bk = min(512, -(-d // 512) * 512)  # gram pads the feature axis to 512s
+    dp = -(-d // 128) * 128
+    return {
+        # one K_cs launch's per-step tiles: A/B operands + out + the f32
+        # accumulator; BlockSpec-staged tiles count twice (Pallas double-
+        # buffers its own pipeline). The grid bounds these at (256, 256)
+        # regardless of B*S.
+        "gram_tiles": (
+            2 * (bm_ + bn_) * bk * 4 + 2 * bm_ * bn_ * 4 + bm_ * bn_ * 4
+        ),
+        # The terms ``s_tile`` actually caps — the whole-buffer analogues of
+        # the linear engine's VMEM-resident bank term: each tile step
+        # materializes the launch's full (block_n, B * s_chunk) K_cs block
+        # for the recursion to read, plus the (B * s_chunk, D) gathered
+        # core-set operand it was scored against.
+        "k_cs_block": block_n * cols * 4,
+        "coreset_operand": cols * dp * 4,
+        # the K_tt block and the stream tile itself
+        "k_tt": block_n * block_n * 4,
+        "stream_tile": 2 * block_n * dp * 4,
+    }
+
+
 def predict_vmem_bytes(
     b: int,
     d: int,
@@ -539,20 +590,25 @@ def streamsvm_fit_many(
 
 @partial(
     jax.jit,
-    static_argnames=("epilogue", "gamma", "bm", "bn", "bk", "interpret"),
+    static_argnames=("epilogue", "bm", "bn", "bk", "interpret"),
 )
 def gram(
     A: jax.Array,
     B: jax.Array,
     *,
     epilogue: str = "linear",
-    gamma: float = 1.0,
+    gamma=1.0,
     bm: int = 256,
     bn: int = 256,
     bk: int = 512,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Kernel matrix K[i, j] = k(a_i, b_j) with MXU tiling."""
+    """Kernel matrix K[i, j] = k(a_i, b_j) with MXU tiling.
+
+    ``gamma`` is TRACED (a (1, 1) scalar operand of the Pallas launch), so a
+    gamma sweep reuses one compilation — regression-tested alongside the C
+    sweep in tests/test_kernel_bank.py.
+    """
     m, d = A.shape
     n, _ = B.shape
     if B.shape[1] != d:
@@ -742,7 +798,7 @@ def predict_bank(
 @partial(
     jax.jit,
     static_argnames=(
-        "kernel", "gamma", "epilogue", "n_classes", "k", "q_block",
+        "kernel", "epilogue", "n_classes", "k", "q_block",
         "stream_dtype", "interpret",
     ),
 )
@@ -752,7 +808,7 @@ def predict_kernel_bank(
     coef: jax.Array,
     *,
     kernel: str = "rbf",
-    gamma: float = 1.0,
+    gamma=1.0,
     epilogue: str = "scores",
     n_classes: int | None = None,
     k: int | None = None,
@@ -780,6 +836,9 @@ def predict_kernel_bank(
       "ovr", n_classes= -> ((Q, G) int32, (Q, G) f32) per C-grid group,
                            G = B // n_classes, class-major flattening
       "topk", k=        -> ((Q, k) f32, (Q, k) int32) descending
+
+    ``gamma`` is traced through the Gram launch — a gamma sweep at serve
+    time reuses one compilation, exactly like the C sweep at train time.
 
     q_block: query rows per Gram tile (BankServer's microbatch slot count).
     stream_dtype: "bf16" rounds the query tiles before the Gram launch; the

@@ -239,15 +239,19 @@ def _kernel_ref(A, B, *, kernel, gamma):
 
 
 def fit_kernel_bank_ref(
-    X, Y, cs, *, kernel="rbf", gamma=1.0, coreset_size=64, variant="exact"
+    X, Y, cs, *, kernel="rbf", gamma=1.0, coreset_size=64, variant="exact",
+    eviction="smallest-coef",
 ):
     """Core-set kernel-bank oracle: per-model, row-at-a-time, plain numpy.
 
     Mirrors core.fit_kernel_bank's contract exactly — per-model bounded
-    buffer of ``coreset_size`` (index, coefficient) pairs, uniform (1 - s)
-    coefficient decay on each absorb, and smallest-|coef| eviction (first
-    minimum on ties, free slots carry coef 0 so they are always preferred) —
-    but with an explicit python buffer per model and no tiling, so it is the
+    buffer of ``coreset_size`` (index, coefficient) pairs, DEFERRED seeding
+    (each model seeds with a forced step s = 1 on its first nonzero-sign
+    row, so shard-local ranges beginning with inert rows are correct),
+    uniform (1 - s) coefficient decay on each absorb, and the ``eviction``
+    slot policy (first minimum on ties; free slots always preferred —
+    coef 0 under "smallest-coef", score -inf under "farthest-point") — but
+    with an explicit python buffer per model and no tiling, so it is the
     slow, obviously-correct target the fused engine is swept against.
     Returns (idx, coef, points, q, r, xi2, m) matching KernelBank's arrays.
     """
@@ -256,23 +260,21 @@ def fit_kernel_bank_ref(
     n, d = X.shape
     b, _ = Y.shape
     S = int(coreset_size)
+    if eviction not in ("smallest-coef", "farthest-point"):
+        raise ValueError(f"unknown eviction {eviction!r}")
     cs = np.broadcast_to(np.asarray(cs, np.float32), (b,))
     kd = np.ones(n, np.float32) if kernel == "rbf" else np.sum(X * X, 1)
 
     idx = np.full((b, S), -1, np.int32)
     coef = np.zeros((b, S), np.float32)
-    q = np.empty(b, np.float32)
+    q = np.zeros(b, np.float32)
     r = np.zeros(b, np.float32)
-    xi2 = np.empty(b, np.float32)
-    m = np.ones(b, np.int32)
+    xi2 = np.zeros(b, np.float32)
+    m = np.zeros(b, np.int32)
     for bi in range(b):
         c_inv = np.float32(1.0 / cs[bi])
         gain = c_inv if variant == "exact" else np.float32(1.0)
-        idx[bi, 0] = 0
-        coef[bi, 0] = np.float32(Y[bi, 0])
-        q[bi] = kd[0]
-        xi2[bi] = gain
-        for i in range(1, n):
+        for i in range(n):
             yn = np.float32(Y[bi, i])
             if yn == 0:
                 continue
@@ -282,12 +284,30 @@ def fit_kernel_bank_ref(
                 X[i][None], X[idx[bi, live]], kernel=kernel, gamma=gamma
             )[0]
             g = np.float32(np.sum(coef[bi] * kv))
+            seed = m[bi] == 0  # deferred line-3 init: forced s = 1
             d2 = q[bi] - 2.0 * yn * g + kd[i] + xi2[bi] + c_inv
             dist = np.sqrt(np.maximum(d2, np.float32(1e-12)))
-            if not dist >= r[bi]:
+            if not seed and not dist >= r[bi]:
                 continue
-            s = np.float32(0.5) * (np.float32(1.0) - r[bi] / dist)
-            slot = int(np.argmin(np.abs(coef[bi])))
+            s = (
+                np.float32(1.0)
+                if seed
+                else np.float32(0.5) * (np.float32(1.0) - r[bi] / dist)
+            )
+            if eviction == "farthest-point":
+                pts = np.where(
+                    live[:, None], X[np.clip(idx[bi], 0, None)], 0.0
+                ).astype(np.float32)
+                kbb = _kernel_ref(pts, pts, kernel=kernel, gamma=gamma)
+                gs = kbb @ coef[bi]
+                score = np.where(
+                    live,
+                    q[bi] - 2.0 * np.sign(coef[bi]) * gs + np.diag(kbb),
+                    -np.inf,
+                )  # squared center->point distance; evict the closest
+                slot = int(np.argmin(score))
+            else:
+                slot = int(np.argmin(np.abs(coef[bi])))
             coef[bi] *= np.float32(1.0) - s
             coef[bi, slot] = s * yn
             idx[bi, slot] = i
@@ -296,11 +316,107 @@ def fit_kernel_bank_ref(
                 + np.float32(2.0) * s * (np.float32(1.0) - s) * yn * g
                 + s**2 * kd[i]
             )
-            r[bi] = r[bi] + np.float32(0.5) * (dist - r[bi])
+            if not seed:
+                r[bi] = r[bi] + np.float32(0.5) * (dist - r[bi])
             xi2[bi] = xi2[bi] * (np.float32(1.0) - s) ** 2 + s**2 * gain
             m[bi] += 1
-    points = np.where((idx >= 0)[..., None], X[np.clip(idx, 0, n - 1)], 0.0)
+    points = np.where(
+        (idx >= 0)[..., None], X[np.clip(idx, 0, max(n - 1, 0))], 0.0
+    )
     return idx, coef, points.astype(np.float32), q, r, xi2, m
+
+
+def merge_kernel_banks_ref(b1, b2, *, kernel="rbf", gamma=1.0,
+                           eviction="smallest-coef"):
+    """Numpy oracle for ``core.merge_kernel_banks`` (kernelized Sec-4.3).
+
+    Accepts two KernelBank pytrees (or 7-tuples of arrays in KernelBank leaf
+    order), mirrors the branch-free merge algebra in straight-line f32
+    numpy — cross-Gram center distance, containment / empty-identity
+    collapse onto the interpolation weight t, coefficient scaling
+    [(1-t) coef1 ; t coef2] on the concatenated buffer, q/xi2 recursions —
+    and compresses 2S -> S with a stable argsort (descending score, ties ->
+    lowest index, matching lax.top_k). Returns (idx, coef, points, q, r,
+    xi2, m).
+    """
+    idx1, coef1, pts1, q1, r1, xi21, m1 = [np.asarray(v) for v in tuple(b1)]
+    idx2, coef2, pts2, q2, r2, xi22, m2 = [np.asarray(v) for v in tuple(b2)]
+    if coef1.shape != coef2.shape:
+        raise ValueError(
+            f"merge_kernel_banks_ref needs identically-shaped banks: got "
+            f"coef {coef1.shape} vs {coef2.shape}"
+        )
+    B, S = coef1.shape
+    f32 = lambda a: np.asarray(a, np.float32)
+    coef1, coef2 = f32(coef1), f32(coef2)
+    pts1, pts2 = f32(pts1), f32(pts2)
+    q1, q2, r1, r2 = f32(q1), f32(q2), f32(r1), f32(r2)
+    xi21, xi22 = f32(xi21), f32(xi22)
+
+    k12 = np.stack(
+        [
+            _kernel_ref(pts1[i], pts2[i], kernel=kernel, gamma=gamma)
+            for i in range(B)
+        ]
+    ).astype(np.float32)
+    cross = np.einsum("bs,bst,bt->b", coef1, k12, coef2).astype(np.float32)
+    d2 = q1 + q2 - np.float32(2.0) * cross + xi21 + xi22
+    dist = np.sqrt(np.maximum(d2, np.float32(0.0)))
+    safe = np.maximum(dist, np.float32(1e-12))
+    one_in_two = dist + r1 <= r2
+    two_in_one = dist + r2 <= r1
+    empty1 = m1 == 0
+    empty2 = m2 == 0
+
+    r_join = np.float32(0.5) * (r1 + r2 + dist)
+    t = np.clip((r_join - r1) / safe, np.float32(0.0), np.float32(1.0))
+    t = np.where(one_in_two, np.float32(1.0),
+                 np.where(two_in_one, np.float32(0.0), t))
+    t = np.where(empty1, np.float32(1.0),
+                 np.where(empty2, np.float32(0.0), t)).astype(np.float32)
+    r = np.where(one_in_two, r2, np.where(two_in_one, r1, r_join))
+    r = np.where(empty1, r2, np.where(empty2, r1, r)).astype(np.float32)
+
+    q = (
+        (np.float32(1.0) - t) ** 2 * q1
+        + np.float32(2.0) * t * (np.float32(1.0) - t) * cross
+        + t**2 * q2
+    ).astype(np.float32)
+    xi2 = ((np.float32(1.0) - t) ** 2 * xi21 + t**2 * xi22).astype(np.float32)
+    m = (m1 + m2).astype(np.int32)
+
+    idx_c = np.concatenate([idx1, idx2], axis=1)
+    coef_c = np.concatenate(
+        [(np.float32(1.0) - t)[:, None] * coef1, t[:, None] * coef2], axis=1
+    ).astype(np.float32)
+    pts_c = np.concatenate([pts1, pts2], axis=1)
+
+    if eviction == "farthest-point":
+        kcc = np.stack(
+            [
+                _kernel_ref(pts_c[i], pts_c[i], kernel=kernel, gamma=gamma)
+                for i in range(B)
+            ]
+        ).astype(np.float32)
+        gs = np.einsum("bst,bt->bs", kcc, coef_c).astype(np.float32)
+        kdiag = np.stack([np.diag(kcc[i]) for i in range(B)])
+        score = np.where(
+            idx_c >= 0,
+            q[:, None] - np.float32(2.0) * np.sign(coef_c) * gs + kdiag,
+            -np.inf,
+        )
+    elif eviction == "smallest-coef":
+        score = np.where(idx_c >= 0, np.abs(coef_c), -np.inf)
+    else:
+        raise ValueError(f"unknown eviction {eviction!r}")
+    keep = np.argsort(-score, axis=1, kind="stable")[:, :S]  # == lax.top_k
+    take = np.take_along_axis
+    return (
+        take(idx_c, keep, axis=1),
+        take(coef_c, keep, axis=1),
+        take(pts_c, keep[..., None], axis=1),
+        q, r, xi2, m,
+    )
 
 
 def predict_kernel_bank_ref(

@@ -497,3 +497,163 @@ except ValueError as e:
     )
     for token in ("GRAM_OK", "CHUNKED_OK", "MANY_OK", "REBALANCE_OK"):
         assert token in out.stdout, out.stdout
+
+
+# ---------------------------------------------------------------------------
+# This PR: seed-sign validation, deferred seeding, traced gamma, _kdiag
+# parity, eviction policies, s_tile chunking + the VMEM byte-model preflight
+# ---------------------------------------------------------------------------
+
+
+def test_seed_sign_zero_raises_naming_rows():
+    """Y[b, 0] == 0 used to silently seed model b on a zero center (w=0,
+    q=0) and poison every later step. It must now refuse, naming the rows."""
+    X, Y, cs = _bank_data(4, 30, 5, seed=70)
+    Ybad = np.asarray(Y).copy()
+    Ybad[1, 0] = 0.0
+    Ybad[3, 0] = 0.0
+    with pytest.raises(ValueError) as err:
+        fit_kernel_bank(X, jnp.asarray(Ybad), cs, coreset_size=8, block_n=32)
+    msg = str(err.value)
+    assert "Y[:, 0]" in msg and "[1, 3]" in msg, msg
+
+
+def test_deferred_seeding_skips_inert_prefix():
+    """The engine core (what each mesh shard runs) seeds each model on its first
+    LIVE row, so shard-local streams that START with sign-0 padding or inert
+    rows stay correct. A fully-inert model must come back as the exact merge
+    identity (m=0, r=q=0, idx all -1)."""
+    from repro.core.kernel_bank import _fit_kernel_bank
+
+    rng = np.random.default_rng(71)
+    b, n, d, S = 3, 60, 5, 8
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    Y = np.sign(rng.normal(size=(b, n))).astype(np.float32)
+    Y[Y == 0] = 1.0
+    Y[1, :7] = 0.0   # model 1 seeds on row 7
+    Y[2, :] = 0.0    # model 2 never seeds
+    cs = np.linspace(0.5, 4.0, b).astype(np.float32)
+    kb = _fit_kernel_bank(
+        jnp.asarray(X), jnp.asarray(Y), jnp.asarray(cs), 0.6,
+        kernel="rbf", coreset_size=S, eviction="smallest-coef",
+        variant="exact", block_n=32, s_tile=None, stream_dtype=None,
+        interpret=None,
+    )
+    idx, coef, points, q, r, xi2, m = fit_kernel_bank_ref(
+        X, Y, cs, kernel="rbf", gamma=0.6, coreset_size=S
+    )
+    np.testing.assert_array_equal(np.asarray(kb.idx), idx)
+    np.testing.assert_allclose(np.asarray(kb.coef), coef, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kb.q), q, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kb.r), r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(kb.m), m)
+    assert int(kb.m[1]) >= 1  # seeded despite the sign-0 prefix
+    # merge identity for the dead model
+    assert int(kb.m[2]) == 0 and float(kb.r[2]) == 0.0 and float(kb.q[2]) == 0.0
+    assert np.all(np.asarray(kb.idx)[2] == -1)
+
+
+def test_gamma_sweep_does_not_recompile():
+    """gamma is a TRACED operand of the Gram epilogue now — a bandwidth sweep
+    must reuse one executable (it used to recompile per value), and the value
+    must still reach the kernel (different gammas -> different banks)."""
+    X, Y, cs = _bank_data(2, 50, 4, seed=72)
+    fit_kernel_bank(X, Y, cs, coreset_size=8, gamma=0.5, block_n=32)
+    start = fit_kernel_bank._cache_size()
+    banks = [
+        fit_kernel_bank(X, Y, cs, coreset_size=8, gamma=g, block_n=32)
+        for g in (0.1, 0.7, 2.0)
+    ]
+    assert fit_kernel_bank._cache_size() == start
+    assert not np.allclose(np.asarray(banks[0].q), np.asarray(banks[2].q))
+
+    kb = banks[0]
+    Q = X[:16]
+    predict_kernel_bank(Q, kb.points, kb.coef, kernel="rbf", gamma=0.1)
+    start_p = predict_kernel_bank._cache_size()
+    s_lo = predict_kernel_bank(Q, kb.points, kb.coef, kernel="rbf", gamma=0.1)
+    s_hi = predict_kernel_bank(Q, kb.points, kb.coef, kernel="rbf", gamma=5.0)
+    assert predict_kernel_bank._cache_size() == start_p
+    assert not np.allclose(np.asarray(s_lo), np.asarray(s_hi))
+
+
+def test_kdiag_matches_gram_diagonal():
+    """The K(x, x) diagonal the fit feeds its q-recursion must equal the Gram
+    epilogue's own diagonal. The old rbf branch computed exp(-g*max(x2+x2-
+    2*x2, 0)) — identically exp(0) — which HAPPENED to be right only because
+    K(x, x) = 1 for rbf; it is now the explicit ones vector."""
+    from repro.core.kernel_bank import _kdiag
+
+    rng = np.random.default_rng(73)
+    X = rng.normal(size=(37, 6)).astype(np.float32)
+    X[5] = X[19]  # duplicate rows: the d^2 >= 0 clamp territory
+    Xj = jnp.asarray(X)
+
+    kd_rbf = np.asarray(_kdiag(Xj, "rbf"))
+    np.testing.assert_array_equal(kd_rbf, np.ones(37, np.float32))
+    K = np.asarray(gram(Xj, Xj, epilogue="rbf", gamma=0.7))
+    np.testing.assert_allclose(np.diagonal(K), kd_rbf, rtol=1e-6, atol=1e-6)
+
+    kd_lin = np.asarray(_kdiag(Xj, "linear"))
+    Kl = np.asarray(gram(Xj, Xj, epilogue="linear"))
+    np.testing.assert_allclose(np.diagonal(Kl), kd_lin, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kernel", ["rbf", "linear"])
+def test_farthest_point_eviction_matches_ref(kernel):
+    """farthest-point keeps the extreme points that carry the ball geometry;
+    the slot trajectory must equal the numpy oracle's exactly."""
+    b, n, d, S = 3, 120, 6, 8
+    X, Y, cs = _bank_data(b, n, d, seed=74, zeros=True)
+    kb = fit_kernel_bank(
+        X, Y, cs, kernel=kernel, gamma=0.6, coreset_size=S,
+        eviction="farthest-point", block_n=32,
+    )
+    idx, coef, points, q, r, xi2, m = fit_kernel_bank_ref(
+        np.asarray(X), np.asarray(Y), np.asarray(cs), kernel=kernel,
+        gamma=0.6, coreset_size=S, eviction="farthest-point",
+    )
+    np.testing.assert_array_equal(np.asarray(kb.idx), idx)
+    np.testing.assert_allclose(np.asarray(kb.coef), coef, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kb.q), q, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kb.r), r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kb.xi2), xi2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(kb.m), m)
+
+
+def test_eviction_validation():
+    X, Y, cs = _bank_data(2, 10, 4, seed=75)
+    with pytest.raises(ValueError, match="eviction"):
+        fit_kernel_bank(X, Y, cs, eviction="lru")
+
+
+@pytest.mark.parametrize("s_tile", [1, 3, 8])
+def test_s_tile_is_bit_exact(s_tile):
+    """Chunking the K_cs launch over the S axis is pure launch partitioning:
+    every state leaf must be BIT-equal to the unchunked fit."""
+    X, Y, cs = _bank_data(3, 90, 6, seed=76, zeros=True)
+    base = fit_kernel_bank(X, Y, cs, coreset_size=8, gamma=0.8, block_n=32)
+    tiled = fit_kernel_bank(
+        X, Y, cs, coreset_size=8, gamma=0.8, block_n=32, s_tile=s_tile
+    )
+    for name, a, b_ in zip(base._fields, base, tiled):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b_), err_msg=name
+        )
+
+
+def test_vmem_preflight_names_s_tile():
+    """An over-budget (B * S) core-set operand must fail fast with the knob
+    that fixes it, and the byte model must agree that s_tile shrinks it."""
+    from repro.kernels.ops import kernel_engine_vmem_bytes
+
+    X, Y, cs = _bank_data(2, 20, 4, seed=77)
+    with pytest.raises(ValueError, match="s_tile"):
+        fit_kernel_bank(
+            X, Y, cs, coreset_size=8, block_n=64, vmem_budget_bytes=100_000
+        )
+    full = sum(kernel_engine_vmem_bytes(64, 128, coreset_size=64).values())
+    tiled = sum(
+        kernel_engine_vmem_bytes(64, 128, coreset_size=64, s_tile=8).values()
+    )
+    assert tiled < full

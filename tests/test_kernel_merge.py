@@ -1,0 +1,596 @@
+"""Kernelized Sec-4.3 merge + mesh-sharded kernel-bank fit (this PR).
+
+Three layers, mirroring test_sharded_bank.py:
+
+1. FAST, no devices — ``merge_kernel_banks`` against the plain-numpy oracle
+   ``merge_kernel_banks_ref`` (identical kept-slot indices — the compression
+   POLICY is part of the contract), the empty-bank merge identity the
+   dead-shard fold relies on, the left-fold equivalence, and the LINEAR-
+   kernel cross-check: on banks whose live slots fit the compressed buffer
+   (no core-set drop), the kernelized merge must reproduce ``merge_balls``
+   on the explicit centers w = sum_s coef[s] p[s] — same r / xi2 / m, q equal
+   to |w_join|^2, and the kept (coef, point) pairs reconstructing w_join.
+
+2. Property tests (optional ``hypothesis``, with fixed-seed deterministic
+   equivalents — coverage must not depend on the optional dependency): in
+   the no-drop linear regime every fold order agrees with the explicit
+   slack-block embedding of test_sharded_bank.py, so the provable geometric
+   bounds carry over verbatim: every order encloses every input ball, any
+   two orders' centers are within min(r) of each other, radii within the 2x
+   band. Commutativity holds for the scalars plus decision parity (the
+   compressed buffers may keep the same slots in different order).
+
+3. SLOW, 8 host devices (CI exports
+   XLA_FLAGS=--xla_force_host_platform_device_count=8):
+   ``fit_kernel_bank(..., mesh=)`` against the numpy fold of per-range
+   engine fits (ragged N, both evictions, dead shards — GLOBAL idx exact),
+   statistical parity with the single-device fit on concentric rings, and
+   ``BankServer.from_checkpoint`` serving a sharded-trained bank bit-exact
+   (f32) with ``kernel_bank_decision``.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    KernelBank,
+    fit_kernel_bank,
+    fold_kernel_banks,
+    kernel_bank_decision,
+    merge_banks,
+    merge_kernel_banks,
+    save_kernel_bank,
+)
+from repro.core.kernel_bank import _fit_kernel_bank
+from repro.core.meb import Ball
+from repro.kernels.ref import _kernel_ref, merge_kernel_banks_ref
+from repro.serve.bank_server import BankServer
+
+try:
+    import hypothesis  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+
+def _fit_two_banks(kernel, seed, b=3, n=80, d=6, s=8, gamma=0.7):
+    """Two realistic banks from disjoint halves of one stream (idx disjoint
+    by construction: the second fit's indices are offset by n)."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(2 * n, d)).astype(np.float32)
+    Y = np.sign(rng.normal(size=(b, 2 * n))).astype(np.float32)
+    Y[Y == 0] = 1.0
+    cs = np.linspace(0.5, 4.0, b).astype(np.float32)
+    kw = dict(kernel=kernel, gamma=gamma, coreset_size=s, block_n=32)
+    b1 = fit_kernel_bank(jnp.asarray(X[:n]), jnp.asarray(Y[:, :n]), cs, **kw)
+    b2 = fit_kernel_bank(jnp.asarray(X[n:]), jnp.asarray(Y[:, n:]), cs, **kw)
+    b2 = b2._replace(idx=jnp.where(b2.idx >= 0, b2.idx + n, b2.idx))
+    return b1, b2, gamma
+
+
+def _empty_bank(b, s, d):
+    return KernelBank(
+        idx=jnp.full((b, s), -1, jnp.int32),
+        coef=jnp.zeros((b, s), jnp.float32),
+        points=jnp.zeros((b, s, d), jnp.float32),
+        q=jnp.zeros((b,), jnp.float32),
+        r=jnp.zeros((b,), jnp.float32),
+        xi2=jnp.zeros((b,), jnp.float32),
+        m=jnp.zeros((b,), jnp.int32),
+    )
+
+
+def _linear_bank(b, s, d, k_live, seed, idx_base=0):
+    """A synthetic LINEAR-consistent bank: q == |sum_s coef[s] p[s]|^2, so the
+    implicit RKHS center is the explicit euclidean one and merge_balls is an
+    exact oracle. k_live <= s // 2 keeps merges in the no-drop regime."""
+    rng = np.random.default_rng(seed)
+    idx = np.full((b, s), -1, np.int32)
+    coef = np.zeros((b, s), np.float32)
+    pts = np.zeros((b, s, d), np.float32)
+    for bi in range(b):
+        sl = rng.choice(s, size=k_live, replace=False)
+        idx[bi, sl] = idx_base + rng.choice(10_000, size=k_live, replace=False)
+        coef[bi, sl] = rng.normal(size=k_live).astype(np.float32)
+        pts[bi, sl] = rng.normal(size=(k_live, d)).astype(np.float32)
+    w = np.einsum("bs,bsd->bd", coef, pts).astype(np.float32)
+    return KernelBank(
+        idx=jnp.asarray(idx),
+        coef=jnp.asarray(coef),
+        points=jnp.asarray(pts),
+        q=jnp.asarray(np.sum(w * w, axis=1).astype(np.float32)),
+        r=jnp.asarray(np.abs(rng.normal(size=b)).astype(np.float32)),
+        xi2=jnp.asarray((0.01 + np.abs(rng.normal(size=b))).astype(np.float32)),
+        m=jnp.asarray(rng.integers(1, 50, size=b).astype(np.int32)),
+    )
+
+
+def _w_of(bank):
+    """Explicit euclidean center of a linear-kernel bank."""
+    return np.einsum(
+        "bs,bsd->bd", np.asarray(bank.coef), np.asarray(bank.points)
+    )
+
+
+def _as_ball(bank):
+    return Ball(
+        w=jnp.asarray(_w_of(bank).astype(np.float32)),
+        r=bank.r, xi2=bank.xi2, m=bank.m,
+    )
+
+
+def _decision_np(bank, Q, kernel, gamma):
+    """sum_s coef[s] k(x, p[s]) per model — free slots carry coef == 0."""
+    coef, pts = np.asarray(bank.coef), np.asarray(bank.points)
+    return np.stack(
+        [
+            _kernel_ref(Q, pts[bi], kernel=kernel, gamma=gamma) @ coef[bi]
+            for bi in range(coef.shape[0])
+        ],
+        axis=1,
+    )
+
+
+def _assert_banks_close(got, want7, rtol=1e-4, atol=1e-5):
+    idx, coef, points, q, r, xi2, m = want7
+    np.testing.assert_array_equal(np.asarray(got.idx), idx)
+    np.testing.assert_allclose(np.asarray(got.coef), coef, rtol=rtol, atol=atol)
+    np.testing.assert_allclose(np.asarray(got.points), points, rtol=0, atol=0)
+    np.testing.assert_allclose(np.asarray(got.q), q, rtol=rtol, atol=atol)
+    np.testing.assert_allclose(np.asarray(got.r), r, rtol=rtol, atol=atol)
+    np.testing.assert_allclose(np.asarray(got.xi2), xi2, rtol=rtol, atol=atol)
+    np.testing.assert_array_equal(np.asarray(got.m), m)
+
+
+# ---------------------------------------------------------------------------
+# FAST: merge vs numpy oracle, identity, fold
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kernel", ["rbf", "linear"])
+@pytest.mark.parametrize("eviction", ["smallest-coef", "farthest-point"])
+def test_merge_matches_ref_oracle(kernel, eviction):
+    """Kept-slot indices EXACT, algebra allclose — the compression policy
+    (top-S by score, ties to the lower slot) is part of the contract."""
+    b1, b2, gamma = _fit_two_banks(kernel, seed=5)
+    got = merge_kernel_banks(b1, b2, kernel=kernel, gamma=gamma, eviction=eviction)
+    want = merge_kernel_banks_ref(
+        b1, b2, kernel=kernel, gamma=gamma, eviction=eviction
+    )
+    _assert_banks_close(got, want)
+
+
+def test_merge_empty_bank_is_identity():
+    """An m == 0 bank (a fully-padded shard) must merge away exactly: scalars
+    bit-equal, the (idx -> coef) slot map preserved, decisions unchanged."""
+    b1, _, gamma = _fit_two_banks("rbf", seed=7)
+    empty = _empty_bank(*b1.coef.shape, b1.points.shape[-1])
+    for got in (
+        merge_kernel_banks(b1, empty, kernel="rbf", gamma=gamma),
+        merge_kernel_banks(empty, b1, kernel="rbf", gamma=gamma),
+    ):
+        np.testing.assert_array_equal(np.asarray(got.q), np.asarray(b1.q))
+        np.testing.assert_array_equal(np.asarray(got.r), np.asarray(b1.r))
+        np.testing.assert_array_equal(np.asarray(got.xi2), np.asarray(b1.xi2))
+        np.testing.assert_array_equal(np.asarray(got.m), np.asarray(b1.m))
+        # compression may reorder slots (top-S by score): compare the map
+        for bi in range(b1.coef.shape[0]):
+            want_map = {
+                int(i): float(c)
+                for i, c in zip(np.asarray(b1.idx[bi]), np.asarray(b1.coef[bi]))
+                if i >= 0
+            }
+            got_map = {
+                int(i): float(c)
+                for i, c in zip(np.asarray(got.idx[bi]), np.asarray(got.coef[bi]))
+                if i >= 0
+            }
+            assert got_map == want_map, bi
+    # and merging two empties stays the identity (dead-shard folds)
+    both = merge_kernel_banks(empty, empty, kernel="rbf", gamma=gamma)
+    assert int(jnp.sum(both.m)) == 0 and float(jnp.sum(both.q)) == 0.0
+
+
+def test_fold_kernel_banks_is_left_fold():
+    b1, b2, gamma = _fit_two_banks("rbf", seed=9)
+    b3 = jax.tree.map(lambda x: x, b1)._replace(
+        idx=jnp.where(b1.idx >= 0, b1.idx + 1000, b1.idx), coef=-b1.coef
+    )
+    folded = fold_kernel_banks([b1, b2, b3], kernel="rbf", gamma=gamma)
+    manual = merge_kernel_banks(
+        merge_kernel_banks(b1, b2, kernel="rbf", gamma=gamma),
+        b3, kernel="rbf", gamma=gamma,
+    )
+    for name, a, b_ in zip(folded._fields, folded, manual):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_), err_msg=name)
+    with pytest.raises(ValueError, match="empty"):
+        fold_kernel_banks([], kernel="rbf")
+    one = fold_kernel_banks([b1], kernel="rbf", gamma=gamma)
+    np.testing.assert_array_equal(np.asarray(one.coef), np.asarray(b1.coef))
+
+
+def test_merge_linear_no_drop_matches_merge_balls():
+    """In the no-drop linear regime the kernelized merge IS merge_balls on
+    the explicit centers: same r / xi2 / m, q = |w_join|^2, and the kept
+    coefficients reconstruct w_join."""
+    b, s, d = 4, 12, 5
+    b1 = _linear_bank(b, s, d, k_live=5, seed=11, idx_base=0)
+    b2 = _linear_bank(b, s, d, k_live=5, seed=12, idx_base=20_000)
+    got = merge_kernel_banks(b1, b2, kernel="linear")
+    want = merge_banks(_as_ball(b1), _as_ball(b2))
+    np.testing.assert_allclose(
+        np.asarray(got.r), np.asarray(want.r), rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(got.xi2), np.asarray(want.xi2), rtol=1e-4, atol=1e-6
+    )
+    np.testing.assert_array_equal(np.asarray(got.m), np.asarray(want.m))
+    w_join = np.asarray(want.w)
+    np.testing.assert_allclose(
+        np.asarray(got.q), np.sum(w_join * w_join, axis=1), rtol=1e-4, atol=1e-5
+    )
+    np.testing.assert_allclose(_w_of(got), w_join, rtol=1e-4, atol=1e-5)
+
+
+def test_merge_commutative_semantics():
+    """Swapping the arguments: identical algebra, identical decisions (the
+    kept slots may land in a different order)."""
+    b1, b2, gamma = _fit_two_banks("rbf", seed=13)
+    ab = merge_kernel_banks(b1, b2, kernel="rbf", gamma=gamma)
+    ba = merge_kernel_banks(b2, b1, kernel="rbf", gamma=gamma)
+    np.testing.assert_allclose(
+        np.asarray(ab.q), np.asarray(ba.q), rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(ab.r), np.asarray(ba.r), rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(ab.xi2), np.asarray(ba.xi2), rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_array_equal(np.asarray(ab.m), np.asarray(ba.m))
+    rng = np.random.default_rng(14)
+    Q = rng.normal(size=(17, b1.points.shape[-1])).astype(np.float32)
+    np.testing.assert_allclose(
+        _decision_np(ab, Q, "rbf", gamma),
+        _decision_np(ba, Q, "rbf", gamma),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_merge_shape_and_eviction_validation():
+    b1, b2, gamma = _fit_two_banks("rbf", seed=15, s=8)
+    with pytest.raises(ValueError, match="eviction"):
+        merge_kernel_banks(b1, b2, kernel="rbf", eviction="lru")
+    small = jax.tree.map(lambda x: x[:, :4] if x.ndim > 1 else x, b2)
+    with pytest.raises(ValueError, match="shape"):
+        merge_kernel_banks(b1, small, kernel="rbf")
+
+
+# ---------------------------------------------------------------------------
+# Merge-fold geometric properties (fixed-seed; hypothesis variants below)
+# ---------------------------------------------------------------------------
+
+
+def _explicit_embed_1d(ws, rs, xi2s):
+    """test_sharded_bank.py's explicit slack-block embedding (B == 1)."""
+    s, d = len(ws), len(ws[0])
+    cs = np.zeros((s, d + s), np.float64)
+    for i in range(s):
+        cs[i, :d] = ws[i]
+        cs[i, d + i] = np.sqrt(xi2s[i])
+    return cs, np.asarray(rs, np.float64)
+
+
+def _emerge(c1, r1, c2, r2):
+    d = float(np.linalg.norm(c1 - c2))
+    if d + r1 <= r2:
+        return c2.copy(), r2
+    if d + r2 <= r1:
+        return c1.copy(), r1
+    rj = 0.5 * (r1 + r2 + d)
+    t = np.clip((rj - r1) / max(d, 1e-12), 0.0, 1.0)
+    return c1 + t * (c2 - c1), rj
+
+
+def _check_kernel_fold_properties(banks, orders, atol=1e-4):
+    """No-drop linear regime: every fold order of ``fold_kernel_banks`` must
+    (a) agree with the explicit slack-block embedding, (b) enclose every
+    input ball, (c) land any two orders' centers within min(r) of each
+    other, (d) keep radii within the provable 2x band."""
+    ws = [_w_of(b)[0] for b in banks]
+    rs = [float(b.r[0]) for b in banks]
+    xi2s = [float(b.xi2[0]) for b in banks]
+    centers, radii = _explicit_embed_1d(ws, rs, xi2s)
+    d = len(ws[0])
+    scale = max(1.0, float(np.max(np.abs(centers))), float(np.max(radii)))
+    tol = atol * scale
+    folds = []
+    for order in orders:
+        c_e, r_e = centers[order[0]].copy(), radii[order[0]]
+        for i in order[1:]:
+            c_e, r_e = _emerge(c_e, r_e, centers[i], radii[i])
+        kb = fold_kernel_banks([banks[i] for i in order], kernel="linear")
+        # (a) the kernelized fold == the explicit embedding
+        np.testing.assert_allclose(
+            _w_of(kb)[0], c_e[:d], rtol=1e-4, atol=tol
+        )
+        np.testing.assert_allclose(float(kb.r[0]), r_e, rtol=1e-4, atol=tol)
+        np.testing.assert_allclose(
+            float(kb.xi2[0]), float(np.sum(c_e[d:] ** 2)), rtol=1e-3, atol=tol
+        )
+        np.testing.assert_allclose(
+            float(kb.q[0]), float(np.sum(c_e[:d] ** 2)), rtol=1e-3, atol=tol
+        )
+        # (b) enclosure of every input
+        for i in range(len(radii)):
+            gap = np.linalg.norm(c_e - centers[i]) + radii[i] - r_e
+            assert gap <= tol, (order, i, gap)
+        folds.append((c_e, r_e))
+    # (c) + (d): cross-order bounds
+    for a in range(len(folds)):
+        for b_ in range(a + 1, len(folds)):
+            (ca, ra), (cb, rb) = folds[a], folds[b_]
+            assert np.linalg.norm(ca - cb) <= min(ra, rb) + tol
+            assert max(ra, rb) <= 2.0 * min(ra, rb) + tol
+
+
+def _no_drop_banks(s_banks, d, seed):
+    """s_banks single-model linear-consistent banks whose TOTAL live count
+    fits one buffer — every fold order is drop-free."""
+    s_slots = 4 * s_banks  # 4 live each, buffer holds all of them
+    return [
+        _linear_bank(1, s_slots, d, k_live=4, seed=seed + i, idx_base=i * 100)
+        for i in range(s_banks)
+    ]
+
+
+def test_kernel_fold_properties_deterministic():
+    banks = _no_drop_banks(4, d=6, seed=17)
+    orders = [[0, 1, 2, 3], [3, 2, 1, 0], [1, 3, 0, 2]]
+    _check_kernel_fold_properties(banks, orders)
+
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        s=st.integers(2, 5),
+        d=st.integers(1, 7),
+        seed=st.integers(0, 10_000),
+    )
+    def test_kernel_fold_permutation_invariant_up_to_tolerance(s, d, seed):
+        """Any shard order: explicit-embedding semantics, enclosure, centers
+        within min(r), radii within 2x — the merge-fold theorems, in RKHS."""
+        rng = np.random.default_rng(seed)
+        banks = _no_drop_banks(s, d=d, seed=seed)
+        orders = [list(range(s))] + [list(rng.permutation(s)) for _ in range(2)]
+        _check_kernel_fold_properties(banks, orders)
+
+    @settings(max_examples=15, deadline=None)
+    @given(d=st.integers(1, 7), seed=st.integers(0, 10_000))
+    def test_kernel_merge_associative_up_to_tolerance(d, seed):
+        """(a+b)+c vs a+(b+c): both enclose {a, b, c}; centers within min
+        radius; radii within the 2x band."""
+        banks = _no_drop_banks(3, d=d, seed=seed)
+        left = merge_kernel_banks(
+            merge_kernel_banks(banks[0], banks[1], kernel="linear"),
+            banks[2], kernel="linear",
+        )
+        right = merge_kernel_banks(
+            banks[0],
+            merge_kernel_banks(banks[1], banks[2], kernel="linear"),
+            kernel="linear",
+        )
+        ws = [_w_of(b)[0] for b in banks]
+        rs = [float(b.r[0]) for b in banks]
+        xi2s = [float(b.xi2[0]) for b in banks]
+        centers, radii = _explicit_embed_1d(ws, rs, xi2s)
+        scale = max(1.0, float(np.max(np.abs(centers))), float(np.max(radii)))
+        tol = 1e-4 * scale
+        for kb in (left, right):
+            c = np.zeros(centers.shape[1])
+            c[: len(ws[0])] = _w_of(kb)[0]
+            # slack block norm is tracked only as a scalar: bound with it
+            r_ = float(kb.r[0])
+            for i in range(3):
+                w_gap = np.linalg.norm(c[: len(ws[0])] - centers[i][: len(ws[0])])
+                slack = np.sqrt(float(kb.xi2[0]) + xi2s[i])  # orthogonal worst case
+                assert np.sqrt(w_gap**2) <= r_ + slack + radii[i] + tol
+        rl, rr = float(left.r[0]), float(right.r[0])
+        assert max(rl, rr) <= 2.0 * min(rl, rr) + tol
+        np.testing.assert_allclose(
+            float(left.m[0]), float(right.m[0]), rtol=0, atol=0
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_kernel_merge_commutative_property(seed):
+        banks = _no_drop_banks(2, d=5, seed=seed)
+        ab = merge_kernel_banks(banks[0], banks[1], kernel="linear")
+        ba = merge_kernel_banks(banks[1], banks[0], kernel="linear")
+        np.testing.assert_allclose(
+            np.asarray(ab.q), np.asarray(ba.q), rtol=1e-5, atol=1e-6
+        )
+        np.testing.assert_allclose(
+            np.asarray(ab.r), np.asarray(ba.r), rtol=1e-5, atol=1e-6
+        )
+        np.testing.assert_allclose(
+            _w_of(ab), _w_of(ba), rtol=1e-4, atol=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# SLOW: 8-device mesh fit vs numpy fold oracle, rings parity, serving
+# ---------------------------------------------------------------------------
+
+
+def _need_devices(n):
+    if len(jax.devices()) < n:
+        pytest.skip(
+            f"needs {n} devices (run with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n})"
+        )
+    return jax.make_mesh((n,), ("data",))
+
+
+def _per_shard_banks(X, Y, cs, n_shards, *, kernel, gamma, coreset_size,
+                     eviction, block_n):
+    """Per-range ENGINE fits (deferred seeding handles ranges whose first
+    rows are inert), slot indices globalized — the fold's inputs."""
+    n = X.shape[0]
+    shard_n = -(-n // n_shards)
+    banks = []
+    for k in range(n_shards):
+        lo, hi = k * shard_n, min((k + 1) * shard_n, n)
+        if lo >= n:
+            break
+        kb = _fit_kernel_bank(
+            jnp.asarray(X[lo:hi]), jnp.asarray(Y[:, lo:hi]), jnp.asarray(cs),
+            gamma, kernel=kernel, coreset_size=coreset_size,
+            eviction=eviction, variant="exact", block_n=block_n,
+            s_tile=None, stream_dtype=None, interpret=None,
+        )
+        banks.append(kb._replace(idx=jnp.where(kb.idx >= 0, kb.idx + lo, kb.idx)))
+    return banks
+
+
+def _ref_fold(banks, *, kernel, gamma, eviction):
+    folded = tuple(banks[0])
+    for kb in banks[1:]:
+        folded = merge_kernel_banks_ref(
+            folded, tuple(kb), kernel=kernel, gamma=gamma, eviction=eviction
+        )
+    return folded
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "b,n,d,s,eviction",
+    [
+        (3, 203, 6, 8, "smallest-coef"),   # ragged N (203 = 8*26 - 5)
+        (3, 203, 6, 8, "farthest-point"),
+        (2, 9, 5, 4, "smallest-coef"),     # 3 fully-dead shards of padding
+    ],
+)
+def test_fit_kernel_bank_mesh_matches_numpy_fold(b, n, d, s, eviction):
+    """Two layers of oracle: (1) the mesh path must be BIT-equal to the
+    explicit fold of per-range engine fits (shard_map + all_gather + fold is
+    pure plumbing), and (2) the fold must match the numpy Sec-4.3 merge —
+    GLOBAL slot indices exact for smallest-coef; farthest-point scores are
+    kernel dot products, so ulp-level f32 ties may legitimately keep a
+    different near-equidistant slot (the algebra and decisions must still
+    agree)."""
+    mesh = _need_devices(8)
+    rng = np.random.default_rng(n)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    Y = np.sign(rng.normal(size=(b, n))).astype(np.float32)
+    Y[Y == 0] = 1.0
+    cs = np.linspace(0.5, 4.0, b).astype(np.float32)
+    kw = dict(kernel="rbf", gamma=0.7, coreset_size=s, eviction=eviction,
+              block_n=64)
+    out = fit_kernel_bank(
+        jnp.asarray(X), jnp.asarray(Y), jnp.asarray(cs), mesh=mesh, **kw
+    )
+    banks = _per_shard_banks(X, Y, cs, 8, **kw)
+    explicit = fold_kernel_banks(
+        banks, kernel="rbf", gamma=0.7, eviction=eviction
+    )
+    # same slot trajectory; floats only ulp-off (the mesh fold runs fused
+    # inside shard_map, the explicit one eagerly)
+    for name, a, b_ in zip(out._fields, out, explicit):
+        a, b_ = np.asarray(a), np.asarray(b_)
+        if name in ("idx", "m", "points"):
+            np.testing.assert_array_equal(a, b_, err_msg=name)
+        else:
+            np.testing.assert_allclose(
+                a, b_, rtol=1e-6, atol=1e-8, err_msg=name
+            )
+    want = _ref_fold(banks, kernel="rbf", gamma=0.7, eviction=eviction)
+    if eviction == "smallest-coef":
+        _assert_banks_close(out, want, rtol=3e-5, atol=1e-5)
+    else:
+        idx, coef, points, q, r, xi2, m = want
+        np.testing.assert_allclose(np.asarray(out.q), q, rtol=3e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(out.r), r, rtol=3e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(out.xi2), xi2, rtol=3e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(out.m), m)
+        ref_bank = KernelBank(*map(jnp.asarray, want))
+        Q = rng.normal(size=(19, d)).astype(np.float32)
+        np.testing.assert_allclose(
+            _decision_np(out, Q, "rbf", 0.7),
+            _decision_np(ref_bank, Q, "rbf", 0.7),
+            rtol=1e-3, atol=1e-4,
+        )
+    assert np.isfinite(np.asarray(out.q)).all()
+
+
+@pytest.mark.slow
+def test_mesh_statistical_parity_on_rings():
+    """Shard + merge is a lossier estimator than one sequential pass, but on
+    rbf-separable concentric rings it must stay in the same model class."""
+    mesh = _need_devices(8)
+    rng = np.random.default_rng(19)
+    n, d = 2048, 6
+    y = np.where(rng.uniform(size=n) < 0.5, 1.0, -1.0).astype(np.float32)
+    rad = np.where(y > 0, 1.0, 2.5)
+    ang = rng.uniform(0, 2 * np.pi, size=n)
+    X = rng.normal(scale=0.1, size=(n, d)).astype(np.float32)
+    X[:, 0] += (rad * np.cos(ang)).astype(np.float32)
+    X[:, 1] += (rad * np.sin(ang)).astype(np.float32)
+    Y = np.tile(y, (3, 1))
+    cs = np.asarray([0.5, 5.0, 50.0], np.float32)  # C sweep; compare the best
+    kw = dict(kernel="rbf", gamma=2.0, coreset_size=64, block_n=128)
+    single = fit_kernel_bank(jnp.asarray(X), jnp.asarray(Y), jnp.asarray(cs), **kw)
+    sharded = fit_kernel_bank(
+        jnp.asarray(X), jnp.asarray(Y), jnp.asarray(cs), mesh=mesh, **kw
+    )
+    acc = []
+    for kb in (single, sharded):
+        scores = np.asarray(
+            kernel_bank_decision(kb, jnp.asarray(X), kernel="rbf", gamma=2.0)
+        )
+        acc.append(np.mean(np.sign(scores) == y[:, None], axis=0))
+    acc_1, acc_s = acc
+    assert np.max(acc_1) > 0.9, acc_1  # rings are rbf-separable
+    assert abs(np.max(acc_s) - np.max(acc_1)) < 0.08, (acc_s, acc_1)
+    # merged radius stays within the 2x enclosure band of the sequential fit
+    assert np.all(
+        np.asarray(sharded.r) <= 2.0 * np.asarray(single.r) + 1e-5
+    )
+
+
+@pytest.mark.slow
+def test_bank_server_serves_sharded_kernel_bank(tmp_path):
+    """Sharded-trained kernel banks checkpoint and serve EXACTLY like
+    single-device ones: from_checkpoint scores bit-equal (f32) to
+    kernel_bank_decision on the same bank."""
+    mesh = _need_devices(8)
+    rng = np.random.default_rng(21)
+    n, d, b, gamma = 300, 6, 3, 0.9
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    Y = np.sign(rng.normal(size=(b, n))).astype(np.float32)
+    Y[Y == 0] = 1.0
+    cs = np.linspace(1.0, 8.0, b).astype(np.float32)
+    kb = fit_kernel_bank(
+        jnp.asarray(X), jnp.asarray(Y), jnp.asarray(cs), mesh=mesh,
+        kernel="rbf", gamma=gamma, coreset_size=16,
+        eviction="farthest-point", block_n=64,
+    )
+    path = str(tmp_path / "sharded_kb")
+    save_kernel_bank(path, kb, kernel="rbf", gamma=gamma)
+    srv = BankServer.from_checkpoint(path, q_block=32)
+    assert srv.kernel == "rbf" and srv.gamma == gamma
+    Q = rng.normal(size=(64, d)).astype(np.float32)  # 2 full serve steps
+    got = np.asarray(srv.score(Q))
+    want = np.asarray(
+        kernel_bank_decision(kb, jnp.asarray(Q), kernel="rbf", gamma=gamma)
+    )
+    np.testing.assert_array_equal(got, want)
