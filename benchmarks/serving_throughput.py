@@ -31,13 +31,17 @@ cheap term, because one-pass training left the model constant-storage.
 ``BankServer.swap_bank`` to publish an already-folded bank — the serving
 blackout window), and ``recovery_seconds`` — wall time from relaunching a
 killed trainer (crash injected mid-stream, after the last checkpoint) to
-the first FRESH bank swapped into the surviving server.
+the first FRESH bank swapped into the surviving server. Each live row
+records its ``bank_kind``: ``"linear"`` Ball loops and ``"kernel"``
+core-set loops (train through fit_kernel_bank, Sec-4.3 kernel merges on
+retire/fold, RBF serving) share the measurement surface, so their ingest /
+blackout / recovery numbers are directly comparable.
 
 Writes ``BENCH_serving.json`` at the repo root (validated by CI's
 bench-smoke next to BENCH_engine.json) and prints one ``BENCH`` line per
 config. ``--smoke`` runs a seconds-scale sweep in interpret mode for CI and
-always includes an ``ovr``-epilogue row and a ``live`` row (CI asserts
-both).
+always includes an ``ovr``-epilogue row, a linear ``live`` row, and a
+kernelized ``live`` row (CI asserts all three).
 
     PYTHONPATH=src python benchmarks/serving_throughput.py [--smoke]
         [--out BENCH_serving.json] [--reps 3]
@@ -63,7 +67,7 @@ from repro.kernels.ops import (
 )
 from repro.serve import BankServer
 
-SCHEMA = "streamsvm-bench-serving/v3"
+SCHEMA = "streamsvm-bench-serving/v4"
 DEFAULT_HBM_PEAK_GBPS = 819.0  # TPU v5e, per chip — same as BENCH_engine
 _DTYPE_BYTES = {"f32": 4, "bf16": 2}
 
@@ -90,10 +94,13 @@ RESULT_KEYS = (
 
 # Keys for path="live" rows — the train->serve loop has its own surface
 # (ingest rate + swap latency + crash-recovery time, not kernel bytes).
+# bank_kind distinguishes linear Ball loops from kernelized core-set loops
+# (schema v4) — CI's bench-smoke asserts one row of each.
 LIVE_RESULT_KEYS = (
-    "name", "path", "B", "D", "chunk_rows", "n_chunks", "n_sub_banks",
-    "rotate_every", "swap_every", "seconds_per_chunk", "rows_per_s",
-    "swaps", "checkpoints", "swap_latency_s", "recovery_seconds",
+    "name", "path", "bank_kind", "B", "D", "chunk_rows", "n_chunks",
+    "n_sub_banks", "rotate_every", "swap_every", "seconds_per_chunk",
+    "rows_per_s", "swaps", "checkpoints", "swap_latency_s",
+    "recovery_seconds",
 )
 
 
@@ -284,25 +291,30 @@ def bench_one(cfg, reps, interpret, peak_gbps):
 
 
 class _TimingServer:
-    """Hot-swap target that timestamps every published bank."""
+    """Hot-swap target that timestamps every published bank (both kinds)."""
 
     def __init__(self):
         self.times = []
 
     def swap_bank(self, bank):
-        jax.block_until_ready(bank.w)
+        jax.block_until_ready(
+            bank.points if hasattr(bank, "points") else bank.w
+        )
         self.times.append(time.perf_counter())
 
 
 def bench_live(cfg, reps, interpret):
     """The train->serve loop end to end: steady-state ingest, hot-swap
-    latency, and recovery-to-fresh-bank after an injected mid-stream kill."""
+    latency, and recovery-to-fresh-bank after an injected mid-stream kill.
+    ``bank_kind="kernel"`` runs the same loop through fit_kernel_bank +
+    the Sec-4.3 kernel merge, so the linear/kernel rows are comparable."""
     import tempfile
 
     from repro.live import ArraySource, LiveBank
     from repro.runtime import InjectedFailure
 
     B, D = cfg["B"], cfg["D"]
+    bank_kind = cfg.get("bank_kind", "linear")
     chunk, n_chunks = cfg["chunk_rows"], cfg["n_chunks"]
     n_rows = chunk * n_chunks
     rng = np.random.default_rng(0)
@@ -311,13 +323,22 @@ def bench_live(cfg, reps, interpret):
     y = np.sign(rng.normal(size=n_rows) + X[:, 0]).astype(np.float32)
     Y = np.tile(y, (B, 1))
     cs = jnp.asarray(np.linspace(1.0, 8.0, B, dtype=np.float32))
+    kernel_kw = (
+        dict(
+            kernel=cfg.get("kernel", "rbf"), gamma=cfg.get("gamma", 0.5),
+            coreset_size=cfg.get("coreset_size", 32),
+        )
+        if bank_kind == "kernel"
+        else {}
+    )
 
     def make(td, srv, failpoints=None):
         return LiveBank(
             ArraySource(X, Y, chunk), cs, ckpt_dir=os.path.join(td, "ck"),
-            n_sub_banks=cfg["n_sub_banks"], rotate_every=cfg["rotate_every"],
-            swap_every=cfg["swap_every"], server=srv, failpoints=failpoints,
-            sleep=lambda s: None, interpret=interpret,
+            bank_kind=bank_kind, n_sub_banks=cfg["n_sub_banks"],
+            rotate_every=cfg["rotate_every"], swap_every=cfg["swap_every"],
+            server=srv, failpoints=failpoints, sleep=lambda s: None,
+            interpret=interpret, **kernel_kw,
         )
 
     with tempfile.TemporaryDirectory() as td:
@@ -331,7 +352,13 @@ def bench_live(cfg, reps, interpret):
 
     # Hot-swap latency: publishing an already-folded bank into a warm
     # server (same shape — never recompiles). This is the serving blackout.
-    server = BankServer(bank)
+    if bank_kind == "kernel":
+        server = BankServer(
+            bank, kernel=kernel_kw["kernel"], gamma=kernel_kw["gamma"],
+            interpret=interpret,
+        )
+    else:
+        server = BankServer(bank, interpret=interpret)
     server.swap_bank(bank)  # warm
     t0 = time.perf_counter()
     for _ in range(reps):
@@ -357,6 +384,7 @@ def bench_live(cfg, reps, interpret):
     return {
         "name": cfg["name"],
         "path": "live",
+        "bank_kind": bank_kind,
         "B": B,
         "D": D,
         "chunk_rows": chunk,
@@ -419,6 +447,11 @@ def sweep(smoke: bool):
             # this row + its swap-latency/recovery fields)
             dict(name="smoke_live", path="live", B=16, D=32, chunk_rows=128,
                  n_chunks=8, n_sub_banks=2, rotate_every=3, swap_every=2),
+            # the kernelized live loop: same measurement surface, core-set
+            # train/merge/fold + RBF serving (CI asserts this row too)
+            dict(name="smoke_live_kernel", path="live", bank_kind="kernel",
+                 B=8, D=16, chunk_rows=64, n_chunks=6, n_sub_banks=2,
+                 rotate_every=3, swap_every=2, coreset_size=16),
         ]
     base = dict(D=128, q_block=256)
     return [
@@ -474,6 +507,11 @@ def sweep(smoke: bool):
         # blackout, and recovery time after a mid-stream kill
         dict(name="live_b64_d128", path="live", B=64, D=128, chunk_rows=2048,
              n_chunks=16, n_sub_banks=4, rotate_every=4, swap_every=2),
+        # its kernelized twin: core-set S=64 train/merge/fold + RBF serving,
+        # same cadences — the rows pair up for linear-vs-kernel comparison
+        dict(name="live_kernel_b16_d64_s64", path="live", bank_kind="kernel",
+             B=16, D=64, chunk_rows=512, n_chunks=12, n_sub_banks=4,
+             rotate_every=4, swap_every=2, coreset_size=64),
     ]
 
 
@@ -555,6 +593,10 @@ def validate(report: dict):
                     f"{row['name']}: a live run must swap and checkpoint at "
                     f"least once (swaps={row['swaps']}, "
                     f"checkpoints={row['checkpoints']})"
+                )
+            if row["bank_kind"] not in ("linear", "kernel"):
+                raise ValueError(
+                    f"{row['name']}: unknown bank_kind {row['bank_kind']!r}"
                 )
             continue
         missing = [k for k in RESULT_KEYS if k not in row]
@@ -658,7 +700,8 @@ def main(argv=None):
     for r in report["results"]:
         if r["path"] == "live":
             print(
-                f'{r["name"]},-,live,-,{r["rows_per_s"]:.0f} rows/s,'
+                f'{r["name"]},{r["bank_kind"]},live,-,'
+                f'{r["rows_per_s"]:.0f} rows/s,'
                 f'swap={r["swap_latency_s"] * 1e3:.2f}ms,'
                 f'recovery={r["recovery_seconds"]:.3f}s,-,-,'
                 f'{r["seconds_per_chunk"]:.4f}/chunk'

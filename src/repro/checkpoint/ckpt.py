@@ -108,6 +108,20 @@ def load_meta(path: str) -> Dict[str, Any]:
     return load_manifest(path)["meta"]
 
 
+def zeros_like_manifest(manifest: Dict[str, Any], lo: int = 0, hi: Optional[int] = None):
+    """Zero arrays matching the manifest's leaf slots ``[lo:hi)``.
+
+    The building block for constructing a ``restore`` target straight from
+    a manifest's recorded shapes/dtypes when no in-memory tree exists yet —
+    serve.BankServer.from_checkpoint and repro.live's resume both rebuild
+    their Ball/KernelBank targets this way instead of hand-rolling shapes.
+    Returns a list, one leaf per slot, in manifest (flattened-tree) order.
+    """
+    shapes = manifest["shapes"][lo:hi]
+    dtypes = manifest["dtypes"][lo:hi]
+    return [jax.numpy.zeros(tuple(s), dt) for s, dt in zip(shapes, dtypes)]
+
+
 def exists(path: str) -> bool:
     return os.path.exists(os.path.join(path, "manifest.json"))
 

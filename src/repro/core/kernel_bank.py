@@ -341,6 +341,7 @@ def fit_kernel_bank(
     shard_axis="data",
     vmem_budget_bytes: int | None = None,
     interpret: bool | None = None,
+    seed_check: bool = True,
 ) -> KernelBank:
     """One-pass kernelized Algorithm 1 for a bank of B models.
 
@@ -373,6 +374,12 @@ def fit_kernel_bank(
     (``distributed.fit_kernel_bank_sharded``; ragged N pads inert).
     vmem_budget_bytes: preflight budget override (else
     ``REPRO_VMEM_BUDGET_BYTES`` / the 16 MiB default).
+    seed_check: pass False to skip the eager Y[:, 0] seed-sign validation.
+    For a mid-stream CONTINUATION chunk (repro.live trains each arriving
+    chunk as its own fit and Sec-4.3-merges it into the slot's prior state)
+    there is no "row 0 seeds the model" contract — any model may be inert
+    on the chunk's first row — and the engine's deferred seeding handles
+    that exactly. First-fit callers should keep the default.
     """
     if kernel not in _KERNELS:
         raise ValueError(
@@ -393,7 +400,7 @@ def fit_kernel_bank(
         raise ValueError(f"s_tile must be >= 1 (or None), got {s_tile}")
     if Y.ndim != 2:
         raise ValueError(f"Y must be (B, N) sign rows: got Y.shape={Y.shape}")
-    if not isinstance(Y, jax.core.Tracer):
+    if seed_check and not isinstance(Y, jax.core.Tracer):
         # Eager seed-sign validation (satellite of the deferred-seed change):
         # the old engine silently seeded coef = 0 with a live q here.
         bad = np.flatnonzero(np.asarray(Y[:, 0]) == 0)

@@ -113,6 +113,35 @@ def merge_balls(b1: Ball, b2: Ball) -> Ball:
     return Ball(w=w, r=r, xi2=xi2, m=b1.m + b2.m)
 
 
+def _is_kernel_bank(bank) -> bool:
+    """True for KernelBank-shaped pytrees (core-set buffers present)."""
+    return hasattr(bank, "coef") and hasattr(bank, "points")
+
+
+def _require_kind(fn_name: str, banks, *, want_kernel: bool) -> None:
+    """Refuse linear/kernel bank mixing with a ValueError naming both sides.
+
+    A Ball center lives in the explicit feature space; a KernelBank center
+    is a coefficient expansion over stored core-set points. Their merge
+    algebras are NOT interchangeable — silently treating one as the other
+    produces garbage scores, so every fold/merge entry point checks first.
+    """
+    names = [type(b).__name__ for b in banks]
+    bad = [n for b, n in zip(banks, names) if _is_kernel_bank(b) != want_kernel]
+    if bad:
+        expected = "KernelBank" if want_kernel else "linear Ball"
+        other = (
+            "linear banks merge via merge_banks/fold_banks/stack_banks"
+            if want_kernel
+            else "kernelized banks merge via merge_kernel_banks/"
+            "fold_kernel_banks/stack_kernel_banks (kernel=..., gamma=...)"
+        )
+        raise ValueError(
+            f"{fn_name} operates on {expected} banks; got {names} — "
+            f"mixing linear and kernelized banks has no exact merge; {other}"
+        )
+
+
 def _pair_gram(P1, P2, kernel: str, gamma):
     """(B, S1, S2) kernel matrix between two (B, S, D) core-set buffers."""
     P1 = P1.astype(jnp.float32)
@@ -129,7 +158,8 @@ def _pair_gram(P1, P2, kernel: str, gamma):
 
 
 def merge_kernel_banks(b1, b2, *, kernel: str, gamma=1.0,
-                       eviction: str = "smallest-coef"):
+                       eviction: str = "smallest-coef",
+                       return_dropped: bool = False):
     """Sec-4.3 merge of two kernelized banks built from disjoint example sets.
 
     The kernel-space twin of ``merge_banks``: both arguments are
@@ -160,9 +190,16 @@ def merge_kernel_banks(b1, b2, *, kernel: str, gamma=1.0,
     while the buffer approximates the center. Numpy oracle:
     ``kernels.ref.merge_kernel_banks_ref``; property/parity suites:
     tests/test_kernel_merge.py.
+
+    ``return_dropped=True`` additionally returns the (B,) |coef| mass the
+    2S->S cut discarded per model — the re-compression loss audit. It is
+    computed from the NOT-kept slots directly (a scatter of the kept index
+    set), so it is exactly 0.0 whenever every dropped slot was free
+    (coef == 0), with no f32 mass-difference round-off.
     """
     from .kernel_bank import KernelBank  # lazy: module cycle
 
+    _require_kind("merge_kernel_banks", (b1, b2), want_kernel=True)
     if b1.coef.shape != b2.coef.shape:
         raise ValueError(
             f"merge_kernel_banks needs identically-shaped banks: got "
@@ -222,33 +259,95 @@ def merge_kernel_banks(b1, b2, *, kernel: str, gamma=1.0,
     else:
         score = jnp.where(idx_c >= 0, jnp.abs(coef_c), -jnp.inf)
     _, keep = jax.lax.top_k(score, s_size)  # (B, S), ties -> lowest index
-    return KernelBank(
+    merged = KernelBank(
         idx=jnp.take_along_axis(idx_c, keep, axis=1),
         coef=jnp.take_along_axis(coef_c, keep, axis=1),
         points=jnp.take_along_axis(pts_c, keep[..., None], axis=1),
         q=q, r=r, xi2=xi2, m=m,
     )
+    if not return_dropped:
+        return merged
+    bsz = coef_c.shape[0]
+    kept = jnp.zeros(coef_c.shape, bool).at[
+        jnp.arange(bsz)[:, None], keep
+    ].set(True)
+    dropped = jnp.sum(jnp.where(kept, 0.0, jnp.abs(coef_c)), axis=1)
+    return merged, dropped
 
 
-def fold_kernel_banks(banks, *, kernel: str, gamma=1.0,
-                      eviction: str = "smallest-coef"):
-    """Left fold of a python sequence of same-shape KernelBanks, in order.
+def stack_kernel_banks(banks):
+    """Stack an iterable of same-shape KernelBanks on a NEW leading axis.
 
-    The kernelized ``fold_banks``: shard count is static and small, so the
-    fold is a plain python loop of ``merge_kernel_banks`` (callers pass
-    shards oldest/leftmost first — the order ``fit_kernel_bank_sharded``
-    gathers them in). A single bank passes through untouched.
+    The kernelized ``stack_banks``: K banks of coef shape (B, S) become one
+    stacked KernelBank with coef (K, B, S) — the layout the live loop
+    checkpoints its K rotating kernel sub-banks in, and the form
+    ``fold_kernel_banks`` unstacks to fold.
     """
     banks = list(banks)
     if not banks:
         raise ValueError(
+            "stack_kernel_banks needs at least one bank; got an empty sequence"
+        )
+    _require_kind("stack_kernel_banks", banks, want_kernel=True)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *banks)
+
+
+def fold_kernel_banks(banks, *, kernel: str, gamma=1.0,
+                      eviction: str = "smallest-coef",
+                      live=None, return_dropped: bool = False):
+    """Left fold of same-shape KernelBanks, in order.
+
+    The kernelized ``fold_banks``: shard count is static and small, so the
+    fold is a plain python loop of ``merge_kernel_banks`` (callers pass
+    shards oldest/leftmost first — the order ``fit_kernel_bank_sharded``
+    gathers them in, and the birth order the live loop folds its sub-bank
+    slots in). ``banks`` is either a python sequence of (B, S) banks or a
+    stacked KernelBank from ``stack_kernel_banks`` (coef (K, B, S)).
+
+    ``live``: optional (K,) bool mask; dead entries are skipped EXACTLY —
+    the fold of the live entries is bit-identical to folding only those
+    entries, because dead slots never enter a merge at all (the dead-slot
+    exactness contract of the linear ``fold_merge``). At least one entry
+    must be live. ``return_dropped=True`` additionally returns the summed
+    (B,) dropped-|coef| mass over every 2S->S cut the fold performed
+    (see ``merge_kernel_banks``); a single live bank passes through with
+    exactly zero dropped mass.
+    """
+    if _is_kernel_bank(banks) and getattr(banks.coef, "ndim", 0) == 3:
+        k = banks.coef.shape[0]
+        banks = [jax.tree.map(lambda x, i=i: x[i], banks) for i in range(k)]
+    else:
+        banks = list(banks)
+    if not banks:
+        raise ValueError(
             "fold_kernel_banks needs at least one bank; got an empty sequence"
         )
+    _require_kind("fold_kernel_banks", banks, want_kernel=True)
+    if live is not None:
+        import numpy as np
+
+        mask = np.asarray(live)
+        if mask.shape != (len(banks),):
+            raise ValueError(
+                f"live mask shape {mask.shape} does not match the "
+                f"{len(banks)} banks being folded"
+            )
+        banks = [b for b, alive in zip(banks, mask) if alive]
+        if not banks:
+            raise ValueError(
+                "fold_kernel_banks needs at least one LIVE bank; the live "
+                "mask marked every entry dead"
+            )
     acc = banks[0]
+    dropped = jnp.zeros(acc.coef.shape[0], jnp.float32)
     for nxt in banks[1:]:
-        acc = merge_kernel_banks(
-            acc, nxt, kernel=kernel, gamma=gamma, eviction=eviction
+        acc, d = merge_kernel_banks(
+            acc, nxt, kernel=kernel, gamma=gamma, eviction=eviction,
+            return_dropped=True,
         )
+        dropped = dropped + d
+    if return_dropped:
+        return acc, dropped
     return acc
 
 
@@ -259,6 +358,7 @@ def merge_banks(b1: Ball, b2: Ball) -> Ball:
     (B,)); model b of the result merges model b of each bank — the lanes
     never interact.
     """
+    _require_kind("merge_banks", (b1, b2), want_kernel=False)
     return jax.vmap(merge_balls)(b1, b2)
 
 
@@ -272,10 +372,11 @@ def stack_banks(banks) -> Ball:
     banks = list(banks)
     if not banks:
         raise ValueError("stack_banks needs at least one bank; got an empty sequence")
+    _require_kind("stack_banks", banks, want_kernel=False)
     return jax.tree.map(lambda *xs: jnp.stack(xs), *banks)
 
 
-def fold_banks(banks) -> Ball:
+def fold_banks(banks, live=None) -> Ball:
     """Sec-4.3 fold of a python sequence of same-shape banks, in order.
 
     The sub-bank fold helper behind the live loop's drift repair: K rotating
@@ -283,11 +384,16 @@ def fold_banks(banks) -> Ball:
     stream, hence disjoint example sets — fold left-to-right (callers pass
     oldest first) into ONE serving bank via the bank-vectorized merge.
     Equivalent to ``fold_merge(stack_banks(banks))``; a single bank passes
-    through untouched.
+    through untouched. ``live``: optional (K,) bool mask forwarded to
+    ``fold_merge`` — dead entries are skipped exactly, matching
+    ``fold_kernel_banks(..., live=)``.
     """
     banks = list(banks)
     if not banks:
         raise ValueError("fold_banks needs at least one bank; got an empty sequence")
+    _require_kind("fold_banks", banks, want_kernel=False)
+    if live is not None:
+        return fold_merge(stack_banks(banks), live=jnp.asarray(live))
     if len(banks) == 1:
         return banks[0]
     return fold_merge(stack_banks(banks))

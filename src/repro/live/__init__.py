@@ -1,8 +1,10 @@
 """repro.live — fault-tolerant continuous train->serve loop with drift repair.
 
-``LiveBank`` closes the trainer/server loop into an always-on system: see
-loop.py for the K-sub-bank drift-repair contract and the crash-recovery
-protocol, sources.py for the replayable-chunk-source contract.
+``LiveBank`` closes the trainer/server loop into an always-on system — for
+linear Ball banks AND kernelized core-set banks (``bank_kind="kernel"``):
+see loop.py for the K-sub-bank drift-repair contract, the kernel-space
+train->merge->fold path, and the crash-recovery protocol; sources.py for
+the replayable-chunk-source contract.
 """
 from .loop import PHASES, LiveBank, LiveStats, run_live_with_restarts
 from .sources import ArraySource, FlakySource, TransientSourceError

@@ -7,6 +7,16 @@ active sub-bank through the tiled Pallas engine, fold the sub-banks with the
 bank-vectorized Sec-4.3 merge, and hot-swap the merged bank into a running
 server on a cadence — checkpointed, restartable, and drift-repairing.
 
+``bank_kind="kernel"`` runs the same loop in RKHS: chunks train through
+``core.fit_kernel_bank`` into bounded (B, S) core-set sub-banks, each
+arriving chunk Sec-4.3-merges into the active slot's prior state
+(``merge_kernel_banks`` — exact while the live slots fit S, then lossy
+top-k re-compression whose dropped |coef| mass is audited in
+``LiveStats.merge_dropped_mass``), retirement re-merges kernel epochs, and
+the serving fold goes through ``fold_kernel_banks`` over the live slots,
+oldest first. Everything else — cadences, checkpoints, crash equivalence —
+is bank-kind agnostic.
+
 K-sub-bank drift-repair contract
 --------------------------------
 The paper's one-pass recursion is stream-order sensitive: a single greedy
@@ -63,7 +73,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import ckpt
-from repro.core.meb import Ball, fold_banks, merge_banks
+from repro.core.kernel_bank import KernelBank, fit_kernel_bank
+from repro.core.meb import (
+    Ball,
+    fold_banks,
+    fold_kernel_banks,
+    merge_banks,
+    merge_kernel_banks,
+)
 from repro.core.multiball import fit_bank
 from repro.runtime.fault_tolerance import InjectedFailure, RetryPolicy
 
@@ -72,6 +89,8 @@ from .sources import TransientSourceError
 # fetch() sentinels: stream exhausted / chunk abandoned after retries
 _END = object()
 _QUARANTINED = object()
+# "server has no kernel attribute" sentinel for duck-typed swap targets
+_NO_KERNEL_ATTR = object()
 
 PHASES = (
     "fetch", "post_train", "post_rotate", "post_fold", "post_swap",
@@ -86,7 +105,11 @@ class LiveStats:
     Durable counters (restored from the checkpoint on restart, so a crashy
     run's final accounting matches the uninterrupted run's): chunks/rows
     ingested, folds, swaps, rotations, retirements, checkpoints, the
-    quarantined chunk ids, and ``last_swap_chunk``. Volatile counters
+    quarantined chunk ids, ``last_swap_chunk``, and — for kernelized loops
+    — ``merge_dropped_mass``: the total |coef| mass every 2S->S kernel-
+    merge re-compression has discarded (chunk continuation merges, retire
+    merges, and counted serving folds; exactly 0.0 while the live slots
+    always fit S — the re-compression loss audit). Volatile counters
     (facts about THIS process's life, never restored): ``restarts`` and
     ``retries``. ``bank_age_chunks`` is the staleness signal: chunks
     ingested since the served bank was last swapped.
@@ -101,6 +124,7 @@ class LiveStats:
     checkpoints: int = 0
     quarantined: List[int] = dataclasses.field(default_factory=list)
     last_swap_chunk: int = -1
+    merge_dropped_mass: float = 0.0
     bank_age_chunks: int = 0
     restarts: int = 0
     retries: int = 0
@@ -108,6 +132,7 @@ class LiveStats:
     _DURABLE = (
         "chunks_ingested", "rows_ingested", "folds", "swaps", "rotations",
         "retirements", "checkpoints", "quarantined", "last_swap_chunk",
+        "merge_dropped_mass",
     )
 
     def durable(self) -> dict:
@@ -148,8 +173,23 @@ class LiveBank:
                    ``mid_checkpoint`` additionally drops a garbage
                    ``.tmp`` into ckpt_dir first — the exact debris an
                    OS-level crash mid-commit leaves behind.
+    bank_kind:     "linear" (Ball sub-banks via ``core.fit_bank``) or
+                   "kernel" (KernelBank sub-banks via
+                   ``core.fit_kernel_bank``; each chunk fits fresh with
+                   ``seed_check=False`` and Sec-4.3-merges into the active
+                   slot — core-set ids are lifted to absolute stream
+                   coordinates so resume replays bit-exactly).
+    kernel/gamma/coreset_size/eviction/s_tile: the kernel-engine knobs
+                   (``core.fit_kernel_bank``); used only when
+                   ``bank_kind="kernel"``. The same kernel/gamma/eviction
+                   drive every retire merge and serving fold, and are
+                   persisted in the checkpoint meta (the
+                   ``save_kernel_bank`` meta contract, so
+                   ``BankServer.from_checkpoint`` reads them back).
     Engine kwargs (variant/block_n/b_tile/stream_dtype/bank_resident/mesh/
-    shard_axis/interpret) pass straight through to ``core.fit_bank``.
+    shard_axis/interpret) pass straight through to ``core.fit_bank`` (the
+    kernel engine takes all but b_tile/bank_resident, which are linear-
+    engine knobs).
     """
 
     def __init__(
@@ -168,6 +208,12 @@ class LiveBank:
         retry: Optional[RetryPolicy] = None,
         failpoints: Optional[Sequence[Tuple[str, int]]] = None,
         sleep: Callable[[float], None] = time.sleep,
+        bank_kind: str = "linear",
+        kernel: str = "rbf",
+        gamma=1.0,
+        coreset_size: int = 64,
+        eviction: str = "smallest-coef",
+        s_tile: Optional[int] = None,
         # engine passthrough
         variant: str = "exact",
         block_n: int = 256,
@@ -178,6 +224,10 @@ class LiveBank:
         shard_axis="data",
         interpret: Optional[bool] = None,
     ):
+        if bank_kind not in ("linear", "kernel"):
+            raise ValueError(
+                f"bank_kind must be 'linear' or 'kernel': got {bank_kind!r}"
+            )
         if n_sub_banks < 1:
             raise ValueError(f"n_sub_banks must be >= 1: got {n_sub_banks}")
         if rotate_every < 1:
@@ -211,23 +261,58 @@ class LiveBank:
         )
         self._failpoints: Set[Tuple[str, int]] = set(failpoints or ())
         self._sleep = sleep
-        self._engine_kw = dict(
-            variant=variant, block_n=block_n, b_tile=b_tile,
-            stream_dtype=stream_dtype, bank_resident=bank_resident,
-            mesh=mesh, shard_axis=shard_axis, interpret=interpret,
-        )
+        self.bank_kind = bank_kind
+        self.kernel = kernel if bank_kind == "kernel" else None
+        self.gamma = float(gamma)
+        self.coreset_size = int(coreset_size)
+        self.eviction = eviction
+        if bank_kind == "kernel":
+            # fail fast on a bad kernel config instead of at the first chunk
+            if kernel not in ("rbf", "linear"):
+                raise ValueError(
+                    f"unknown kernel {kernel!r}; expected 'rbf' or 'linear'"
+                )
+            if eviction not in ("smallest-coef", "farthest-point"):
+                raise ValueError(
+                    f"unknown eviction {eviction!r}; expected 'smallest-coef'"
+                    " or 'farthest-point'"
+                )
+            if self.coreset_size < 1:
+                raise ValueError(
+                    f"coreset_size must be >= 1, got {coreset_size}"
+                )
+            # seed_check=False: a mid-stream continuation chunk has no
+            # "row 0 seeds every model" contract (deferred seeding is exact)
+            self._engine_kw = dict(
+                kernel=kernel, gamma=self.gamma,
+                coreset_size=self.coreset_size, eviction=eviction,
+                variant=variant, block_n=block_n, s_tile=s_tile,
+                stream_dtype=stream_dtype, mesh=mesh, shard_axis=shard_axis,
+                interpret=interpret, seed_check=False,
+            )
+            self._merge_kw = dict(
+                kernel=kernel, gamma=self.gamma, eviction=eviction
+            )
+        else:
+            self._engine_kw = dict(
+                variant=variant, block_n=block_n, b_tile=b_tile,
+                stream_dtype=stream_dtype, bank_resident=bank_resident,
+                mesh=mesh, shard_axis=shard_axis, interpret=interpret,
+            )
+            self._merge_kw = {}
         self.stats = LiveStats()
         self._reset_state()
 
     # -- state ---------------------------------------------------------------
 
     def _reset_state(self) -> None:
-        self._slots: List[Optional[Ball]] = [None] * self.k
+        self._slots: List[Optional[object]] = [None] * self.k  # Ball|KernelBank
         self._birth: List[int] = [0] * self.k
         self._active: int = 0
         self.chunk_idx: int = 0
         self._folds_since_ckpt: int = 0
-        self._last_merged: Optional[Ball] = None
+        self._last_merged = None
+        self._fold_dropped: float = 0.0  # |coef| mass the LAST fold cut
         # reset durable counters without touching volatile ones (restarts,
         # retries, bank_age are facts about this process, not the stream)
         self.stats.load_durable(LiveStats().durable())
@@ -235,22 +320,15 @@ class LiveBank:
     def _state_tree(self) -> dict:
         ref = next(s for s in self._slots if s is not None)
         zero = jax.tree.map(jnp.zeros_like, ref)
-
-        def stacked(get):
-            return jnp.stack(
-                [get(s if s is not None else zero) for s in self._slots]
-            )
-
-        sub = Ball(
-            w=stacked(lambda b: b.w), r=stacked(lambda b: b.r),
-            xi2=stacked(lambda b: b.xi2), m=stacked(lambda b: b.m),
-        )
+        slots = [s if s is not None else zero for s in self._slots]
         return {
             "birth": jnp.asarray(self._birth, jnp.int32),
             "live": jnp.asarray(
                 [s is not None for s in self._slots], bool
             ),
-            "sub": sub,
+            # stack every sub-bank leaf on a NEW leading K axis — works for
+            # Ball (w (K,B,D), r, xi2, m) and KernelBank (idx (K,B,S), ...)
+            "sub": jax.tree.map(lambda *xs: jnp.stack(xs), *slots),
         }
 
     def _resume_from_disk(self) -> None:
@@ -269,15 +347,40 @@ class LiveBank:
                 f"loop is configured K={self.k}, B={self.n_models} — resume "
                 "needs a matching configuration"
             )
-        # leaf order of the state dict (sorted keys, Ball field order):
-        # birth (K,), live (K,), w (K,B,D), r, xi2, m
-        shapes, dtypes = manifest["shapes"], manifest["dtypes"]
+        ck_kind = meta.get("bank_kind", "linear")
+        if ck_kind != self.bank_kind:
+            raise ValueError(
+                f"checkpoint at {self.ckpt_dir!r} holds bank_kind={ck_kind!r} "
+                f"state; this loop is configured bank_kind={self.bank_kind!r}"
+                " — linear Ball and kernelized core-set states are not "
+                "interchangeable"
+            )
+        if self.bank_kind == "kernel":
+            ck_cfg = {
+                key: meta.get(key)
+                for key in ("kernel", "gamma", "coreset_size", "eviction")
+            }
+            cfg = {
+                "kernel": self.kernel, "gamma": self.gamma,
+                "coreset_size": self.coreset_size, "eviction": self.eviction,
+            }
+            if ck_cfg != cfg:
+                raise ValueError(
+                    f"checkpoint at {self.ckpt_dir!r} was written with "
+                    f"kernel config {ck_cfg}; this loop is configured {cfg} "
+                    "— a resumed kernel stream needs the exact same kernel, "
+                    "gamma, coreset size and eviction policy"
+                )
+        # leaf order of the state dict (sorted keys, then NamedTuple field
+        # order): birth (K,), live (K,), then the stacked sub-bank leaves —
+        # Ball (w (K,B,D), r, xi2, m) or KernelBank (idx (K,B,S), coef,
+        # points, q, r, xi2, m)
+        head = ckpt.zeros_like_manifest(manifest, 0, 2)
+        sub_cls = KernelBank if self.bank_kind == "kernel" else Ball
         target = {
-            "birth": jnp.zeros(shapes[0], dtypes[0]),
-            "live": jnp.zeros(shapes[1], bool),
-            "sub": Ball(
-                *(jnp.zeros(s, dt) for s, dt in zip(shapes[2:], dtypes[2:]))
-            ),
+            "birth": head[0],
+            "live": head[1].astype(bool),
+            "sub": sub_cls(*ckpt.zeros_like_manifest(manifest, 2)),
         }
         state = ckpt.restore(self.ckpt_dir, target)
         live = np.asarray(state["live"])
@@ -299,17 +402,22 @@ class LiveBank:
         # Count the commit in the meta it rides in: restoring checkpoint N
         # must report N checkpoints, or every restart would lose one.
         self.stats.checkpoints += 1
-        ckpt.save(
-            self.ckpt_dir,
-            self._state_tree(),
-            meta={
-                "chunk_idx": self.chunk_idx,
-                "active_slot": self._active,
-                "live_k": self.k,
-                "n_models": self.n_models,
-                "stats": self.stats.durable(),
-            },
-        )
+        meta = {
+            "chunk_idx": self.chunk_idx,
+            "active_slot": self._active,
+            "live_k": self.k,
+            "n_models": self.n_models,
+            "bank_kind": self.bank_kind,
+            "stats": self.stats.durable(),
+        }
+        if self.bank_kind == "kernel":
+            # the save_kernel_bank meta contract — what
+            # BankServer.from_checkpoint reads kernel config back from
+            meta.update(
+                kernel=self.kernel, gamma=self.gamma,
+                coreset_size=self.coreset_size, eviction=self.eviction,
+            )
+        ckpt.save(self.ckpt_dir, self._state_tree(), meta=meta)
         self._folds_since_ckpt = 0
         self._failpoint("post_checkpoint", i)
 
@@ -356,9 +464,24 @@ class LiveBank:
         yc = jnp.asarray(y)
         if yc.ndim == 1:
             yc = jnp.broadcast_to(yc[None, :], (self.n_models, yc.shape[0]))
-        bank = fit_bank(
-            Xc, yc, self.cs, self._slots[self._active], **self._engine_kw
-        )
+        prior = self._slots[self._active]
+        if self.bank_kind == "kernel":
+            bank = fit_kernel_bank(Xc, yc, self.cs, **self._engine_kw)
+            # Lift the chunk-local core-set ids to ABSOLUTE stream
+            # coordinates. rows_ingested is durable and not yet advanced for
+            # this chunk, so a crash-replayed chunk re-derives the identical
+            # offset — the id lift is replay-stable, hence bit-exact resume.
+            offset = self.stats.rows_ingested
+            bank = bank._replace(
+                idx=jnp.where(bank.idx >= 0, bank.idx + offset, bank.idx)
+            )
+            if prior is not None:
+                bank, dropped = merge_kernel_banks(
+                    prior, bank, return_dropped=True, **self._merge_kw
+                )
+                self.stats.merge_dropped_mass += float(jnp.sum(dropped))
+        else:
+            bank = fit_bank(Xc, yc, self.cs, prior, **self._engine_kw)
         self._slots[self._active] = jax.tree.map(jnp.asarray, bank)
         return int(Xc.shape[0])
 
@@ -382,10 +505,17 @@ class LiveBank:
                 self._slots[oldest] = None
             else:
                 second = order[1]
-                self._slots[second] = jax.tree.map(
-                    jnp.asarray,
-                    merge_banks(self._slots[oldest], self._slots[second]),
-                )
+                if self.bank_kind == "kernel":
+                    merged, dropped = merge_kernel_banks(
+                        self._slots[oldest], self._slots[second],
+                        return_dropped=True, **self._merge_kw,
+                    )
+                    self.stats.merge_dropped_mass += float(jnp.sum(dropped))
+                else:
+                    merged = merge_banks(
+                        self._slots[oldest], self._slots[second]
+                    )
+                self._slots[second] = jax.tree.map(jnp.asarray, merged)
                 self._birth[second] = self._birth[oldest]
                 self._slots[oldest] = None
             self.stats.retirements += 1
@@ -394,21 +524,63 @@ class LiveBank:
         self._birth[nxt] = self.chunk_idx
         self.stats.rotations += 1
 
-    def _merged(self) -> Optional[Ball]:
+    def _merged(self):
+        """Serving fold of the live slots, oldest first (Ball or KernelBank).
+
+        Also records the fold's dropped |coef| mass in ``_fold_dropped`` —
+        the caller that COUNTS the fold (cadence/finalize, not resume)
+        accumulates it into the durable ``stats.merge_dropped_mass``.
+        """
         order = self._age_order()
         if not order:
             return None
-        return jax.tree.map(
-            jnp.asarray, fold_banks([self._slots[s] for s in order])
-        )
+        banks = [self._slots[s] for s in order]
+        if self.bank_kind == "kernel":
+            folded, dropped = fold_kernel_banks(
+                banks, return_dropped=True, **self._merge_kw
+            )
+            self._fold_dropped = float(jnp.sum(dropped))
+        else:
+            folded = fold_banks(banks)
+            self._fold_dropped = 0.0
+        return jax.tree.map(jnp.asarray, folded)
 
-    def _push(self, merged: Optional[Ball]) -> None:
+    def _check_server_config(self, server) -> None:
+        """Refuse hot-swapping into a server with a mismatched kernel config.
+
+        Duck-typed swap targets without a ``kernel`` attribute (e.g. test
+        recorders) opt out; a real ``serve.BankServer`` always has one.
+        """
+        skernel = getattr(server, "kernel", _NO_KERNEL_ATTR)
+        if skernel is _NO_KERNEL_ATTR:
+            return
+        sgamma = getattr(server, "gamma", None)
+        mine = (
+            f"bank_kind={self.bank_kind!r}, kernel={self.kernel!r}, "
+            f"gamma={self.gamma if self.kernel else None!r}"
+        )
+        theirs = f"kernel={skernel!r}, gamma={sgamma!r}"
+        if skernel != self.kernel or (
+            self.kernel is not None
+            and sgamma is not None
+            and float(sgamma) != self.gamma
+        ):
+            raise ValueError(
+                f"live loop ({mine}) cannot hot-swap into a server "
+                f"configured {theirs} — a bank scored under the wrong "
+                "kernel config serves silent garbage; rebuild the server "
+                "with the loop's kernel configuration"
+            )
+
+    def _push(self, merged) -> None:
         if merged is None:
             return
         self._last_merged = merged
         if self.server is None and self.server_factory is not None:
             self.server = self.server_factory(merged)
+            self._check_server_config(self.server)
         elif self.server is not None:
+            self._check_server_config(self.server)
             self.server.swap_bank(merged)
         self.stats.swaps += 1
         self.stats.last_swap_chunk = self.chunk_idx
@@ -418,12 +590,14 @@ class LiveBank:
 
     def attach_server(self, server, push_current: bool = True) -> None:
         """Point hot-swaps at ``server``; optionally push the current bank."""
+        self._check_server_config(server)
         self.server = server
         if push_current and self._last_merged is not None:
             server.swap_bank(self._last_merged)
 
-    def serving_bank(self) -> Optional[Ball]:
-        """The last folded bank (what an attached server is serving)."""
+    def serving_bank(self):
+        """The last folded bank — Ball or KernelBank by ``bank_kind`` —
+        i.e. what an attached server is serving."""
         return self._last_merged
 
     def run(self, max_chunks: Optional[int] = None) -> LiveStats:
@@ -472,6 +646,7 @@ class LiveBank:
             merged = self._merged()
             if merged is not None:
                 self.stats.folds += 1
+                self.stats.merge_dropped_mass += self._fold_dropped
                 self._folds_since_ckpt += 1
                 self._failpoint("post_fold", i)
                 self._push(merged)
@@ -495,6 +670,7 @@ class LiveBank:
                 self.stats.last_swap_chunk != self.chunk_idx
             ):
                 self.stats.folds += 1
+                self.stats.merge_dropped_mass += self._fold_dropped
                 self._folds_since_ckpt += 1
                 self._push(merged)
         if self.checkpoint_every_folds and self._folds_since_ckpt:

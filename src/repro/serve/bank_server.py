@@ -34,11 +34,12 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Tuple, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.kernel_bank import KernelBank
-from repro.core.meb import Ball
+from repro.core.meb import Ball, fold_banks, fold_kernel_banks
 from repro.kernels.ops import predict_bank, predict_kernel_bank
 
 
@@ -200,7 +201,8 @@ class BankServer:
             return tuple(self._points.shape)
         return tuple(self._w.shape)
 
-    def swap_bank(self, bank) -> None:
+    def swap_bank(self, bank, *, kernel: Optional[str] = None,
+                  gamma=None) -> None:
         """Replace the served bank between steps; queued requests survive.
 
         Rows already scored keep their (old-bank) results; every row scored
@@ -209,7 +211,33 @@ class BankServer:
         (B, S, D) core sets for a kernel server (a linear bank cannot swap
         into a kernel server or vice versa) — same shape means the kernel's
         jit cache is reused, so a swap never stalls serving on a recompile.
+
+        ``kernel``/``gamma``: optionally declare the kernel config the
+        incoming bank was TRAINED with; a mismatch with this server's
+        config raises a ValueError naming both instead of serving silent
+        garbage scores (a core-set bank scored under the wrong kernel or
+        gamma is numerically valid but semantically wrong).
         """
+        if kernel is not None and kernel != self.kernel:
+            raise ValueError(
+                f"hot-swap bank was trained with kernel={kernel!r}; this "
+                f"server is configured kernel={self.kernel!r} "
+                f"(gamma={self.gamma}) — scoring under a different kernel "
+                "serves silent garbage; start a BankServer matching the "
+                "bank's kernel config"
+            )
+        if (
+            gamma is not None
+            and self.kernel is not None
+            and float(gamma) != self.gamma
+        ):
+            raise ValueError(
+                f"hot-swap bank was trained with gamma={float(gamma)}; this "
+                f"server is configured kernel={self.kernel!r} with "
+                f"gamma={self.gamma} — scoring under a different gamma "
+                "serves silent garbage; start a BankServer matching the "
+                "bank's kernel config"
+            )
         if self._w is None:
             if not self._is_kernel_bank(bank):
                 raise ValueError(
@@ -243,34 +271,41 @@ class BankServer:
 
     @classmethod
     def from_checkpoint(cls, path: str, **kwargs) -> "BankServer":
-        """Serve the bank a fit_chunked_many checkpoint persisted to disk.
+        """Serve the bank a trainer checkpoint persisted to disk.
 
         ``path`` is a ``repro.checkpoint.ckpt.save`` directory whose tree is
         the stacked Ball (the ``StreamCheckpoint.ball`` handed to the
         checkpoint callback) — or, when the manifest meta carries
         ``bank_kind == "kernel"`` (a ``core.save_kernel_bank`` checkpoint),
         the 7-leaf ``KernelBank``, in which case ``kernel``/``gamma`` are
-        restored from the meta unless overridden. The manifest's
-        shapes/dtypes rebuild the restore target; ``meta["n_classes"]`` (if
-        the trainer recorded it) fills in OVR serving unless overridden.
+        restored from the meta unless overridden. A ``repro.live``
+        StreamCheckpoint (meta carries ``live_k``) also serves directly:
+        the K-slot state is restored and the live sub-banks are folded
+        oldest-first — linear or kernelized per the meta's ``bank_kind`` —
+        into exactly the bank the live loop itself would push next (serve
+        straight from the trainer's last durable commit after a trainer
+        death). The manifest's shapes/dtypes rebuild the restore target;
+        ``meta["n_classes"]`` (if the trainer recorded it) fills in OVR
+        serving unless overridden.
         """
         from repro.checkpoint import ckpt
 
         manifest = ckpt.load_manifest(path)
-        shapes, dtypes = manifest["shapes"], manifest["dtypes"]
+        shapes = manifest["shapes"]
         meta = manifest.get("meta", {})
-        if meta.get("bank_kind") == "kernel":
+        if "live_k" in meta:
+            bank = cls._fold_live_checkpoint(path, manifest, meta, kwargs)
+        elif meta.get("bank_kind") == "kernel":
             if len(shapes) != len(KernelBank._fields):
                 raise ValueError(
                     f"kernel-bank checkpoint at {path!r} has {len(shapes)} "
                     f"leaves; expected the {len(KernelBank._fields)}-leaf "
                     "KernelBank a save_kernel_bank checkpoint carries"
                 )
-            target = KernelBank(
-                *(jnp.zeros(s, dt) for s, dt in zip(shapes, dtypes))
-            )
+            target = KernelBank(*ckpt.zeros_like_manifest(manifest))
             kwargs.setdefault("kernel", meta.get("kernel"))
             kwargs.setdefault("gamma", float(meta.get("gamma", 1.0)))
+            bank = ckpt.restore(path, target)
         elif len(shapes) != 4:
             raise ValueError(
                 f"checkpoint at {path!r} has {len(shapes)} leaves; expected "
@@ -278,10 +313,8 @@ class BankServer:
                 "checkpoint carries"
             )
         else:
-            target = Ball(
-                *(jnp.zeros(s, dt) for s, dt in zip(shapes, dtypes))
-            )
-        bank = ckpt.restore(path, target)
+            target = Ball(*ckpt.zeros_like_manifest(manifest))
+            bank = ckpt.restore(path, target)
         if (
             kwargs.get("epilogue") == "ovr"
             and "n_classes" not in kwargs
@@ -289,6 +322,55 @@ class BankServer:
         ):
             kwargs["n_classes"] = int(meta["n_classes"])
         return cls(bank, **kwargs)
+
+    @staticmethod
+    def _fold_live_checkpoint(path, manifest, meta, kwargs):
+        """Fold a repro.live StreamCheckpoint into its serving bank.
+
+        The state tree is ``{"birth": (K,), "live": (K,), "sub": stacked
+        Ball|KernelBank}``; the serving bank is the Sec-4.3 fold of the
+        LIVE slots, oldest (birth, slot) first — the same order and fold
+        the loop's own serving fold uses, so the result is bit-identical
+        (f32) to what the loop was serving at its last durable commit.
+        Kernel folds read kernel/gamma/eviction from the meta (the
+        save_kernel_bank meta contract) and seed the server's ``kernel=``/
+        ``gamma=`` unless overridden.
+        """
+        from repro.checkpoint import ckpt
+
+        kind = meta.get("bank_kind", "linear")
+        sub_cls = KernelBank if kind == "kernel" else Ball
+        head = ckpt.zeros_like_manifest(manifest, 0, 2)
+        target = {
+            "birth": head[0],
+            "live": head[1].astype(bool),
+            "sub": sub_cls(*ckpt.zeros_like_manifest(manifest, 2)),
+        }
+        state = ckpt.restore(path, target)
+        live = np.asarray(state["live"])
+        birth = np.asarray(state["birth"])
+        order = sorted(
+            (int(s) for s in np.flatnonzero(live)),
+            key=lambda s: (int(birth[s]), s),
+        )
+        if not order:
+            raise ValueError(
+                f"live checkpoint at {path!r} has no live sub-bank slots — "
+                "nothing to fold into a serving bank"
+            )
+        banks = [
+            jax.tree.map(lambda x, s=s: x[s], state["sub"]) for s in order
+        ]
+        if kind == "kernel":
+            kwargs.setdefault("kernel", meta.get("kernel"))
+            kwargs.setdefault("gamma", float(meta.get("gamma", 1.0)))
+            return fold_kernel_banks(
+                banks,
+                kernel=meta.get("kernel"),
+                gamma=float(meta.get("gamma", 1.0)),
+                eviction=meta.get("eviction", "smallest-coef"),
+            )
+        return fold_banks(banks)
 
     # -- request lifecycle --------------------------------------------------
 

@@ -41,6 +41,8 @@ from repro.core import (
     merge_banks,
     merge_kernel_banks,
     save_kernel_bank,
+    stack_banks,
+    stack_kernel_banks,
 )
 from repro.core.kernel_bank import _fit_kernel_bank
 from repro.core.meb import Ball
@@ -271,6 +273,119 @@ def test_merge_shape_and_eviction_validation():
     small = jax.tree.map(lambda x: x[:, :4] if x.ndim > 1 else x, b2)
     with pytest.raises(ValueError, match="shape"):
         merge_kernel_banks(b1, small, kernel="rbf")
+
+
+def test_mixing_linear_and_kernel_banks_raises():
+    """Every fold/merge entry point refuses Ball/KernelBank mixing with a
+    ValueError naming both types — their merge algebras are not
+    interchangeable, and silent coercion would serve garbage scores."""
+    b1, b2, gamma = _fit_two_banks("rbf", seed=43)
+    ball = _as_ball(b1)
+    with pytest.raises(ValueError, match=r"Ball.*KernelBank|KernelBank.*Ball"):
+        merge_kernel_banks(ball, b2, kernel="rbf", gamma=gamma)
+    with pytest.raises(ValueError, match="KernelBank"):
+        merge_banks(b1, b2)
+    with pytest.raises(ValueError, match="KernelBank"):
+        stack_banks([b1, b2])
+    with pytest.raises(ValueError, match="Ball"):
+        stack_kernel_banks([ball, ball])
+    with pytest.raises(ValueError, match=r"Ball.*KernelBank|KernelBank.*Ball"):
+        fold_kernel_banks([b1, ball], kernel="rbf", gamma=gamma)
+
+
+# ---------------------------------------------------------------------------
+# Re-compression loss audit: merge_kernel_banks(..., return_dropped=True)
+# ---------------------------------------------------------------------------
+
+
+def test_merge_dropped_mass_exact_zero_when_no_drop():
+    """When every live candidate fits the compressed buffer the dropped
+    slots are all FREE (coef == 0), so the audit is EXACTLY 0.0 — not
+    merely small — and requesting it must not perturb the merge."""
+    b1, b2 = _no_drop_banks(2, d=5, seed=23)
+    plain = merge_kernel_banks(b1, b2, kernel="linear")
+    merged, dropped = merge_kernel_banks(
+        b1, b2, kernel="linear", return_dropped=True
+    )
+    assert dropped.shape == (1,)
+    assert float(jnp.sum(dropped)) == 0.0
+    for name, a, b_ in zip(plain._fields, plain, merged):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_), err_msg=name)
+    # realistic lossy fits: per-model, finite, non-negative
+    f1, f2, gamma = _fit_two_banks("rbf", seed=31)
+    _, dropped2 = merge_kernel_banks(
+        f1, f2, kernel="rbf", gamma=gamma, return_dropped=True
+    )
+    assert dropped2.shape == (3,)
+    d2 = np.asarray(dropped2)
+    assert np.isfinite(d2).all() and (d2 >= 0.0).all()
+
+
+def _pair_at_s(s, d=5, k_live=12, seed=29):
+    """The SAME two banks (identical live entries, scalars) embedded into
+    buffers of size ``s`` — only the merge's keep budget varies with s, so
+    dropped mass is comparable across buffer sizes."""
+    rng = np.random.default_rng(seed)
+    banks = []
+    for t in range(2):
+        coef_v = rng.normal(size=k_live).astype(np.float32)
+        pts_v = rng.normal(size=(k_live, d)).astype(np.float32)
+        r = np.float32(abs(rng.normal()) + 0.5)
+        xi2 = np.float32(abs(rng.normal()) + 0.01)
+        m = np.int32(rng.integers(1, 50))
+        w = coef_v @ pts_v
+        idx = np.full((1, s), -1, np.int32)
+        coef = np.zeros((1, s), np.float32)
+        pts = np.zeros((1, s, d), np.float32)
+        idx[0, :k_live] = t * 1000 + np.arange(k_live)
+        coef[0, :k_live] = coef_v
+        pts[0, :k_live] = pts_v
+        banks.append(KernelBank(
+            idx=jnp.asarray(idx),
+            coef=jnp.asarray(coef),
+            points=jnp.asarray(pts),
+            q=jnp.asarray([np.float32(w @ w)]),
+            r=jnp.asarray([r]),
+            xi2=jnp.asarray([xi2]),
+            m=jnp.asarray([m]),
+        ))
+    return banks
+
+
+def test_merge_dropped_mass_monotone_in_buffer_size():
+    """On a fixed pair of banks the dropped |coef| mass is non-increasing
+    in the buffer size S (top-S keep sets are nested in S), strictly
+    positive while 2*k_live > S, and exactly 0.0 once everything fits."""
+    masses = []
+    for s in (12, 16, 20, 24, 32):
+        b1, b2 = _pair_at_s(s)
+        _, dropped = merge_kernel_banks(
+            b1, b2, kernel="rbf", gamma=0.7, return_dropped=True
+        )
+        masses.append(float(jnp.sum(dropped)))
+    assert masses[0] > 0.0
+    for hi, lo in zip(masses, masses[1:]):
+        assert lo <= hi + 1e-5, masses
+    assert masses[-2] == 0.0 and masses[-1] == 0.0  # S >= 24 keeps all
+
+
+def test_fold_dropped_mass_accumulates():
+    """fold_kernel_banks sums per-merge losses: zero in the no-drop regime,
+    and at least the first pairwise loss on a lossy chain."""
+    banks = _no_drop_banks(3, d=5, seed=37)
+    _, dropped = fold_kernel_banks(
+        banks, kernel="linear", return_dropped=True
+    )
+    assert dropped.shape == (1,) and float(dropped[0]) == 0.0
+    f1, f2, gamma = _fit_two_banks("rbf", seed=41, s=4)
+    _, d12 = merge_kernel_banks(
+        f1, f2, kernel="rbf", gamma=gamma, return_dropped=True
+    )
+    assert float(jnp.sum(d12)) > 0.0  # S=4 forces real drops
+    _, chain = fold_kernel_banks(
+        [f1, f2, f1], kernel="rbf", gamma=gamma, return_dropped=True
+    )
+    assert np.all(np.asarray(chain) >= np.asarray(d12) - 1e-6)
 
 
 # ---------------------------------------------------------------------------

@@ -1,17 +1,31 @@
-"""Live loop: crash equivalence at every phase boundary, retry/quarantine,
-K-sub-bank drift repair, server survival, and the fold helpers."""
+"""Live loop: crash equivalence at every phase boundary — for BOTH bank
+kinds (linear Ball and kernelized core-set sub-banks) — retry/quarantine,
+K-sub-bank drift repair, server survival, the fold helpers (linear + kernel
+twins, property-tested), and the kernel-merge re-compression loss audit."""
 import functools
 import os
 import subprocess
 import sys
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.checkpoint import ckpt
-from repro.core import fit_bank, fold_banks, merge_banks, stack_banks
-from repro.core.meb import Ball
+from repro.core import (
+    KernelBank,
+    fit_bank,
+    fit_kernel_bank,
+    fold_banks,
+    fold_kernel_banks,
+    kernel_bank_decision,
+    merge_banks,
+    merge_kernel_banks,
+    stack_banks,
+    stack_kernel_banks,
+)
+from repro.core.meb import Ball, fold_merge
 from repro.live import (
     PHASES,
     ArraySource,
@@ -21,10 +35,23 @@ from repro.live import (
     run_live_with_restarts,
 )
 from repro.runtime import InjectedFailure, RetryPolicy
+from repro.serve.bank_server import BankServer
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
 
 D, B, CHUNK, N_CHUNKS = 8, 3, 32, 10
 CS = jnp.asarray([0.5, 2.0, 8.0], jnp.float32)
 _NOSLEEP = lambda s: None
+BANK_KINDS = ("linear", "kernel")
+# small-but-lossy kernel config for the live tests: S=6 < CHUNK forces
+# eviction AND merge re-compression on every chunk continuation
+KERNEL_KW = dict(kernel="rbf", gamma=0.7, coreset_size=6, block_n=32)
 
 
 def _stream(n_chunks=N_CHUNKS, seed=0):
@@ -35,18 +62,38 @@ def _stream(n_chunks=N_CHUNKS, seed=0):
     return X, np.tile(y, (B, 1))
 
 
-def _make(source, ckpt_dir, **kw):
+def _make(source, ckpt_dir, bank_kind="linear", **kw):
     kw.setdefault("n_sub_banks", 2)
     kw.setdefault("rotate_every", 3)
     kw.setdefault("swap_every", 2)
     kw.setdefault("sleep", _NOSLEEP)
-    return LiveBank(source, CS, ckpt_dir=str(ckpt_dir), **kw)
+    if bank_kind == "kernel":
+        for key, val in KERNEL_KW.items():
+            kw.setdefault(key, val)
+    return LiveBank(
+        source, CS, ckpt_dir=str(ckpt_dir), bank_kind=bank_kind, **kw
+    )
 
 
-def _bank_eq(a: Ball, b: Ball) -> bool:
+def _bank_eq(a, b) -> bool:
     return all(
         np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(a, b)
     )
+
+
+_QUERIES = _stream(1, seed=99)[0][:16]
+
+
+def _served_scores(bank) -> np.ndarray:
+    """Decision scores on fixed queries, by bank kind (the served readout)."""
+    if hasattr(bank, "coef"):
+        return np.asarray(
+            kernel_bank_decision(
+                bank, jnp.asarray(_QUERIES),
+                kernel=KERNEL_KW["kernel"], gamma=KERNEL_KW["gamma"],
+            )
+        )
+    return _QUERIES @ np.asarray(bank.w).T
 
 
 # ---------------------------------------------------------------------------
@@ -71,6 +118,42 @@ def test_single_slot_matches_sequential_fit_bank(tmp_path):
             jnp.asarray(Y[:, lo:lo + CHUNK]), CS, ref,
         )
     assert _bank_eq(live.serving_bank(), ref)
+
+
+def test_kernel_single_slot_matches_chunkwise_merge(tmp_path):
+    """K=1 kernel loop == the documented referent: each chunk fits FRESH
+    through fit_kernel_bank, its core-set ids lift to absolute stream
+    coordinates, and Sec-4.3 merges into the prior state — bit-exactly."""
+    X, Y = _stream()
+    live = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "c", bank_kind="kernel",
+        n_sub_banks=1, rotate_every=10**9, swap_every=1,
+    )
+    live.run()
+
+    fit_kw = dict(
+        kernel=KERNEL_KW["kernel"], gamma=KERNEL_KW["gamma"],
+        coreset_size=KERNEL_KW["coreset_size"], block_n=KERNEL_KW["block_n"],
+    )
+    merge_kw = dict(kernel=KERNEL_KW["kernel"], gamma=KERNEL_KW["gamma"])
+    ref = None
+    for i in range(N_CHUNKS):
+        lo = i * CHUNK
+        chunk = fit_kernel_bank(
+            jnp.asarray(X[lo:lo + CHUNK]),
+            jnp.asarray(Y[:, lo:lo + CHUNK]), CS, **fit_kw,
+        )
+        chunk = chunk._replace(
+            idx=jnp.where(chunk.idx >= 0, chunk.idx + lo, chunk.idx)
+        )
+        ref = chunk if ref is None else merge_kernel_banks(
+            ref, chunk, **merge_kw
+        )
+    assert _bank_eq(live.serving_bank(), ref)
+    # the absolute-coordinate lift: live core-set ids address the stream
+    idx = np.asarray(live.serving_bank().idx)
+    assert idx.max() >= CHUNK  # ids from later chunks kept their offset
+    assert idx[idx >= 0].max() < N_CHUNKS * CHUNK
 
 
 def test_clean_run_stats_accounting(tmp_path):
@@ -164,6 +247,14 @@ def test_constructor_validation(tmp_path):
         _make(src, tmp_path, failpoints=[("pre_train", 3)])
     with pytest.raises(ValueError, match="chunk_size"):
         ArraySource(X, Y, 0)
+    with pytest.raises(ValueError, match="bank_kind"):
+        _make(src, tmp_path, bank_kind="quadratic")
+    with pytest.raises(ValueError, match="unknown kernel"):
+        _make(src, tmp_path, bank_kind="kernel", kernel="poly")
+    with pytest.raises(ValueError, match="unknown eviction"):
+        _make(src, tmp_path, bank_kind="kernel", eviction="lru")
+    with pytest.raises(ValueError, match="coreset_size"):
+        _make(src, tmp_path, bank_kind="kernel", coreset_size=0)
 
 
 # ---------------------------------------------------------------------------
@@ -171,32 +262,40 @@ def test_constructor_validation(tmp_path):
 # ---------------------------------------------------------------------------
 
 
-@pytest.fixture(scope="module")
-def clean_reference(tmp_path_factory):
-    """The uninterrupted run every crashy variant must reproduce bit-exactly."""
+@pytest.fixture(scope="module", params=BANK_KINDS)
+def clean_reference(request, tmp_path_factory):
+    """Per bank kind: the uninterrupted run every crashy variant must
+    reproduce bit-exactly — bank leaves, served scores, durable stats."""
+    kind = request.param
     X, Y = _stream()
     live = _make(
         ArraySource(X, Y, CHUNK),
-        tmp_path_factory.mktemp("clean") / "c",
+        tmp_path_factory.mktemp(f"clean_{kind}") / "c",
+        bank_kind=kind,
     )
     stats = live.run()
-    return live.serving_bank(), stats.durable()
+    bank = live.serving_bank()
+    return kind, bank, _served_scores(bank), stats.durable()
 
 
 @pytest.mark.parametrize("phase", PHASES)
 def test_crash_equivalence_at_every_phase(tmp_path, phase, clean_reference):
     """Inject a crash at each phase boundary of chunk 5 (where rotation,
     fold, swap and checkpoint ALL fire: chunk_idx 6 is divisible by both
-    cadences) — one restart later the bank and the durable accounting are
-    bit-identical to the uninterrupted run."""
-    ref_bank, ref_stats = clean_reference
+    cadences) — one restart later the bank, the served scores and the
+    durable accounting are bit-identical to the uninterrupted run.
+    Parametrized over bank_kind: the kernelized loop must recover its
+    (B, S) core-set state exactly like the linear loop recovers (B, D)."""
+    kind, ref_bank, ref_scores, ref_stats = clean_reference
     X, Y = _stream()
     live = _make(
-        ArraySource(X, Y, CHUNK), tmp_path / "c", failpoints=[(phase, 5)]
+        ArraySource(X, Y, CHUNK), tmp_path / "c", bank_kind=kind,
+        failpoints=[(phase, 5)],
     )
     stats = run_live_with_restarts(live, sleep=_NOSLEEP)
     assert stats.restarts == 1, f"failpoint {phase!r} never fired"
     assert _bank_eq(live.serving_bank(), ref_bank)
+    assert np.array_equal(_served_scores(live.serving_bank()), ref_scores)
     assert stats.durable() == ref_stats
     # recovery swept up any mid-commit debris (mid_checkpoint drops a torn
     # .tmp in the directory first; the next commit's GC removes it)
@@ -206,15 +305,42 @@ def test_crash_equivalence_at_every_phase(tmp_path, phase, clean_reference):
 
 def test_repeated_crashes_still_converge(tmp_path, clean_reference):
     """Five crashes at five different boundaries in one run."""
-    ref_bank, ref_stats = clean_reference
+    kind, ref_bank, ref_scores, ref_stats = clean_reference
     X, Y = _stream()
     fps = [("fetch", 1), ("post_train", 3), ("post_fold", 5),
            ("mid_checkpoint", 7), ("post_swap", 9)]
-    live = _make(ArraySource(X, Y, CHUNK), tmp_path / "c", failpoints=fps)
+    live = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "c", bank_kind=kind,
+        failpoints=fps,
+    )
     stats = run_live_with_restarts(live, sleep=_NOSLEEP)
     assert stats.restarts == 5
     assert _bank_eq(live.serving_bank(), ref_bank)
+    assert np.array_equal(_served_scores(live.serving_bank()), ref_scores)
     assert stats.durable() == ref_stats
+
+
+def test_serve_from_live_checkpoint(tmp_path, clean_reference):
+    """BankServer.from_checkpoint on a live StreamCheckpoint folds the live
+    slots into exactly the bank the loop was serving at its last commit —
+    kernel config restored from the meta (save_kernel_bank contract)."""
+    kind, ref_bank, ref_scores, _ = clean_reference
+    X, Y = _stream()
+    live = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "c", bank_kind=kind
+    )
+    live.run()
+    srv = BankServer.from_checkpoint(str(tmp_path / "c"), q_block=16)
+    if kind == "kernel":
+        assert srv.kernel == KERNEL_KW["kernel"]
+        assert srv.gamma == KERNEL_KW["gamma"]
+    else:
+        assert srv.kernel is None
+    req = srv.submit(_QUERIES)
+    while not req.done:
+        srv.step()
+    # the final checkpoint commits the final fold: served == loop's scores
+    assert np.array_equal(req.result, ref_scores)
 
 
 def test_run_live_nonretryable_propagates(tmp_path):
@@ -235,6 +361,29 @@ def test_resume_rejects_mismatched_configuration(tmp_path):
     other = _make(ArraySource(X, Y, CHUNK), tmp_path / "c", n_sub_banks=3)
     with pytest.raises(ValueError, match="K=2"):
         other.run()
+
+
+def test_resume_rejects_mismatched_bank_kind_and_kernel_config(tmp_path):
+    """A linear checkpoint refuses a kernel loop (and vice versa), and a
+    kernel checkpoint refuses a drifted kernel config — ValueErrors naming
+    both sides, instead of restoring garbage into the wrong algebra."""
+    X, Y = _stream(4)
+    _make(ArraySource(X, Y, CHUNK), tmp_path / "lin").run()
+    with pytest.raises(ValueError, match="bank_kind='linear'.*'kernel'"):
+        _make(ArraySource(X, Y, CHUNK), tmp_path / "lin",
+              bank_kind="kernel").run()
+
+    _make(ArraySource(X, Y, CHUNK), tmp_path / "ker",
+          bank_kind="kernel").run()
+    with pytest.raises(ValueError, match="bank_kind='kernel'.*'linear'"):
+        _make(ArraySource(X, Y, CHUNK), tmp_path / "ker").run()
+    for drift in (
+        {"gamma": 0.9}, {"kernel": "linear"},
+        {"coreset_size": 7}, {"eviction": "farthest-point"},
+    ):
+        with pytest.raises(ValueError, match="kernel config"):
+            _make(ArraySource(X, Y, CHUNK), tmp_path / "ker",
+                  bank_kind="kernel", **drift).run()
 
 
 def test_checkpointing_disabled(tmp_path):
@@ -338,6 +487,57 @@ def test_attach_server_pushes_current_bank(tmp_path):
     assert len(srv.banks) == 1 and _bank_eq(srv.banks[0], live.serving_bank())
 
 
+def test_live_loop_rejects_mismatched_server_kernel_config(tmp_path):
+    """Hot-swapping into a server whose kernel config differs from the
+    loop's raises a ValueError naming both configs — at attach time and at
+    the first factory-built push alike."""
+    X, Y = _stream(4)
+
+    # kernel loop -> linear server
+    klive = _make(ArraySource(X, Y, CHUNK), tmp_path / "k", bank_kind="kernel")
+    klive.run()
+    linear_srv = BankServer(np.zeros((B, D), np.float32))
+    with pytest.raises(ValueError, match="kernel='rbf'.*kernel=None"):
+        klive.attach_server(linear_srv)
+
+    # kernel loop -> kernel server with a drifted gamma
+    bank = klive.serving_bank()
+    bad_gamma_srv = BankServer(bank, kernel="rbf", gamma=9.9)
+    with pytest.raises(ValueError, match="gamma=0.7.*gamma=9.9"):
+        klive.attach_server(bad_gamma_srv)
+
+    # linear loop -> kernel server
+    llive = _make(ArraySource(X, Y, CHUNK), tmp_path / "l")
+    llive.run()
+    kernel_srv = BankServer(bank, kernel="rbf", gamma=0.7)
+    with pytest.raises(ValueError, match="kernel=None.*kernel='rbf'"):
+        llive.attach_server(kernel_srv)
+
+    # the factory path validates the server it just built, mid-run
+    mlive = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "m", bank_kind="kernel",
+        server_factory=lambda b: BankServer(b, kernel="rbf", gamma=9.9),
+    )
+    with pytest.raises(ValueError, match="gamma=0.7.*gamma=9.9"):
+        mlive.run()
+
+
+def test_swap_bank_rejects_mismatched_kernel_config(tmp_path):
+    """BankServer.swap_bank(kernel=, gamma=) validates the incoming bank's
+    declared train-time config against the server's, naming both."""
+    X, Y = _stream(4)
+    live = _make(ArraySource(X, Y, CHUNK), tmp_path / "c", bank_kind="kernel")
+    live.run()
+    bank = live.serving_bank()
+    srv = BankServer(bank, kernel="rbf", gamma=0.7)
+    srv.swap_bank(bank, kernel="rbf", gamma=0.7)  # matching: fine
+    with pytest.raises(ValueError, match="kernel='linear'.*kernel='rbf'"):
+        srv.swap_bank(bank, kernel="linear")
+    with pytest.raises(ValueError, match="gamma=0.9.*gamma=0.7"):
+        srv.swap_bank(bank, kernel="rbf", gamma=0.9)
+    assert srv.stats.bank_swaps == 1  # only the matching swap landed
+
+
 # ---------------------------------------------------------------------------
 # process-level crash: the trainer actually dies
 # ---------------------------------------------------------------------------
@@ -346,32 +546,51 @@ _SUBPROC = r"""
 import os, sys
 import numpy as np, jax.numpy as jnp
 from repro.checkpoint import ckpt
+from repro.core import kernel_bank_decision
 from repro.live import ArraySource, LiveBank
 from repro.runtime import InjectedFailure
 
-ckpt_dir, out_dir, mode = sys.argv[1], sys.argv[2], sys.argv[3]
+ckpt_dir, out_dir, mode, bank_kind = sys.argv[1:5]
 rng = np.random.default_rng(7)
 X = rng.normal(size=(8 * 16, 4)).astype(np.float32)
 y = np.sign(rng.normal(size=X.shape[0]) + X[:, 0]).astype(np.float32)
+y[y == 0] = 1.0
+kw = {}
+if bank_kind == "kernel":
+    kw = dict(kernel="rbf", gamma=0.7, coreset_size=5, block_n=16)
 live = LiveBank(
     ArraySource(X, y, 16), jnp.asarray([1.0, 4.0]), ckpt_dir=ckpt_dir,
     n_sub_banks=2, rotate_every=3, swap_every=2, sleep=lambda s: None,
+    bank_kind=bank_kind,
     failpoints=[("post_fold", 3)] if mode == "crash" else None,
+    **kw,
 )
 try:
     live.run()
 except InjectedFailure:
     os._exit(7)  # hard exit: no unwinding, no cleanup — a real dead process
-ckpt.save(out_dir, live.serving_bank(), meta={"stats": live.stats.durable()})
+bank = live.serving_bank()
+if bank_kind == "kernel":
+    scores = kernel_bank_decision(
+        bank, jnp.asarray(X[:16]), kernel="rbf", gamma=0.7
+    )
+else:
+    scores = jnp.asarray(X[:16]) @ bank.w.T
+ckpt.save(
+    out_dir, {"bank": bank, "scores": scores},
+    meta={"stats": live.stats.durable()},
+)
 print("DONE")
 """
 
 
 @pytest.mark.slow
-def test_process_crash_and_relaunch_bit_exact(tmp_path):
+@pytest.mark.parametrize("bank_kind", BANK_KINDS)
+def test_process_crash_and_relaunch_bit_exact(tmp_path, bank_kind):
     """The trainer PROCESS dies (os._exit mid-run, nothing flushed) and a
-    fresh process resumes from the on-disk checkpoint: final bank and
-    durable stats equal a process that never crashed."""
+    fresh process resumes from the on-disk checkpoint: final bank, served
+    scores and durable stats equal a process that never crashed — for the
+    linear AND the kernelized loop."""
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src")
@@ -379,9 +598,15 @@ def test_process_crash_and_relaunch_bit_exact(tmp_path):
 
     def launch(ckpt_dir, out_dir, mode):
         return subprocess.run(
-            [sys.executable, "-c", _SUBPROC, str(ckpt_dir), str(out_dir), mode],
+            [sys.executable, "-c", _SUBPROC,
+             str(ckpt_dir), str(out_dir), mode, bank_kind],
             env=env, capture_output=True, text=True, timeout=300,
         )
+
+    def out_leaves(out_dir):
+        manifest = ckpt.load_manifest(str(out_dir))
+        target = ckpt.zeros_like_manifest(manifest)
+        return [np.asarray(x) for x in ckpt.restore(str(out_dir), target)]
 
     crashed = launch(tmp_path / "ck", tmp_path / "out", "crash")
     assert crashed.returncode == 7, crashed.stderr[-4000:]
@@ -392,14 +617,313 @@ def test_process_crash_and_relaunch_bit_exact(tmp_path):
     clean = launch(tmp_path / "ck_clean", tmp_path / "out_clean", "clean")
     assert clean.returncode == 0, clean.stderr[-4000:]
 
-    target = Ball(
-        w=jnp.zeros((2, 4)), r=jnp.zeros((2,)), xi2=jnp.zeros((2,)),
-        m=jnp.zeros((2,), jnp.int32),
+    recovered = out_leaves(tmp_path / "out")
+    reference = out_leaves(tmp_path / "out_clean")
+    # bank leaves (7 for KernelBank, 4 for Ball) + served scores, bit-equal
+    assert len(recovered) == len(reference) == (
+        8 if bank_kind == "kernel" else 5
     )
-    recovered = ckpt.restore(str(tmp_path / "out"), target)
-    reference = ckpt.restore(str(tmp_path / "out_clean"), target)
-    assert _bank_eq(recovered, reference)
+    for got, want in zip(recovered, reference):
+        assert np.array_equal(got, want)
     assert (
         ckpt.load_meta(str(tmp_path / "out"))["stats"]
         == ckpt.load_meta(str(tmp_path / "out_clean"))["stats"]
     )
+
+
+# ---------------------------------------------------------------------------
+# the live fold helpers: property layer (linear + kernel twins)
+# ---------------------------------------------------------------------------
+
+
+def _rand_ball_banks(k, b, d, rng):
+    return [
+        Ball(
+            w=jnp.asarray(rng.normal(size=(b, d)).astype(np.float32)),
+            r=jnp.asarray(np.abs(rng.normal(size=b)).astype(np.float32)),
+            xi2=jnp.asarray(
+                (0.01 + np.abs(rng.normal(size=b))).astype(np.float32)
+            ),
+            m=jnp.ones((b,), jnp.int32),
+        )
+        for _ in range(k)
+    ]
+
+
+def _linear_kernel_banks(k, b, d, rng):
+    """K linear-consistent KernelBanks (B models, 2 live slots each, q ==
+    |sum_s coef[s] p[s]|^2) whose total live count fits one buffer — every
+    fold order is drop-free, so merge_balls algebra is the exact oracle
+    (the construction of tests/test_kernel_merge.py, bank-vectorized)."""
+    live_per = 2
+    s = live_per * k
+    banks = []
+    for i in range(k):
+        idx = np.full((b, s), -1, np.int32)
+        coef = np.zeros((b, s), np.float32)
+        pts = np.zeros((b, s, d), np.float32)
+        for bi in range(b):
+            sl = rng.choice(s, size=live_per, replace=False)
+            idx[bi, sl] = i * 1000 + rng.choice(
+                999, size=live_per, replace=False
+            )
+            coef[bi, sl] = rng.normal(size=live_per).astype(np.float32)
+            pts[bi, sl] = rng.normal(size=(live_per, d)).astype(np.float32)
+        w = np.einsum("bs,bsd->bd", coef, pts)
+        banks.append(KernelBank(
+            idx=jnp.asarray(idx),
+            coef=jnp.asarray(coef),
+            points=jnp.asarray(pts),
+            q=jnp.asarray(np.sum(w * w, axis=1).astype(np.float32)),
+            r=jnp.asarray(np.abs(rng.normal(size=b)).astype(np.float32)),
+            xi2=jnp.asarray(
+                (0.01 + np.abs(rng.normal(size=b))).astype(np.float32)
+            ),
+            m=jnp.asarray(rng.integers(1, 9, size=b).astype(np.int32)),
+        ))
+    return banks
+
+
+def _emerge(c1, r1, c2, r2):
+    """merge_balls in explicit coordinates (the numpy oracle)."""
+    dist = float(np.linalg.norm(c1 - c2))
+    if dist + r1 <= r2:
+        return c2.copy(), r2
+    if dist + r2 <= r1:
+        return c1.copy(), r1
+    rj = 0.5 * (r1 + r2 + dist)
+    t = np.clip((rj - r1) / max(dist, 1e-12), 0.0, 1.0)
+    return c1 + t * (c2 - c1), rj
+
+
+def _fold_props_case(kind, k, b, d, seed, atol=1e-4):
+    """Every fold order of the live fold helper must (a) agree with the
+    explicit orthogonal-slack embedding, (b) enclose every input ball,
+    (c) land any two birth orders' centers within min(r) of each other,
+    (d) keep radii within the provable 2x band — and be deterministic
+    (the same order twice is bit-identical). Per model lane."""
+    rng = np.random.default_rng(seed)
+    orders = [list(range(k)), list(range(k))[::-1],
+              [int(j) for j in np.roll(np.arange(k), 1)]]
+    if kind == "linear":
+        banks = _rand_ball_banks(k, b, d, rng)
+        fold = lambda bs: fold_banks(list(bs))
+
+        def lane(bank, bi):
+            return (np.asarray(bank.w[bi], np.float64),
+                    float(bank.r[bi]), float(bank.xi2[bi]))
+    else:
+        banks = _linear_kernel_banks(k, b, d, rng)
+        fold = lambda bs: fold_kernel_banks(list(bs), kernel="linear")
+
+        def lane(bank, bi):
+            w = np.einsum(
+                "s,sd->d", np.asarray(bank.coef[bi], np.float64),
+                np.asarray(bank.points[bi], np.float64),
+            )
+            return w, float(bank.r[bi]), float(bank.xi2[bi])
+
+    folds = {bi: [] for bi in range(b)}
+    for order in orders:
+        got = fold([banks[i] for i in order])
+        assert _bank_eq(got, fold([banks[i] for i in order]))  # determinism
+        for bi in range(b):
+            cs = np.zeros((k, d + k))
+            rs = np.zeros(k)
+            for j in range(k):
+                w, r, xi2 = lane(banks[j], bi)
+                cs[j, :d] = w
+                cs[j, d + j] = np.sqrt(xi2)
+                rs[j] = r
+            c_e, r_e = cs[order[0]].copy(), rs[order[0]]
+            for j in order[1:]:
+                c_e, r_e = _emerge(c_e, r_e, cs[j], rs[j])
+            scale = max(1.0, float(np.max(np.abs(cs))), float(np.max(rs)))
+            tol = atol * scale
+            gw, gr, gxi2 = lane(got, bi)
+            # (a) the implicit fold == the explicit embedding
+            np.testing.assert_allclose(gw, c_e[:d], rtol=1e-4, atol=tol)
+            np.testing.assert_allclose(gr, r_e, rtol=1e-4, atol=tol)
+            np.testing.assert_allclose(
+                gxi2, float(np.sum(c_e[d:] ** 2)), rtol=1e-3, atol=tol
+            )
+            # (b) enclosure of every input ball
+            for j in range(k):
+                gap = np.linalg.norm(c_e - cs[j]) + rs[j] - r_e
+                assert gap <= tol, (kind, order, bi, j, gap)
+            folds[bi].append((c_e, r_e))
+    # (c) + (d): cross-birth-order bounds
+    for bi in range(b):
+        fs = folds[bi]
+        for a in range(len(fs)):
+            for z in range(a + 1, len(fs)):
+                (ca, ra), (cz, rz) = fs[a], fs[z]
+                tol = atol * max(1.0, ra, rz)
+                assert np.linalg.norm(ca - cz) <= min(ra, rz) + tol
+                assert max(ra, rz) <= 2.0 * min(ra, rz) + tol
+
+
+def _dead_slot_case(kind, seed):
+    """live-mask dead-slot exactness: folding with zeroed dead slots and a
+    live mask is BIT-identical to folding only the live banks."""
+    rng = np.random.default_rng(seed)
+    k, b, d = 4, 2, 5
+    make = _rand_ball_banks if kind == "linear" else _linear_kernel_banks
+    banks = make(k, b, d, rng)
+    zero = jax.tree.map(jnp.zeros_like, banks[0])
+    padded = [banks[0], zero, banks[1], zero, banks[2], banks[3]]
+    live = np.asarray([1, 0, 1, 0, 1, 1], bool)
+    if kind == "linear":
+        want = fold_banks(banks)
+        assert _bank_eq(fold_banks(padded, live=live), want)
+        # fold_merge twin on the stacked (checkpoint) layout
+        got = fold_merge(stack_banks(padded), live=jnp.asarray(live))
+        assert _bank_eq(got, want)
+    else:
+        want = fold_kernel_banks(banks, kernel="linear")
+        got = fold_kernel_banks(padded, kernel="linear", live=live)
+        assert _bank_eq(got, want)
+        # the stacked-KernelBank input form (the checkpoint layout)
+        stacked = stack_kernel_banks(padded)
+        assert stacked.coef.shape == (6, b, 2 * k)
+        got2 = fold_kernel_banks(stacked, kernel="linear", live=live)
+        assert _bank_eq(got2, want)
+        with pytest.raises(ValueError, match="LIVE"):
+            fold_kernel_banks(
+                padded, kernel="linear", live=np.zeros(6, bool)
+            )
+
+
+@pytest.mark.parametrize("kind", BANK_KINDS)
+def test_live_fold_properties_deterministic(kind):
+    """Fixed-seed twin of the hypothesis layer — coverage must not depend
+    on the optional dependency (repo convention)."""
+    _fold_props_case(kind, k=4, b=2, d=5, seed=11)
+    _dead_slot_case(kind, seed=12)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        kind=st.sampled_from(BANK_KINDS),
+        k=st.integers(2, 5),
+        b=st.integers(1, 3),
+        d=st.integers(1, 6),
+        seed=st.integers(0, 10_000),
+    )
+    def test_live_fold_properties_hypothesis(kind, k, b, d, seed):
+        _fold_props_case(kind, k, b, d, seed)
+
+    @settings(max_examples=15, deadline=None)
+    @given(kind=st.sampled_from(BANK_KINDS), seed=st.integers(0, 10_000))
+    def test_live_fold_dead_slot_exactness_hypothesis(kind, seed):
+        _dead_slot_case(kind, seed)
+
+
+# ---------------------------------------------------------------------------
+# kernel-merge re-compression loss audit (live side)
+# ---------------------------------------------------------------------------
+
+
+def test_live_merge_dropped_mass_audit(tmp_path):
+    """LiveStats.merge_dropped_mass — exactly 0.0 for linear loops and for
+    kernel loops whose live slots always fit S; strictly positive once the
+    S=6 buffer forces real drops. (Durability across crashes is covered by
+    the crash matrix: merge_dropped_mass is part of durable().)"""
+    X, Y = _stream()
+    lin = _make(ArraySource(X, Y, CHUNK), tmp_path / "l").run()
+    assert lin.merge_dropped_mass == 0.0
+    lossy = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "k", bank_kind="kernel"
+    ).run()
+    assert lossy.merge_dropped_mass > 0.0
+    roomy = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "e", bank_kind="kernel",
+        coreset_size=N_CHUNKS * CHUNK + 8,
+    ).run()
+    assert roomy.merge_dropped_mass == 0.0
+
+
+# ---------------------------------------------------------------------------
+# the new kernel-config guards survive `python -O` (no bare asserts)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_kernel_config_guards_survive_python_O():
+    """Mixing linear/kernel banks, folding with an all-dead mask, swapping
+    a mismatched kernel config, and attaching a mismatched server must all
+    be ValueErrors naming both sides — `python -O` cannot strip them."""
+    script = r"""
+import numpy as np, jax.numpy as jnp
+from repro.core import (
+    KernelBank, fold_kernel_banks, merge_banks, merge_kernel_banks,
+    stack_banks, stack_kernel_banks,
+)
+from repro.core.meb import Ball
+from repro.live import LiveBank
+from repro.serve.bank_server import BankServer
+
+ball = Ball(w=jnp.zeros((2, 3)), r=jnp.zeros(2), xi2=jnp.zeros(2),
+            m=jnp.ones(2, jnp.int32))
+kb = KernelBank(idx=jnp.zeros((2, 4), jnp.int32), coef=jnp.zeros((2, 4)),
+                points=jnp.zeros((2, 4, 3)), q=jnp.zeros(2), r=jnp.zeros(2),
+                xi2=jnp.zeros(2), m=jnp.ones(2, jnp.int32))
+
+try:  # 1) linear ball into the kernel merge
+    merge_kernel_banks(ball, kb, kernel="rbf")
+except ValueError as e:
+    assert "Ball" in str(e) and "KernelBank" in str(e), e
+    print("MIX1_OK")
+try:  # 2) kernel bank into the linear merge
+    merge_banks(kb, kb)
+except ValueError as e:
+    assert "KernelBank" in str(e), e
+    print("MIX2_OK")
+try:  # 3) kernel bank into the linear stack
+    stack_banks([kb])
+except ValueError as e:
+    assert "KernelBank" in str(e), e
+    print("MIX3_OK")
+try:  # 4) linear ball into the kernel stack
+    stack_kernel_banks([ball])
+except ValueError as e:
+    assert "Ball" in str(e), e
+    print("MIX4_OK")
+try:  # 5) all-dead live mask has nothing to fold
+    fold_kernel_banks([kb, kb], kernel="rbf", live=np.zeros(2, bool))
+except ValueError as e:
+    assert "LIVE" in str(e), e
+    print("LIVE_OK")
+
+srv = BankServer(kb, kernel="rbf", gamma=0.5)
+try:  # 6) hot-swap declaring a drifted gamma
+    srv.swap_bank(kb, kernel="rbf", gamma=0.9)
+except ValueError as e:
+    assert "gamma=0.9" in str(e) and "gamma=0.5" in str(e), e
+    print("SWAP_OK")
+
+live = LiveBank(lambda i: None, jnp.ones(2), ckpt_dir="unused",
+                bank_kind="kernel", kernel="rbf", gamma=0.7,
+                sleep=lambda s: None)
+try:  # 7) attaching a server with a mismatched kernel config
+    live.attach_server(srv)
+except ValueError as e:
+    assert "gamma=0.7" in str(e) and "gamma=0.5" in str(e), e
+    print("ATTACH_OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    out = subprocess.run(
+        [sys.executable, "-O", "-c", script],
+        env=env, capture_output=True, text=True, timeout=300,
+    )
+    assert out.returncode == 0, (
+        f"stdout:{out.stdout[-2000:]}\nstderr:{out.stderr[-4000:]}"
+    )
+    for token in ("MIX1_OK", "MIX2_OK", "MIX3_OK", "MIX4_OK", "LIVE_OK",
+                  "SWAP_OK", "ATTACH_OK"):
+        assert token in out.stdout, out.stdout
