@@ -67,7 +67,7 @@ from repro.kernels.ops import (
 )
 from repro.serve import BankServer
 
-SCHEMA = "streamsvm-bench-serving/v4"
+SCHEMA = "streamsvm-bench-serving/v5"
 DEFAULT_HBM_PEAK_GBPS = 819.0  # TPU v5e, per chip — same as BENCH_engine
 _DTYPE_BYTES = {"f32": 4, "bf16": 2}
 
@@ -95,12 +95,19 @@ RESULT_KEYS = (
 # Keys for path="live" rows — the train->serve loop has its own surface
 # (ingest rate + swap latency + crash-recovery time, not kernel bytes).
 # bank_kind distinguishes linear Ball loops from kernelized core-set loops
-# (schema v4) — CI's bench-smoke asserts one row of each.
+# (schema v4). Schema v5 adds the ELASTIC fields: ``n_stream_shards`` (the
+# logical shard count each chunk trains across), ``rows_per_s_per_shard``
+# (per-shard ingest rate — the weak-scaling denominator), and
+# ``remesh_recovery_seconds`` — wall time from relaunching a killed sharded
+# trainer on a SMALLER mesh (devices lost for good) to the first fresh bank
+# swap; null for unsharded rows. CI's chaos-smoke asserts a sharded live
+# row carries all three.
 LIVE_RESULT_KEYS = (
     "name", "path", "bank_kind", "B", "D", "chunk_rows", "n_chunks",
-    "n_sub_banks", "rotate_every", "swap_every", "seconds_per_chunk",
-    "rows_per_s", "swaps", "checkpoints", "swap_latency_s",
-    "recovery_seconds",
+    "n_sub_banks", "rotate_every", "swap_every", "n_stream_shards",
+    "seconds_per_chunk", "rows_per_s", "rows_per_s_per_shard", "swaps",
+    "checkpoints", "swap_latency_s", "recovery_seconds",
+    "remesh_recovery_seconds",
 )
 
 
@@ -315,6 +322,18 @@ def bench_live(cfg, reps, interpret):
 
     B, D = cfg["B"], cfg["D"]
     bank_kind = cfg.get("bank_kind", "linear")
+    n_shards = int(cfg.get("n_stream_shards", 1))
+    mesh = None
+    if n_shards > 1:
+        if len(jax.devices()) < n_shards:
+            print(
+                f'SKIP {cfg["name"]}: needs {n_shards} devices for the '
+                f"sharded live row, have {len(jax.devices())} (run under "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{n_shards} with --filter sharded --append)"
+            )
+            return None
+        mesh = jax.make_mesh((n_shards,), ("data",))
     chunk, n_chunks = cfg["chunk_rows"], cfg["n_chunks"]
     n_rows = chunk * n_chunks
     rng = np.random.default_rng(0)
@@ -332,11 +351,13 @@ def bench_live(cfg, reps, interpret):
         else {}
     )
 
-    def make(td, srv, failpoints=None):
+    def make(td, srv, failpoints=None, run_mesh=None):
         return LiveBank(
             ArraySource(X, Y, chunk), cs, ckpt_dir=os.path.join(td, "ck"),
             bank_kind=bank_kind, n_sub_banks=cfg["n_sub_banks"],
             rotate_every=cfg["rotate_every"], swap_every=cfg["swap_every"],
+            mesh=run_mesh if run_mesh is not None else mesh,
+            n_stream_shards=n_shards,
             server=srv, failpoints=failpoints, sleep=lambda s: None,
             interpret=interpret, **kernel_kw,
         )
@@ -381,6 +402,28 @@ def bench_live(cfg, reps, interpret):
         live.run()
         recovery = srv.times[swaps_before] - t0
 
+    # Remesh recovery (sharded rows only): the kill takes its devices with
+    # it — the relaunch restores the checkpoint onto a HALF-SIZE mesh
+    # (same logical shards, re-placed slots, degraded per-range training)
+    # and the clock runs until the surviving server gets a fresh bank.
+    remesh_recovery = None
+    if n_shards > 1:
+        small = jax.make_mesh((max(1, n_shards // 2),), ("data",))
+        fps = {("post_train", crash_at)}  # shared: the kill fires ONCE
+        with tempfile.TemporaryDirectory() as td:
+            srv = _TimingServer()
+            live = make(td, srv, failpoints=fps)
+            try:
+                live.run()
+            except InjectedFailure:
+                pass
+            swaps_before = len(srv.times)
+            t0 = time.perf_counter()
+            relaunched = make(td, srv, failpoints=fps, run_mesh=small)
+            relaunched.run()
+            remesh_recovery = srv.times[swaps_before] - t0
+            assert relaunched.stats.remeshes >= 1
+
     return {
         "name": cfg["name"],
         "path": "live",
@@ -392,12 +435,15 @@ def bench_live(cfg, reps, interpret):
         "n_sub_banks": cfg["n_sub_banks"],
         "rotate_every": cfg["rotate_every"],
         "swap_every": cfg["swap_every"],
+        "n_stream_shards": n_shards,
         "seconds_per_chunk": total / n_chunks,
         "rows_per_s": n_rows / total,
+        "rows_per_s_per_shard": n_rows / total / n_shards,
         "swaps": stats.swaps,
         "checkpoints": stats.checkpoints,
         "swap_latency_s": swap_latency,
         "recovery_seconds": recovery,
+        "remesh_recovery_seconds": remesh_recovery,
     }
 
 
@@ -452,6 +498,13 @@ def sweep(smoke: bool):
             dict(name="smoke_live_kernel", path="live", bank_kind="kernel",
                  B=8, D=16, chunk_rows=64, n_chunks=6, n_sub_banks=2,
                  rotate_every=3, swap_every=2, coreset_size=16),
+            # the ELASTIC live loop: 8 logical shards on an 8-device mesh,
+            # measured only in the forced-device second pass
+            # (--filter sharded --append); CI's chaos-smoke asserts this
+            # row's per-shard rate and remesh-recovery fields
+            dict(name="smoke_live_sharded", path="live", B=16, D=32,
+                 chunk_rows=128, n_chunks=8, n_sub_banks=2, rotate_every=3,
+                 swap_every=2, n_stream_shards=8),
         ]
     base = dict(D=128, q_block=256)
     return [
@@ -512,6 +565,13 @@ def sweep(smoke: bool):
         dict(name="live_kernel_b16_d64_s64", path="live", bank_kind="kernel",
              B=16, D=64, chunk_rows=512, n_chunks=12, n_sub_banks=4,
              rotate_every=4, swap_every=2, coreset_size=64),
+        # the elastic sharded live loop: 8 logical shards on an 8-device
+        # mesh, plus the remesh-recovery clock (kill, relaunch on 4
+        # devices) — skipped loudly without devices, measured in the
+        # --filter sharded --append pass
+        dict(name="live_sharded_b64_d128", path="live", B=64, D=128,
+             chunk_rows=2048, n_chunks=16, n_sub_banks=4, rotate_every=4,
+             swap_every=2, n_stream_shards=8),
     ]
 
 
@@ -524,7 +584,9 @@ def run(smoke: bool, reps: int, interpret, name_filter: str | None = None,
         if name_filter is not None and name_filter not in cfg["name"]:
             continue
         if cfg.get("path") == "live":
-            results.append(bench_live(cfg, reps, interpret))
+            row = bench_live(cfg, reps, interpret)
+            if row is not None:  # sharded rows skip loudly sans devices
+                results.append(row)
             continue
         row = bench_one(cfg, reps, interpret, peak)
         base = baselines.get(cfg.get("overlap_baseline"))
@@ -597,6 +659,31 @@ def validate(report: dict):
             if row["bank_kind"] not in ("linear", "kernel"):
                 raise ValueError(
                     f"{row['name']}: unknown bank_kind {row['bank_kind']!r}"
+                )
+            shards = row["n_stream_shards"]
+            if not (isinstance(shards, int) and shards >= 1):
+                raise ValueError(
+                    f"{row['name']}: n_stream_shards must be an int >= 1, "
+                    f"got {shards!r}"
+                )
+            pps = row["rows_per_s_per_shard"]
+            if not (pps > 0 and abs(pps * shards - row["rows_per_s"])
+                    <= 1e-6 * row["rows_per_s"]):
+                raise ValueError(
+                    f"{row['name']}: rows_per_s_per_shard ({pps!r}) must "
+                    "be rows_per_s / n_stream_shards"
+                )
+            rr = row["remesh_recovery_seconds"]
+            if shards > 1:
+                if not (rr is not None and rr > 0):
+                    raise ValueError(
+                        f"{row['name']}: sharded live rows must clock a "
+                        f"positive remesh_recovery_seconds, got {rr!r}"
+                    )
+            elif rr is not None:
+                raise ValueError(
+                    f"{row['name']}: remesh_recovery_seconds={rr!r} on an "
+                    "unsharded row (must be null)"
                 )
             continue
         missing = [k for k in RESULT_KEYS if k not in row]

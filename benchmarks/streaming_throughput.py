@@ -66,7 +66,7 @@ import numpy as np
 from repro.kernels import streamsvm_fit_many
 from repro.kernels.ops import bank_tiling, engine_vmem_bytes
 
-SCHEMA = "streamsvm-bench-engine/v3"
+SCHEMA = "streamsvm-bench-engine/v4"
 DEFAULT_HBM_PEAK_GBPS = 819.0  # TPU v5e, per chip
 _DTYPE_BYTES = {"f32": 4, "bf16": 2}
 
@@ -86,7 +86,8 @@ RESULT_KEYS = (
     "name", "B", "D", "N", "block_n", "b_tile", "n_bank_tiles", "n_shards",
     "stream_dtype", "variant", "lookahead", "bank_resident", "kernel",
     "coreset_size", "eviction", "vmem_working_set_bytes", "seconds_per_pass",
-    "rows_per_s", "model_rows_per_s", "bytes", "stream_passes",
+    "rows_per_s", "rows_per_s_per_shard", "model_rows_per_s", "bytes",
+    "stream_passes",
     "naive_stream_bytes", "achieved_gbps", "hbm_peak_gbps",
     "roofline_seconds", "roofline_frac", "dma_overlap_efficiency",
 )
@@ -215,6 +216,9 @@ def bench_one(cfg, reps, interpret, peak_gbps):
             "vmem_working_set_bytes": working_set,
             "seconds_per_pass": sec,
             "rows_per_s": N / sec,
+            # v4: per-device ingest rate — the elastic live loop's scaling
+            # denominator (kernelized fits here are single-device)
+            "rows_per_s_per_shard": N / sec / n_shards,
             "model_rows_per_s": B * N / sec,
             "bytes": {**by, "total": total},
             "stream_passes": 1.0,
@@ -291,6 +295,9 @@ def bench_one(cfg, reps, interpret, peak_gbps):
         "vmem_working_set_bytes": working_set,
         "seconds_per_pass": sec,
         "rows_per_s": N / sec,
+        # v4: ingest rate per mesh device — flat rows_per_s across shard
+        # counts means linear weak scaling of the sharded engine
+        "rows_per_s_per_shard": N / sec / n_shards,
         "model_rows_per_s": B * N / sec,  # conditional updates applied / s
         "bytes": {**by, "total": total},
         "stream_passes": 1.0,  # data-major grid: NOT B/b_tile
@@ -490,6 +497,13 @@ def validate(report: dict):
             raise ValueError(
                 f"{row['name']}: n_shards must be an int >= 1, got "
                 f"{row['n_shards']!r}"
+            )
+        pps = row["rows_per_s_per_shard"]
+        if not (pps > 0 and abs(pps * row["n_shards"] - row["rows_per_s"])
+                <= 1e-6 * row["rows_per_s"]):
+            raise ValueError(
+                f"{row['name']}: rows_per_s_per_shard ({pps!r}) must be "
+                f"rows_per_s / n_shards"
             )
         if row["bank_resident"] not in ("vmem", "hbm"):
             raise ValueError(

@@ -18,6 +18,16 @@ keeps serving the last good bank while the trainer is down (its staleness
 visible as ``LiveStats.bank_age_chunks``), and the final bank + served
 scores come out BIT-IDENTICAL (f32) to the uninterrupted run — asserted.
 
+Next, elastic sharded training: the same drifting stream trains with FOUR
+logical stream shards (``n_stream_shards=4``) — fanned out across a 4-device
+mesh when the host exposes one, per-range on a single device otherwise.
+The fold structure is fixed by the LOGICAL shard count (durable in every
+checkpoint), not by the physical mesh, so a mid-run crash followed by a
+relaunch on a SMALLER mesh (remesh-on-restart, the 8 -> 4 -> 1 elastic
+story) resumes bit-exactly: the relaunch omits ``n_stream_shards`` and
+adopts the checkpoint's, and the final bank + served scores equal the
+crash-free single-device run — asserted.
+
 The closing segment runs the KERNELIZED live loop (``bank_kind="kernel"``)
 on drifting concentric rings — a stream no linear Ball bank can separate:
 chunks train through the core-set engine, sub-banks retire through the
@@ -28,6 +38,7 @@ bit-exactly on the core-set buffers and the served RBF scores.
 """
 import tempfile
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -38,6 +49,7 @@ from repro.live import (
     LiveBank,
     run_live_with_restarts,
 )
+from repro.runtime.fault_tolerance import InjectedFailure
 from repro.serve import BankServer
 
 
@@ -180,6 +192,63 @@ def main():
     acc = float(np.mean(np.asarray(cls)[:, g] == labels[-256:]))
     print(f"served held-out acc on the freshest chunk: {100 * acc:.1f}% "
           f"(K=3 rotating sub-banks, retire='merge')")
+
+    # --- elastic sharded training: mesh fan-out + remesh-on-restart -------
+    # Four LOGICAL stream shards fix the fold structure; the physical mesh
+    # (when the host exposes >= 4 devices — e.g. under
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8) only decides
+    # where the range fits execute, so every substrate below produces the
+    # SAME bank bit-exactly.
+    n_dev = len(jax.devices())
+    mesh4 = jax.make_mesh((4,), ("data",)) if n_dev >= 4 else None
+    mesh2 = jax.make_mesh((2,), ("data",)) if n_dev >= 2 else None
+
+    # crash-free referent: 4 logical shards, NO mesh (pure per-range path)
+    with tempfile.TemporaryDirectory() as td:
+        live_s = make_live(ArraySource(X, Yn, CHUNK), td + "/cs",
+                           n_stream_shards=4, sleep=lambda s: None)
+        live_s.run()
+        sbank = live_s.serving_bank()
+        scls, _ = live_s.server.score(queries)
+
+    # the elastic run: launch on the 4-device mesh, crash once mid-stream,
+    # relaunch on a 2-device mesh. The relaunch OMITS n_stream_shards and
+    # adopts the checkpoint's logical shard count — that is what keeps the
+    # remesh invisible. The failpoint set is shared so the kill fires once.
+    fps = {("post_train", 7)}
+    with tempfile.TemporaryDirectory() as td:
+        live_e = make_live(ArraySource(X, Yn, CHUNK), td + "/ce",
+                           n_stream_shards=4, mesh=mesh4, failpoints=fps,
+                           sleep=lambda s: None)
+        try:
+            live_e.run()
+            raise AssertionError("the injected crash never fired")
+        except InjectedFailure:
+            pass
+        restarts = live_e.stats.restarts + 1
+        live_e = make_live(ArraySource(X, Yn, CHUNK), td + "/ce",
+                           mesh=mesh2, failpoints=fps, sleep=lambda s: None)
+        live_e.stats.restarts = restarts
+        estats = live_e.run()
+        ebank = live_e.serving_bank()
+        ecls, _ = live_e.server.score(queries)
+
+    assert live_e.n_stream_shards == 4, "checkpoint shard count not adopted"
+    assert all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(sbank, ebank)
+    ), "elastic remesh changed the bank"
+    assert np.array_equal(np.asarray(scls), np.asarray(ecls))
+    remeshed = mesh4 is not None or mesh2 is not None
+    assert estats.remeshes >= (1 if remeshed else 0)
+    print(
+        f"elastic sharded run: 4 logical shards on "
+        f"{'a 4-device mesh' if mesh4 is not None else 'one device'} -> "
+        f"crash at chunk 7 -> resume on "
+        f"{'a 2-device mesh' if mesh2 is not None else 'one device'} "
+        f"({estats.remeshes} remesh(es), {estats.restarts} restart); bank + "
+        "served scores BIT-IDENTICAL to the single-device referent"
+    )
 
     # --- the kernelized live loop: drifting RINGS (nonlinear) -------------
     Xr, Yr = drifting_rings()

@@ -175,3 +175,17 @@ def restore(path: str, target_tree, *, shardings=None):
         x = x.astype(ref.dtype) if hasattr(ref, "dtype") and x.dtype != ref.dtype else x
         new_leaves.append(x)
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def replicated_shardings(target_tree, mesh):
+    """A ``shardings`` pytree fully REPLICATING every leaf of ``target_tree``
+    on ``mesh`` — the elastic-remesh restore target for state that must live
+    whole on every device (e.g. the live loop's sub-banks, which any shard
+    may merge against). A checkpoint written under an 8-device mesh restores
+    replicated onto 4 devices, 1 device, or a fresh mesh of any shape —
+    placement is a property of the restore call, never of the file.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    sharding = NamedSharding(mesh, PartitionSpec())
+    return jax.tree_util.tree_map(lambda _: sharding, target_tree)

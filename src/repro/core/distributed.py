@@ -62,6 +62,29 @@ def _n_shards(mesh: Mesh, axes: Tuple[str, ...]) -> int:
     return n
 
 
+def shard_ranges(n: int, n_shards: int) -> list[Tuple[int, int]]:
+    """The canonical ceil-split of ``n`` stream rows into ``n_shards``
+    contiguous ``[lo, hi)`` ranges — exactly the ranges ``fit_bank_sharded``
+    and ``fit_kernel_bank_sharded`` assign to mesh shards (rows-per-shard
+    ``ceil(n / n_shards)``, remainder padded with inert rows on the last
+    live shard, trailing shards empty).
+
+    Always returns ``n_shards`` entries; shards past the data get empty
+    ``(n, n)`` ranges. The elastic live loop keys its LOGICAL fold structure
+    on these ranges, so per-range single-device fits fold bit-identically to
+    the mesh fast path regardless of the physical device count.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1: got {n_shards}")
+    if n < 0:
+        raise ValueError(f"n must be >= 0: got {n}")
+    shard_n = -(-n // n_shards) if n else 0
+    return [
+        (min(j * shard_n, n), min((j + 1) * shard_n, n))
+        for j in range(n_shards)
+    ]
+
+
 def fit_sharded(
     X: jax.Array,
     y: jax.Array,
@@ -304,6 +327,116 @@ def fit_kernel_bank_sharded(
     return _sharded_kernel_fold(
         X, Y, cs, gamma,
         mesh=mesh, axes=axes, n_shards=n_shards, shard_n=shard_n, n_rows=n,
+        kernel=kernel, coreset_size=coreset_size, eviction=eviction,
+        variant=variant, block_n=block_n, s_tile=s_tile,
+        stream_dtype=stream_dtype, interpret=interpret,
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "mesh", "axes", "n_shards", "shard_n", "kernel", "coreset_size",
+        "eviction", "variant", "block_n", "s_tile", "stream_dtype",
+        "interpret",
+    ),
+)
+def _sharded_kernel_shards(
+    X, Y, cs, gamma, *,
+    mesh, axes, n_shards, shard_n, kernel, coreset_size, eviction,
+    variant, block_n, s_tile, stream_dtype, interpret,
+):
+    """jit'd shard_map core of fit_kernel_bank_shards: per-shard fits +
+    all_gather, NO in-jit fold. Module-level for the jit-cache reason of
+    ``_sharded_kernel_fold``."""
+
+    def local_fit(Xs, Ys, cs_, gamma_):
+        bank = _fit_kernel_bank(
+            Xs, Ys, cs_, gamma_,
+            kernel=kernel, coreset_size=coreset_size, eviction=eviction,
+            variant=variant, block_n=block_n, s_tile=s_tile,
+            stream_dtype=stream_dtype, interpret=interpret,
+        )
+        sid = jnp.zeros((), jnp.int32)
+        for a in axes:
+            sid = sid * mesh.shape[a] + jax.lax.axis_index(a)
+        bank = bank._replace(
+            idx=jnp.where(bank.idx >= 0, bank.idx + sid * shard_n, bank.idx)
+        )
+        gather = lambda v: jax.lax.all_gather(v, axes, tiled=False)
+        return KernelBank(*(gather(leaf) for leaf in bank))
+
+    fn = _shard_map(
+        local_fit,
+        mesh=mesh,
+        in_specs=(P(axes), P(None, axes), P(), P()),
+        out_specs=jax.tree.map(lambda _: P(), KernelBank(*range(7))),
+        **{_CHECK_REP_KW: False},
+    )
+    return fn(X, Y, cs, gamma)
+
+
+def fit_kernel_bank_shards(
+    X: jax.Array,
+    Y: jax.Array,
+    cs,
+    mesh: Mesh,
+    *,
+    axis: str | Tuple[str, ...] = "data",
+    kernel: str = "rbf",
+    gamma=1.0,
+    coreset_size: int = 64,
+    eviction: str = "smallest-coef",
+    variant: str = "exact",
+    block_n: int = 256,
+    s_tile: int | None = None,
+    stream_dtype=None,
+    interpret: bool | None = None,
+) -> KernelBank:
+    """Per-shard kernelized fits on the mesh WITHOUT the in-jit fold.
+
+    Returns the STACKED per-shard banks — every KernelBank leaf grows a
+    leading ``(n_shards,)`` axis, replicated on every device — with ``idx``
+    already rewritten to global stream coordinates. The caller folds them
+    however it likes (``meb.merge_kernel_banks`` / ``fold_kernel_banks``),
+    typically skipping shards whose range is empty (see ``shard_ranges``).
+
+    Why this exists next to ``fit_kernel_bank_sharded``: the in-jit fold
+    fuses the merge interpolation arithmetic differently from the eager
+    ``merge_kernel_banks`` chain (last-ulp q/xi2 differences), while the
+    per-shard FITS are bit-identical to single-device fits of the same
+    ranges. The elastic live loop needs its mesh fast path and its
+    per-range degraded path to agree bit-exactly (f32), so it takes the
+    stacked banks from here and folds them with the SAME eager merge code
+    both paths share. Ragged N pads with inert sign-0 rows exactly like
+    ``fit_kernel_bank_sharded``; fully-padded shards come back as exact
+    m == 0 identity banks.
+    """
+    axes = _mesh_axes(axis)
+    n_shards = _n_shards(mesh, axes)
+    n, d = X.shape
+    b = Y.shape[0]
+    if Y.shape != (b, n):
+        raise ValueError(
+            f"Y must be (B, N) sign rows matching X: got Y.shape={Y.shape}, "
+            f"X.shape={X.shape}"
+        )
+    if n < 1:
+        raise ValueError(f"need at least one stream row: got X.shape={X.shape}")
+    cs = jnp.broadcast_to(jnp.asarray(cs, jnp.float32), (b,))
+    gamma = jnp.asarray(gamma, jnp.float32)
+
+    shard_n = -(-n // n_shards)  # rows per shard, ceil (== shard_ranges)
+    pad = shard_n * n_shards - n
+    if pad:
+        X = jnp.pad(X, ((0, pad), (0, 0)))
+        Y = jnp.pad(Y, ((0, 0), (0, pad)))
+    if not isinstance(X, jax.core.Tracer):  # eager call: place shards up front
+        X = jax.device_put(X, NamedSharding(mesh, P(axes)))
+        Y = jax.device_put(Y, NamedSharding(mesh, P(None, axes)))
+    return _sharded_kernel_shards(
+        X, Y, cs, gamma,
+        mesh=mesh, axes=axes, n_shards=n_shards, shard_n=shard_n,
         kernel=kernel, coreset_size=coreset_size, eviction=eviction,
         variant=variant, block_n=block_n, s_tile=s_tile,
         stream_dtype=stream_dtype, interpret=interpret,

@@ -351,6 +351,37 @@ def fold_kernel_banks(banks, *, kernel: str, gamma=1.0,
     return acc
 
 
+def nonfinite_rows(bank) -> jax.Array:
+    """(B,) bool: model rows whose FLOAT state contains NaN/Inf.
+
+    Works on any (B, ...)-leading bank pytree — a linear ``Ball`` (w, r,
+    xi2 checked; integer m skipped) or a ``KernelBank`` (coef, points, q,
+    r, xi2 checked; integer idx/m skipped). This is the live loop's
+    publish guard: a fold with any poisoned row must never be hot-swapped
+    into a server, because a single NaN coordinate turns every score of
+    that model row into NaN.
+    """
+    leaves = [
+        jnp.asarray(leaf)
+        for leaf in jax.tree.leaves(bank)
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating)
+    ]
+    if not leaves:
+        raise ValueError(
+            f"nonfinite_rows needs at least one float leaf: got {bank!r}"
+        )
+    b = leaves[0].shape[0]
+    bad = jnp.zeros((b,), bool)
+    for leaf in leaves:
+        if leaf.shape[:1] != (b,):
+            raise ValueError(
+                "nonfinite_rows needs every float leaf stacked on the same "
+                f"leading B axis: got shapes {[l.shape for l in leaves]}"
+            )
+        bad = bad | jnp.any(~jnp.isfinite(leaf.reshape(b, -1)), axis=1)
+    return bad
+
+
 def merge_banks(b1: Ball, b2: Ball) -> Ball:
     """Sec-4.3 merge vmapped over a leading bank axis: B models at once.
 

@@ -3,18 +3,26 @@
 ``LiveBank`` closes the trainer/server loop into an always-on system — for
 linear Ball banks AND kernelized core-set banks (``bank_kind="kernel"``):
 see loop.py for the K-sub-bank drift-repair contract, the kernel-space
-train->merge->fold path, and the crash-recovery protocol; sources.py for
-the replayable-chunk-source contract.
+train->merge->fold path, the crash-recovery protocol, and the elastic
+sharded-training contract (``mesh=`` / ``n_stream_shards=``); sources.py
+for the replayable-chunk-source and per-shard fault-plan contracts;
+chaos.py for the seeded kill/fault/remesh harness that proves crashes and
+remeshes are invisible.
 """
+from .chaos import ChaosSchedule, chaos_reference, chaos_schedule, run_chaos
 from .loop import PHASES, LiveBank, LiveStats, run_live_with_restarts
-from .sources import ArraySource, FlakySource, TransientSourceError
+from .sources import ArraySource, FlakySource, ShardFaults, TransientSourceError
 
 __all__ = [
     "ArraySource",
+    "ChaosSchedule",
     "FlakySource",
     "LiveBank",
     "LiveStats",
     "PHASES",
+    "ShardFaults",
     "TransientSourceError",
-    "run_live_with_restarts",
+    "chaos_reference",
+    "chaos_schedule",
+    "run_chaos",
 ]

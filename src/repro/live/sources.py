@@ -20,10 +20,15 @@ quarantined in another — that is a property of the source, not of the loop.
 ``FlakySource``    wraps a source with a deterministic failure plan —
                    transient faults (fail n times, then deliver) and poison
                    chunks (fail forever) for retry/quarantine testing.
+``ShardFaults``    the per-(chunk, shard) fault plan of the ELASTIC live
+                   loop: device-loss and straggler events (structural —
+                   the shard's range is re-issued to survivors) plus
+                   per-shard fetch faults (transient or poison — masked
+                   out past the shard retry budget).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -96,3 +101,90 @@ class FlakySource:
                 f"transient fault on chunk {i} (attempt {seen + 1}/{plan})"
             )
         return self.inner(i)
+
+
+class ShardFaults:
+    """Deterministic per-(chunk, shard) fault plan for the elastic live loop.
+
+    The elastic loop splits every chunk into ``n_stream_shards`` LOGICAL
+    ranges (``core.shard_ranges``); this object scripts what goes wrong per
+    (chunk index, logical shard) — the shard-level analogue of
+    ``FlakySource``:
+
+    ``lost``   chunk -> shard ids whose DEVICE is lost for that chunk.
+               Structural: queried (never raised), fires in every run and
+               on every crash replay, so the re-issued range layout —
+               ``runtime.rebalance_ranges`` splits the lost range among
+               survivors — is identical in a chaos run and its crash-free
+               reference.
+    ``flaky``  (chunk, shard) -> consecutive per-shard fetch failures
+               before the range delivers; ``POISON`` (any negative) fails
+               forever — past the loop's shard retry budget the shard's
+               assigned ranges are MASKED OUT (rows recorded in
+               ``LiveStats.rows_lost``). Attempts are counted across this
+               instance's lifetime, so share ONE instance across the
+               relaunches of a crashy run (the replay-stability caveat of
+               the module docstring applies per shard: keep transient
+               counts within the retry budget, or use POISON).
+    ``slow``   chunk -> simulated per-shard elapsed seconds, handed to the
+               loop's ``StragglerPolicy``; declared stragglers are
+               re-issued exactly like ``lost`` shards. Structural and
+               stateless, hence replay-stable.
+    """
+
+    POISON = -1
+
+    def __init__(
+        self,
+        *,
+        lost: Optional[Dict[int, Iterable[int]]] = None,
+        flaky: Optional[Dict[Tuple[int, int], int]] = None,
+        slow: Optional[Dict[int, Sequence[float]]] = None,
+        exc: Callable[[str], BaseException] = TransientSourceError,
+    ):
+        self._lost = {
+            int(c): frozenset(int(j) for j in js)
+            for c, js in (lost or {}).items()
+        }
+        self._flaky = {
+            (int(c), int(j)): int(n) for (c, j), n in (flaky or {}).items()
+        }
+        self._slow = {
+            int(c): tuple(float(t) for t in ts)
+            for c, ts in (slow or {}).items()
+        }
+        self.exc = exc
+        self.attempts: Dict[Tuple[int, int], int] = {}
+
+    def lost(self, i: int) -> frozenset:
+        """Shard ids whose device is lost for chunk ``i``."""
+        return self._lost.get(i, frozenset())
+
+    def elapsed(self, i: int) -> Optional[Tuple[float, ...]]:
+        """Simulated per-shard elapsed seconds for chunk ``i`` (or None)."""
+        return self._slow.get(i)
+
+    def clean(self, i: int) -> bool:
+        """True when chunk ``i`` has NO planned fault of any kind — the
+        loop's license to take the single-dispatch mesh fast path. Plan-
+        keyed (not attempt-keyed), so every run answers identically."""
+        return (
+            i not in self._lost
+            and i not in self._slow
+            and all(c != i for (c, _j) in self._flaky)
+        )
+
+    def check(self, i: int, j: int) -> None:
+        """Raise shard ``j``'s planned fetch fault for chunk ``i``, if any."""
+        plan = self._flaky.get((i, j), 0)
+        if plan == 0:
+            return
+        seen = self.attempts.get((i, j), 0)
+        self.attempts[(i, j)] = seen + 1
+        if plan < 0:
+            raise self.exc(f"poisoned shard {j} of chunk {i} (attempt {seen + 1})")
+        if seen < plan:
+            raise self.exc(
+                f"transient fault on shard {j} of chunk {i} "
+                f"(attempt {seen + 1}/{plan})"
+            )

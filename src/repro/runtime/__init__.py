@@ -1,19 +1,25 @@
 from .fault_tolerance import (
+    DeviceLostError,
     InjectedFailure,
     RetryPolicy,
     RunReport,
     StragglerPolicy,
+    default_live_retryable,
     rebalance_ranges,
     remesh_state,
     run_with_restarts,
+    runtime_device_errors,
 )
 
 __all__ = [
+    "DeviceLostError",
     "InjectedFailure",
     "RetryPolicy",
     "RunReport",
     "StragglerPolicy",
+    "default_live_retryable",
     "rebalance_ranges",
     "remesh_state",
     "run_with_restarts",
+    "runtime_device_errors",
 ]

@@ -31,6 +31,50 @@ class InjectedFailure(RuntimeError):
     pass
 
 
+class DeviceLostError(RuntimeError):
+    """A shard's device disappeared mid-chunk (host preemption, ICI link
+    loss, accelerator reset). Always classified as retryable infrastructure
+    failure — the work range is re-issued or the process restarts — never as
+    a programming error."""
+
+
+def runtime_device_errors() -> Tuple[Type[BaseException], ...]:
+    """The exception classes the JAX/XLA runtime raises for device-level
+    faults (e.g. ``jaxlib.xla_extension.XlaRuntimeError`` for a lost or
+    wedged device). Import-guarded: on a build without jaxlib (stubbed CI,
+    docs env) this returns an empty tuple and callers degrade gracefully.
+    """
+    errs: List[Type[BaseException]] = []
+    try:
+        from jaxlib.xla_extension import XlaRuntimeError
+
+        errs.append(XlaRuntimeError)
+    except Exception:
+        pass
+    try:
+        from jax.errors import JaxRuntimeError
+
+        errs.append(JaxRuntimeError)
+    except Exception:
+        pass
+    # newer jax aliases one onto the other; keep each class once
+    out: List[Type[BaseException]] = []
+    for e in errs:
+        if e not in out:
+            out.append(e)
+    return tuple(out)
+
+
+def default_live_retryable() -> Tuple[Type[BaseException], ...]:
+    """Default retryable classes for the live restart driver
+    (``repro.live.run_live_with_restarts``): injected test failures, our
+    own ``DeviceLostError``, and the JAX/XLA runtime's device-fault
+    exceptions — so a transient device fault burns a restart (resume from
+    the last durable checkpoint) instead of propagating as if it were a
+    programming error."""
+    return (InjectedFailure, DeviceLostError) + runtime_device_errors()
+
+
 @dataclasses.dataclass(frozen=True)
 class RetryPolicy:
     """Failure classification + capped exponential backoff, as one object.
@@ -134,11 +178,17 @@ def run_with_restarts(
 
 
 def rebalance_ranges(
-    ranges: List[Tuple[int, int]], dead: Iterable[int]
-) -> List[Tuple[int, int]]:
+    ranges: List[Tuple[int, int]], dead: Iterable[int], *, grouped: bool = False
+):
     """Re-issue dead shards' [start, end) ranges to survivors (round-robin
     splits). Survivor count = len(ranges) - len(dead); each dead range is
-    split evenly among survivors, appended to their work queues."""
+    split evenly among survivors, appended to their work queues.
+
+    ``grouped=True`` returns the per-survivor work queues as a dict
+    ``{survivor_index: [(lo, hi), ...]}`` (each queue starts with the
+    survivor's own range) instead of the flattened list — the form the
+    elastic live loop needs to charge re-issued ranges to the surviving
+    shard whose fetch channel delivers them."""
     dead = set(dead)
     survivors = [i for i in range(len(ranges)) if i not in dead]
     if not survivors:
@@ -158,6 +208,8 @@ def rebalance_ranges(
             b = min(lo + (j + 1) * width, hi)
             if a < b:
                 out[s].append((a, b))
+    if grouped:
+        return out
     return [r for s in survivors for r in out[s]]
 
 

@@ -438,3 +438,133 @@ def test_straggler_detected_reissue_cover_and_enclosure(tmp_path):
     assert int(np.asarray(merged.m).sum()) == sum(
         int(m) for b in banks for m in np.asarray(b.m)
     )
+
+
+# ---------------------------------------------------------------------------
+# Satellite: elastic range arithmetic — shard_ranges + grouped re-issue
+# ---------------------------------------------------------------------------
+
+
+def test_shard_ranges_properties():
+    """Ceil partition: always n_shards entries, exact disjoint cover of
+    [0, n), widths within one ceil step, EMPTY (n, n) tails when shards
+    outnumber rows — the logical fold structure every execution substrate
+    must agree on."""
+    from repro.core import shard_ranges
+
+    for n, k in [(32, 4), (7, 5), (100, 8), (1, 3), (0, 4), (8, 8), (9, 2)]:
+        ranges = shard_ranges(n, k)
+        assert len(ranges) == k
+        seen = np.zeros(max(n, 1), np.int32)
+        for lo, hi in ranges:
+            assert 0 <= lo <= hi <= n
+            seen[lo:hi] += 1
+        assert (seen[:n] == 1).all()
+        shard_n = -(-n // k) if n else 0
+        assert all(hi - lo <= shard_n for lo, hi in ranges)
+        # nonempty ranges come first; empties are the trailing shards
+        widths = [hi - lo for lo, hi in ranges]
+        assert widths == sorted(widths, reverse=True) or n % k == 0
+    assert shard_ranges(7, 5) == [(0, 2), (2, 4), (4, 6), (6, 7), (7, 7)]
+    assert shard_ranges(0, 3) == [(0, 0), (0, 0), (0, 0)]
+    with pytest.raises(ValueError, match="n_shards"):
+        shard_ranges(10, 0)
+    with pytest.raises(ValueError, match="n"):
+        shard_ranges(-1, 2)
+
+
+def test_rebalance_ranges_grouped_queues():
+    """grouped=True keys the re-issued work by SURVIVOR — each survivor's
+    own range first, dead ranges split round-robin behind it — and the
+    flattened queues cover exactly what the flat form covers."""
+    ranges = [(0, 100), (100, 200), (200, 300), (300, 400)]
+    queues = rebalance_ranges(ranges, dead=[1, 3], grouped=True)
+    assert sorted(queues) == [0, 2]  # only survivors own queues
+    assert queues[0][0] == (0, 100) and queues[2][0] == (200, 300)
+    seen = np.zeros(400, np.int32)
+    for work in queues.values():
+        for lo, hi in work:
+            seen[lo:hi] += 1
+    assert (seen == 1).all()
+    # determinism: dead order / container type never changes the queues
+    for order in ([3, 1], {3, 1}, iter((3, 1))):
+        assert rebalance_ranges(ranges, dead=order, grouped=True) == queues
+    with pytest.raises(ValueError, match="no survivors"):
+        rebalance_ranges(ranges, dead=[0, 1, 2, 3], grouped=True)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: JAX/XLA runtime device errors are retryable infrastructure
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_device_errors_classification():
+    """The default live retry policy treats a device falling over —
+    XlaRuntimeError and our DeviceLostError — as retryable infrastructure,
+    while programming errors stay fatal."""
+    from repro.runtime import (
+        DeviceLostError,
+        default_live_retryable,
+        runtime_device_errors,
+    )
+    from jaxlib.xla_extension import XlaRuntimeError
+
+    errs = runtime_device_errors()
+    assert XlaRuntimeError in errs
+    assert len(set(errs)) == len(errs)  # deduped
+
+    retryable = default_live_retryable()
+    assert InjectedFailure in retryable
+    assert DeviceLostError in retryable
+    assert XlaRuntimeError in retryable
+    assert issubclass(DeviceLostError, RuntimeError)
+
+    pol = RetryPolicy(retryable=retryable)
+    assert pol.is_retryable(XlaRuntimeError("device lost"))
+    assert pol.is_retryable(DeviceLostError("shard 3 gone"))
+    assert not pol.is_retryable(ValueError("a bug"))
+    assert not pol.is_retryable(TypeError("a bug"))
+
+
+def test_live_restarts_classify_xla_runtime_error(tmp_path):
+    """A source whose fetch dies once with a real XlaRuntimeError (the
+    exception XLA raises when a device drops out) burns ONE restart under
+    run_live_with_restarts' default policy and completes bit-identically
+    to the clean run — satellite contract for device-loss recovery."""
+    from jaxlib.xla_extension import XlaRuntimeError
+
+    from repro.live import ArraySource, LiveBank, run_live_with_restarts
+
+    rng = np.random.default_rng(5)
+    X = rng.normal(size=(6 * 16, 4)).astype(np.float32)
+    y = np.sign(rng.normal(size=X.shape[0]) + X[:, 0]).astype(np.float32)
+    y[y == 0] = 1.0
+    cs = jnp.asarray([1.0, 4.0])
+
+    def make(ckpt_dir, source):
+        return LiveBank(
+            source, cs, ckpt_dir=str(ckpt_dir), n_sub_banks=2,
+            rotate_every=3, swap_every=2, sleep=lambda s: None,
+        )
+
+    clean = make(tmp_path / "a", ArraySource(X, y, 16))
+    ref_stats = clean.run()
+
+    inner = ArraySource(X, y, 16)
+    state = {"raised": False}
+
+    def dying_device_source(i):
+        if i == 3 and not state["raised"]:
+            state["raised"] = True
+            raise XlaRuntimeError("INTERNAL: device CPU_3 lost")
+        return inner(i)
+
+    crashy = make(tmp_path / "b", dying_device_source)
+    stats = run_live_with_restarts(crashy, sleep=lambda s: None)
+    # the fetch-level RetryPolicy does NOT retry runtime device errors in
+    # place (retrying on a dead device spins); they escalate to a restart,
+    # which re-enters from the durable checkpoint
+    assert stats.restarts == 1 and stats.retries == 0
+    assert stats.durable() == ref_stats.durable()
+    for a, b in zip(crashy.serving_bank(), clean.serving_bank()):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -22,6 +22,8 @@ from repro.core import (
     kernel_bank_decision,
     merge_banks,
     merge_kernel_banks,
+    nonfinite_rows,
+    shard_ranges,
     stack_banks,
     stack_kernel_banks,
 )
@@ -31,10 +33,14 @@ from repro.live import (
     ArraySource,
     FlakySource,
     LiveBank,
+    ShardFaults,
     TransientSourceError,
+    chaos_reference,
+    chaos_schedule,
+    run_chaos,
     run_live_with_restarts,
 )
-from repro.runtime import InjectedFailure, RetryPolicy
+from repro.runtime import InjectedFailure, RetryPolicy, StragglerPolicy
 from repro.serve.bank_server import BankServer
 
 try:
@@ -927,3 +933,587 @@ except ValueError as e:
     for token in ("MIX1_OK", "MIX2_OK", "MIX3_OK", "MIX4_OK", "LIVE_OK",
                   "SWAP_OK", "ATTACH_OK"):
         assert token in out.stdout, out.stdout
+
+
+# ---------------------------------------------------------------------------
+# elastic sharded training (mesh= / n_stream_shards=): referents, faults,
+# the publish guard, rotate_on, remesh resume, and the chaos harness
+# ---------------------------------------------------------------------------
+
+
+def _need_mesh(n):
+    if len(jax.devices()) < n:
+        pytest.skip(
+            f"needs {n} devices (run with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n})"
+        )
+    return jax.make_mesh((n,), ("data",))
+
+
+def _elastic_referent(X, Y, kind, n_shards, drop=None):
+    """The documented K=1 elastic referent: every chunk splits into the
+    LOGICAL ``shard_ranges``, each range fits FRESH, ranges fold ascending
+    through the eager Sec-4.3 merges, and the prior merges in last. ``drop``
+    maps chunk index -> shard ids whose assigned range is masked out (the
+    poison / all-dead outcome); the stream offset still advances by the FULL
+    chunk so kernel core-set ids stay replay-stable."""
+    drop = drop or {}
+    merge_kw = dict(kernel=KERNEL_KW["kernel"], gamma=KERNEL_KW["gamma"])
+    n_chunks = -(-X.shape[0] // CHUNK)
+    ref, rows = None, 0
+    for i in range(n_chunks):
+        Xc = jnp.asarray(X[i * CHUNK:(i + 1) * CHUNK])
+        Yc = jnp.asarray(Y[:, i * CHUNK:(i + 1) * CHUNK])
+        n = int(Xc.shape[0])
+        banks = []
+        for j, (lo, hi) in enumerate(shard_ranges(n, n_shards)):
+            if lo >= hi or j in drop.get(i, ()):
+                continue
+            if kind == "kernel":
+                b = fit_kernel_bank(
+                    Xc[lo:hi], Yc[:, lo:hi], CS,
+                    kernel=KERNEL_KW["kernel"], gamma=KERNEL_KW["gamma"],
+                    coreset_size=KERNEL_KW["coreset_size"],
+                    block_n=KERNEL_KW["block_n"],
+                )
+                b = b._replace(idx=jnp.where(b.idx >= 0, b.idx + lo, b.idx))
+            else:
+                b = fit_bank(Xc[lo:hi], Yc[:, lo:hi], CS, None)
+            banks.append(b)
+        if banks:
+            if kind == "kernel":
+                folded = fold_kernel_banks(banks, **merge_kw)
+                folded = folded._replace(
+                    idx=jnp.where(folded.idx >= 0, folded.idx + rows,
+                                  folded.idx)
+                )
+                ref = folded if ref is None else merge_kernel_banks(
+                    ref, folded, **merge_kw
+                )
+            else:
+                folded = banks[0] if len(banks) == 1 else fold_merge(
+                    stack_banks(banks)
+                )
+                ref = folded if ref is None else merge_banks(ref, folded)
+        rows += n
+    return ref
+
+
+@pytest.mark.parametrize("kind", BANK_KINDS)
+def test_elastic_matches_per_range_referent(tmp_path, kind):
+    """n_stream_shards=4 without any mesh: each chunk is four fresh range
+    fits folded ascending, prior merged last — bit-identical to the
+    hand-built referent for BOTH bank kinds."""
+    X, Y = _stream()
+    live = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "c", bank_kind=kind,
+        n_sub_banks=1, rotate_every=10**9, swap_every=1, n_stream_shards=4,
+    )
+    stats = live.run()
+    assert _bank_eq(live.serving_bank(), _elastic_referent(X, Y, kind, 4))
+    assert stats.rows_ingested == N_CHUNKS * CHUNK
+    assert stats.rows_lost == stats.ranges_reissued == 0
+    if kind == "kernel":
+        idx = np.asarray(live.serving_bank().idx)
+        assert idx.max() >= CHUNK  # absolute stream coordinates survived
+        assert idx[idx >= 0].max() < N_CHUNKS * CHUNK
+
+
+@pytest.mark.parametrize("kind", BANK_KINDS)
+def test_elastic_one_device_mesh_fast_path(tmp_path, kind):
+    """A 1-device mesh takes the mesh FAST path (devices == logical shards)
+    in the fast CI suite: the kernel loop is bit-identical to the legacy
+    single path (fresh fit + Sec-4.3 merge either way), the linear loop to
+    its fresh-fit + merge referent (elastic semantics: the engine
+    continuation is the documented legacy-only difference)."""
+    mesh1 = _need_mesh(1)
+    X, Y = _stream()
+    if kind == "kernel":
+        fast = _make(
+            ArraySource(X, Y, CHUNK), tmp_path / "m", bank_kind=kind,
+            mesh=mesh1, n_stream_shards=1,
+        )
+        sf = fast.run()
+        legacy = _make(
+            ArraySource(X, Y, CHUNK), tmp_path / "l", bank_kind=kind,
+        )
+        sl = legacy.run()
+        assert _bank_eq(fast.serving_bank(), legacy.serving_bank())
+        assert np.array_equal(
+            _served_scores(fast.serving_bank()),
+            _served_scores(legacy.serving_bank()),
+        )
+        assert sf.durable() == sl.durable()
+    else:
+        fast = _make(
+            ArraySource(X, Y, CHUNK), tmp_path / "m", bank_kind=kind,
+            mesh=mesh1, n_stream_shards=1,
+            n_sub_banks=1, rotate_every=10**9, swap_every=1,
+        )
+        fast.run()
+        assert _bank_eq(
+            fast.serving_bank(), _elastic_referent(X, Y, kind, 1)
+        )
+
+
+@pytest.mark.parametrize("kind", BANK_KINDS)
+def test_elastic_ragged_chunks_and_empty_tails(tmp_path, kind):
+    """Ragged everything: a 7-row final chunk under n_stream_shards=5 gives
+    ceil ranges (2,2,2,1) plus an EMPTY tail shard — the loop and the
+    referent agree bit-exactly and account every row."""
+    X, Y = _stream()
+    n = 3 * CHUNK + 7
+    X, Y = X[:n], Y[:, :n]
+    live = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "c", bank_kind=kind,
+        n_sub_banks=1, rotate_every=10**9, swap_every=1, n_stream_shards=5,
+    )
+    stats = live.run()
+    assert stats.rows_ingested == n
+    assert stats.rows_lost == 0
+    assert _bank_eq(live.serving_bank(), _elastic_referent(X, Y, kind, 5))
+
+
+@pytest.mark.parametrize("kind", BANK_KINDS)
+def test_elastic_crash_equivalence(tmp_path, kind):
+    """The crash matrix holds on the ELASTIC path too: crashes at four
+    phase boundaries of a n_stream_shards=3 run recover bit-identically —
+    bank, served scores, durable stats (now including the loss/reissue
+    counters)."""
+    X, Y = _stream()
+    clean = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "a", bank_kind=kind,
+        n_stream_shards=3,
+    )
+    ref_stats = clean.run()
+    fps = [("fetch", 1), ("post_train", 3), ("mid_checkpoint", 5),
+           ("post_swap", 7)]
+    crashy = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "b", bank_kind=kind,
+        n_stream_shards=3, failpoints=fps,
+    )
+    stats = run_live_with_restarts(crashy, sleep=_NOSLEEP)
+    assert stats.restarts == 4
+    assert _bank_eq(crashy.serving_bank(), clean.serving_bank())
+    assert np.array_equal(
+        _served_scores(crashy.serving_bank()),
+        _served_scores(clean.serving_bank()),
+    )
+    assert stats.durable() == ref_stats.durable()
+
+
+@pytest.mark.parametrize("kind", BANK_KINDS)
+def test_flaky_shard_within_budget_invisible(tmp_path, kind):
+    """A flaky shard that delivers within the per-shard retry budget changes
+    NOTHING: same rows, same fold partition, so the bank and every durable
+    stat are bit-identical to the fault-free run — only the volatile
+    shard_retries counter moves."""
+    X, Y = _stream()
+    clean = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "a", bank_kind=kind,
+        n_stream_shards=3,
+    )
+    ref_stats = clean.run()
+    faulty = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "b", bank_kind=kind,
+        n_stream_shards=3, shard_faults=ShardFaults(flaky={(1, 0): 2}),
+    )
+    stats = faulty.run()
+    assert _bank_eq(faulty.serving_bank(), clean.serving_bank())
+    assert np.array_equal(
+        _served_scores(faulty.serving_bank()),
+        _served_scores(clean.serving_bank()),
+    )
+    assert stats.shard_retries == 2  # the flaky shard's two burned retries
+    assert stats.rows_lost == 0 and stats.ranges_reissued == 0
+    assert stats.durable() == ref_stats.durable()
+
+
+@pytest.mark.parametrize("kind", BANK_KINDS)
+def test_lost_and_straggler_reissue_deterministic(tmp_path, kind):
+    """A lost device's range and a declared straggler's range re-issue to
+    the survivors — a DIFFERENT (but deterministic) fold partition, no rows
+    lost. The structural contract: the same fault plan replays identically
+    through crashes, so a run crashing right at the faulty chunks recovers
+    bit-identical banks, scores and durable stats."""
+    X, Y = _stream()
+
+    def make(name, **kw):
+        return _make(
+            ArraySource(X, Y, CHUNK), tmp_path / name, bank_kind=kind,
+            n_stream_shards=3,
+            shard_faults=ShardFaults(
+                lost={2: (1,)}, slow={5: (1.0, 1.0, 10.0)},
+            ),
+            straggler_policy=StragglerPolicy(), **kw,
+        )
+
+    smooth = make("a")
+    ref_stats = smooth.run()
+    assert ref_stats.ranges_reissued == 2  # one lost + one straggler range
+    assert ref_stats.rows_lost == 0 and ref_stats.shard_ranges_lost == 0
+
+    crashy = make("b", failpoints=[("post_train", 2), ("fetch", 5)])
+    stats = run_live_with_restarts(crashy, sleep=_NOSLEEP)
+    assert stats.restarts == 2
+    assert _bank_eq(crashy.serving_bank(), smooth.serving_bank())
+    assert np.array_equal(
+        _served_scores(crashy.serving_bank()),
+        _served_scores(smooth.serving_bank()),
+    )
+    assert stats.durable() == ref_stats.durable()
+
+
+@pytest.mark.parametrize("kind", BANK_KINDS)
+def test_poison_shard_masked_with_loss_recorded(tmp_path, kind):
+    """A shard whose fetch faults outlive the retry budget is masked out:
+    its range's rows are recorded in rows_lost / shard_ranges_lost, the
+    fold simply skips it (bit-identical to the referent that never saw
+    those rows), and the stream offset still advances by the FULL chunk so
+    later kernel ids keep their absolute coordinates."""
+    X, Y = _stream()
+    faults = ShardFaults(flaky={(2, 1): ShardFaults.POISON})
+    live = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "c", bank_kind=kind,
+        n_sub_banks=1, rotate_every=10**9, swap_every=1,
+        n_stream_shards=4, shard_faults=faults,
+    )
+    stats = live.run()
+    assert stats.rows_lost == CHUNK // 4
+    assert stats.shard_ranges_lost == 1
+    assert stats.shard_retries == 2  # the default per-shard budget, burned
+    assert stats.rows_ingested == N_CHUNKS * CHUNK  # full-chunk advance
+    assert _bank_eq(
+        live.serving_bank(),
+        _elastic_referent(X, Y, kind, 4, drop={2: {1}}),
+    )
+
+
+def test_all_shards_dead_chunk_masked(tmp_path):
+    """Every shard of one chunk lost at once: no survivor to re-issue to,
+    so the whole chunk degrades to recorded loss and the bank equals the
+    referent that skipped it."""
+    X, Y = _stream()
+    faults = ShardFaults(lost={1: (0, 1, 2)})
+    live = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "c",
+        n_sub_banks=1, rotate_every=10**9, swap_every=1,
+        n_stream_shards=3, shard_faults=faults,
+    )
+    stats = live.run()
+    assert stats.rows_lost == CHUNK
+    assert stats.shard_ranges_lost == 3
+    assert stats.ranges_reissued == 0
+    assert _bank_eq(
+        live.serving_bank(),
+        _elastic_referent(X, Y, "linear", 3, drop={1: {0, 1, 2}}),
+    )
+
+
+def test_resume_adopts_checkpoint_shards_rejects_explicit_mismatch(tmp_path):
+    """n_stream_shards is durable: an explicit mismatch at resume is a
+    ValueError naming both sides; an implicit (defaulted) loop ADOPTS the
+    checkpoint's logical shard count and continues bit-identically."""
+    X, Y = _stream()
+    first = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "c", n_stream_shards=3,
+    )
+    first.run(max_chunks=4)
+
+    with pytest.raises(ValueError, match="n_stream_shards=3"):
+        _make(
+            ArraySource(X, Y, CHUNK), tmp_path / "c", n_stream_shards=2,
+        ).run()
+
+    resumed = _make(ArraySource(X, Y, CHUNK), tmp_path / "c")
+    stats = resumed.run()
+    assert resumed.n_stream_shards == 3
+    assert stats.remeshes == 0  # same (absent) mesh on both sides
+
+    clean = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "ref", n_stream_shards=3,
+    )
+    ref_stats = clean.run()
+    assert _bank_eq(resumed.serving_bank(), clean.serving_bank())
+    assert stats.durable() == ref_stats.durable()
+
+
+# ---------------------------------------------------------------------------
+# the non-finite publish guard
+# ---------------------------------------------------------------------------
+
+
+def test_nonfinite_rows_unit():
+    """nonfinite_rows flags exactly the poisoned model rows, over any float
+    leaf, and ignores the integer leaves."""
+    w = np.zeros((3, 4), np.float32)
+    w[1, 2] = np.nan
+    bank = Ball(
+        w=jnp.asarray(w), r=jnp.zeros(3), xi2=jnp.ones(3),
+        m=jnp.ones((3,), jnp.int32),
+    )
+    assert np.asarray(nonfinite_rows(bank)).tolist() == [False, True, False]
+    r = np.zeros(3, np.float32)
+    r[0] = np.inf
+    bank2 = bank._replace(w=jnp.zeros((3, 4)), r=jnp.asarray(r))
+    assert np.asarray(nonfinite_rows(bank2)).tolist() == [True, False, False]
+
+
+def _poisoned_stream():
+    """The clean stream with chunk 1's rows NaN-poisoned."""
+    X, Y = _stream()
+    X = X.copy()
+    X[CHUNK:2 * CHUNK] = np.nan
+    return X, Y
+
+
+def test_nonfinite_fold_quarantined_by_default(tmp_path):
+    """A NaN-poisoned chunk must never reach the server: the poisoned folds
+    are quarantined (counted, not pushed), the server keeps the last good
+    bank, and once the poisoned epoch retires the loop publishes again."""
+    X, Y = _poisoned_stream()
+    srv = _RecordingServer()
+    live = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "c", server=srv, retire="drop",
+    )
+    stats = live.run()
+    # folds at chunks 2 and 4 hold the poisoned epoch; the chunk-6 rotation
+    # drops it (retire="drop", K=2), so folds 6/8/10 publish again
+    assert stats.folds_quarantined == 2
+    assert stats.folds == 3
+    assert len(srv.banks) == 3
+    for bank in srv.banks + [live.serving_bank()]:
+        assert not bool(np.any(np.asarray(nonfinite_rows(bank))))
+    # durability: the counter survives a crash (it is part of durable())
+    assert "folds_quarantined" in stats.durable()
+
+
+def test_nonfinite_fold_strict_raises_naming_rows(tmp_path):
+    """strict_finite=True turns the quarantine into a loud ValueError that
+    names the poisoned model rows and the chunk."""
+    X, Y = _poisoned_stream()
+    live = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "c", strict_finite=True,
+    )
+    with pytest.raises(
+        ValueError,
+        match=r"non-finite serving fold at chunk 2.*\[0, 1, 2\]",
+    ):
+        live.run()
+    assert live.serving_bank() is None  # nothing poisoned was ever served
+
+
+# ---------------------------------------------------------------------------
+# pluggable rotation triggers (rotate_on=)
+# ---------------------------------------------------------------------------
+
+
+def test_rotate_on_matches_epoch_referent(tmp_path):
+    """A rotate_on callable reproducing the cadence is bit-identical to the
+    built-in rotate_every — same rotations, same bank, same stats."""
+    X, Y = _stream()
+    cadence = _make(ArraySource(X, Y, CHUNK), tmp_path / "a", rotate_every=3)
+    ref_stats = cadence.run()
+    custom = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "b", rotate_every=10**9,
+        rotate_on=lambda s: s.chunks_ingested % 3 == 0,
+    )
+    stats = custom.run()
+    assert stats.rotations == ref_stats.rotations == 3
+    assert _bank_eq(custom.serving_bank(), cadence.serving_bank())
+    assert stats.durable() == ref_stats.durable()
+
+
+def test_rotate_on_composes_with_rotate_every(tmp_path):
+    """rotate_on fires IN ADDITION to rotate_every (consulted only when the
+    cadence did not already rotate): rotate_every=4 plus an every-3-chunks
+    trigger rotates at 3,4,6,8,9 — five rotations over ten chunks."""
+    X, Y = _stream()
+    live = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "c", rotate_every=4,
+        rotate_on=lambda s: s.chunks_ingested % 3 == 0,
+    )
+    stats = live.run()
+    assert stats.rotations == 5
+
+
+def test_rotate_on_replay_stable_across_crash(tmp_path):
+    """rotate_on sees only replay-stable durable stats, so a crash-recovered
+    run re-fires the custom rotations identically — the bank and durable
+    stats match the uninterrupted rotate_on run bit-exactly."""
+    X, Y = _stream()
+    trigger = lambda s: s.chunks_ingested % 3 == 0
+    clean = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "a", rotate_every=10**9,
+        rotate_on=trigger,
+    )
+    ref_stats = clean.run()
+    crashy = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "b", rotate_every=10**9,
+        rotate_on=trigger, failpoints=[("post_rotate", 5), ("post_fold", 7)],
+    )
+    stats = run_live_with_restarts(crashy, sleep=_NOSLEEP)
+    assert stats.restarts == 2
+    assert _bank_eq(crashy.serving_bank(), clean.serving_bank())
+    assert stats.durable() == ref_stats.durable()
+
+
+# ---------------------------------------------------------------------------
+# chaos: kills + shard faults + remesh-on-restart, bit-identical recovery
+# ---------------------------------------------------------------------------
+
+
+def _chaos_make_live(X, Y, kind, base_dir, name, n_shards, **extra):
+    def make_live(mesh, failpoints, faults):
+        return _make(
+            ArraySource(X, Y, CHUNK), base_dir / name, bank_kind=kind,
+            mesh=mesh, n_stream_shards=n_shards, shard_faults=faults,
+            failpoints=failpoints, straggler_policy=StragglerPolicy(),
+            **extra,
+        )
+    return make_live
+
+
+@pytest.mark.parametrize("kind", BANK_KINDS)
+def test_chaos_without_mesh_bit_exact(tmp_path, kind):
+    """The fast-suite chaos run: seeded kills + shard faults over a
+    n_stream_shards=4 stream, no mesh — recovered bank, served scores and
+    durable stats bit-identical to the crash-free reference."""
+    X, Y = _stream()
+    sched = chaos_schedule(
+        11, n_chunks=N_CHUNKS, n_shards=4, kills=3,
+        kill_phases=("fetch", "post_train"),
+        lost_chunks=1, flaky_chunks=1, poison_chunks=1, slow_chunks=1,
+    )
+    chaos = run_chaos(
+        _chaos_make_live(X, Y, kind, tmp_path, "chaos", 4), sched
+    )
+    ref = chaos_reference(
+        _chaos_make_live(X, Y, kind, tmp_path, "ref", 4), sched
+    )
+    assert chaos.stats.restarts == 3
+    assert _bank_eq(chaos.serving_bank(), ref.serving_bank())
+    assert np.array_equal(
+        _served_scores(chaos.serving_bank()),
+        _served_scores(ref.serving_bank()),
+    )
+    assert chaos.stats.durable() == ref.stats.durable()
+    assert chaos.stats.rows_lost > 0  # the poison chunk really masked rows
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", BANK_KINDS)
+def test_chaos_with_remesh_schedule_bit_exact(tmp_path, kind):
+    """THE acceptance run: a 16-chunk drifting stream on an 8-device mesh,
+    four seeded kills remeshing 8 -> 4 -> single-device, plus lost/flaky/
+    poison/straggler shards — the final bank, served scores and durable
+    stats are bit-identical (f32) to the crash-free no-mesh reference, for
+    BOTH bank kinds."""
+    mesh8 = _need_mesh(8)
+    mesh4 = jax.make_mesh((4,), ("data",))
+    X, Y = _stream(16)
+    sched = chaos_schedule(
+        7, n_chunks=16, n_shards=8, kills=4,
+        kill_phases=("fetch", "post_train"),
+    )
+    chaos = run_chaos(
+        _chaos_make_live(X, Y, kind, tmp_path, "chaos", 8), sched,
+        meshes=(mesh8, mesh4, None),
+    )
+    ref = chaos_reference(
+        _chaos_make_live(X, Y, kind, tmp_path, "ref", 8), sched
+    )
+    assert chaos.stats.restarts == 4
+    assert chaos.stats.remeshes == 1  # the final relaunch adopted [4]->None
+    assert _bank_eq(chaos.serving_bank(), ref.serving_bank())
+    assert np.array_equal(
+        _served_scores(chaos.serving_bank()),
+        _served_scores(ref.serving_bank()),
+    )
+    assert chaos.stats.durable() == ref.stats.durable()
+    assert chaos.stats.rows_lost > 0
+    assert chaos.stats.ranges_reissued > 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", BANK_KINDS)
+def test_elastic_mesh_fast_path_matches_degraded(tmp_path, kind):
+    """8 logical shards on an 8-device mesh (the single-dispatch fast path)
+    == the same 8 logical shards with no mesh at all (per-range fits):
+    bank, served scores, durable stats, bit for bit."""
+    _need_mesh(8)
+    mesh8 = jax.make_mesh((8,), ("data",))
+    X, Y = _stream()
+    fast = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "m", bank_kind=kind,
+        mesh=mesh8, n_stream_shards=8,
+    )
+    sf = fast.run()
+    slow = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "s", bank_kind=kind,
+        n_stream_shards=8,
+    )
+    ss = slow.run()
+    assert _bank_eq(fast.serving_bank(), slow.serving_bank())
+    assert np.array_equal(
+        _served_scores(fast.serving_bank()),
+        _served_scores(slow.serving_bank()),
+    )
+    assert sf.durable() == ss.durable()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "kind,schedule",
+    [(k, s) for k in BANK_KINDS for s in ("8-4-1", "4-8")],
+)
+def test_elastic_remesh_resume(tmp_path, kind, schedule):
+    """Elastic resume across device counts: a run killed twice remeshes
+    8 -> 4 -> single-device (or 4 -> 8), restoring slots onto the new mesh
+    each time — including restores where some K slots are still dead — and
+    finishes bit-identical to the uninterrupted no-mesh run with the same
+    logical shard count."""
+    _need_mesh(8)
+    mesh8 = jax.make_mesh((8,), ("data",))
+    mesh4 = jax.make_mesh((4,), ("data",))
+    if schedule == "8-4-1":
+        n_shards, meshes = 8, [mesh8, mesh4, None]
+        # the first kill lands right after the chunk-2 commit — the only
+        # one so far, holding a half-populated slot set (K=2, slot B is
+        # first written at the chunk-3 rotation): the mesh4 restore must
+        # re-place live AND dead slots
+        fps = {("post_train", 2), ("post_fold", 5)}
+    else:
+        n_shards, meshes = 4, [mesh4, mesh8, None]
+        fps = {("post_train", 3), ("post_swap", 7)}
+    X, Y = _stream()
+    clean = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "ref", bank_kind=kind,
+        n_stream_shards=n_shards,
+    )
+    ref_stats = clean.run()
+
+    failpoints = set(fps)  # shared across relaunches (kills fire once)
+    live = _make(
+        ArraySource(X, Y, CHUNK), tmp_path / "c", bank_kind=kind,
+        mesh=meshes[0], n_stream_shards=n_shards, failpoints=failpoints,
+    )
+    crashes = 0
+    for mesh in meshes[1:]:
+        with pytest.raises(InjectedFailure):
+            live.run()
+        crashes += 1
+        live = _make(
+            ArraySource(X, Y, CHUNK), tmp_path / "c", bank_kind=kind,
+            mesh=mesh, failpoints=failpoints,  # shards adopted from ckpt
+        )
+    stats = live.run()
+    assert crashes == 2
+    assert live.n_stream_shards == n_shards
+    assert stats.remeshes == 1  # this relaunch's mesh differed from meta
+    assert _bank_eq(live.serving_bank(), clean.serving_bank())
+    assert np.array_equal(
+        _served_scores(live.serving_bank()),
+        _served_scores(clean.serving_bank()),
+    )
+    assert stats.durable() == ref_stats.durable()
